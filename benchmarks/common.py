@@ -1,0 +1,44 @@
+"""Shared benchmark helpers: timed optimizer loops + CSV emission.
+
+Every bench prints ``name,us_per_call,derived`` rows (the repo contract);
+``derived`` carries the figure-specific quantity (final loss, accuracy,
+ratio, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def run_optimizer(opt, loss_of_batch, params, batches, jit=True):
+    """Run ``opt`` over ``batches``; returns (losses, us_per_step, state)."""
+    state = opt.init(params)
+
+    def step(p, s, b):
+        return opt.step(lambda pp: loss_of_batch(pp, b), p, s)
+
+    if jit:
+        step = jax.jit(step)
+    losses = []
+    t0 = time.time()
+    for b in batches:
+        params, state, aux = step(params, state, b)
+        losses.append(float(aux.loss))
+        if not np.isfinite(losses[-1]) or losses[-1] > 1e15:
+            break
+    us = (time.time() - t0) / max(len(losses), 1) * 1e6
+    return losses, us, state
+
+
+def trailing_mean(xs, k=10):
+    xs = [x for x in xs if np.isfinite(x)]
+    if not xs:
+        return float("inf")
+    return float(np.mean(xs[-k:]))

@@ -1,0 +1,97 @@
+"""Paper Figs. 1-3 + Table I (CPU-scale stand-ins): CSGD-ASSS (a=3sigma)
+vs non-adaptive compressed SGD (eta in {0.1, 0.05, 0.01}) on neural nets.
+
+Paper hyperparameters kept: sigma=0.1, a=3sigma, omega=1.2, rho=0.8,
+alpha_max0=0.1, batch 64, per-layer top_k, layers <1000 params
+uncompressed.  Models are CPU-scale stand-ins (DESIGN.md §7): MLP + small
+CNN on teacher-labelled 32x32x3 synthetic images (CIFAR geometry) and a
+small transformer LM; compressions 1% (Fig 1), 4%/10% (Figs 2-3).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.paper_models import (CNN_CONFIG, MLP_CONFIG, init_net,
+                                        net_loss)
+from repro.core import (ArmijoConfig, Compressor, CSGDConfig, NonAdaptiveCSGD,
+                        csgd_asss)
+from repro.data.synthetic import (TokenPipeline, class_batch,
+                                  teacher_classification)
+from repro.models import build_model
+from .common import emit, run_optimizer, trailing_mean
+
+BATCH = 64          # paper batch size
+
+
+def optimizers(gamma):
+    comp = Compressor(gamma=gamma)
+    return {
+        "csgd_asss_3s": csgd_asss(CSGDConfig(
+            armijo=ArmijoConfig(sigma=0.1, a_scale=0.3, omega=1.2, rho=0.8,
+                                alpha0=0.1),
+            compressor=comp)),
+        "nonadap_0.1": NonAdaptiveCSGD(eta=0.1, compressor=comp),
+        "nonadap_0.05": NonAdaptiveCSGD(eta=0.05, compressor=comp),
+        "nonadap_0.01": NonAdaptiveCSGD(eta=0.01, compressor=comp),
+    }
+
+
+def bench_net(net_cfg, gamma, steps, key, image):
+    x, y = teacher_classification(2048, n_classes=net_cfg.n_classes,
+                                  seed=1, image=image)
+    batches = [class_batch(x, y, BATCH, t) for t in range(steps)]
+    results = {}
+    for name, opt in optimizers(gamma).items():
+        params = init_net(net_cfg, key)
+        losses, us, _ = run_optimizer(
+            opt, lambda p, b: net_loss(net_cfg, p, b), params, batches)
+        final = trailing_mean(losses)
+        emit(f"fig1_{net_cfg.kind}_g{gamma:g}_{name}", us,
+             f"final_loss={final:.4f}")
+        results[name] = final
+    return results
+
+
+def bench_lm(gamma, steps, key):
+    cfg = get_smoke_config("qwen1.5-4b")
+    model = build_model(cfg)
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=64,
+                         global_batch=16)
+    batches = [pipe.batch(t) for t in range(steps)]
+    results = {}
+    for name, opt in optimizers(gamma).items():
+        params = model.init(key)
+        losses, us, _ = run_optimizer(
+            opt, lambda p, b: model.loss(p, b)[0], params, batches)
+        final = trailing_mean(losses)
+        emit(f"fig1_lm_g{gamma:g}_{name}", us, f"final_loss={final:.4f}")
+        results[name] = final
+    return results
+
+
+def main() -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+    # Fig 1 analogue: ~1% compression
+    out["mlp_1pct"] = bench_net(MLP_CONFIG, 0.01, 150, key, image=False)
+    # Figs 2/3 analogue: CNN at 4% and 10%
+    out["cnn_4pct"] = bench_net(CNN_CONFIG, 0.04, 100, key, image=True)
+    out["cnn_10pct"] = bench_net(CNN_CONFIG, 0.10, 100, key, image=True)
+    # transformer LM at 10%
+    out["lm_10pct"] = bench_lm(0.10, 80, key)
+
+    wins = 0
+    for task, res in out.items():
+        best_na = min(v for k, v in res.items() if k.startswith("nonadap"))
+        ad = res["csgd_asss_3s"]
+        wins += ad <= best_na * 1.15
+        emit(f"fig1_{task}_summary", 0.0,
+             f"csgd={ad:.4f};best_nonadap={best_na:.4f};"
+             f"beats_or_matches={ad <= best_na * 1.15}")
+    emit("fig1_overall", 0.0, f"csgd_wins_or_matches={wins}/{len(out)}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

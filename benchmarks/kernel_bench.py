@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: jnp reference path timings on CPU.
+
+NOTE: the Pallas kernels only run in interpret mode on this CPU container
+(Python-loop execution — timings are not meaningful for TPU projection);
+we therefore time the jnp reference path (what the dry-run lowers) and
+verify the Pallas kernels numerically elsewhere (tests/test_kernels.py).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import emit
+
+
+def timeit(f, *args, n=20):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(n):
+        r = f(*args)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.time() - t0) / n * 1e6
+
+
+def main() -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    m = jax.random.normal(key, (1 << 20,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (1 << 20,))
+    f_ef = jax.jit(lambda m, g: ops.ef_threshold_update(m, g, 0.1, 0.3))
+    us = timeit(f_ef, m, g)
+    emit("kernel_ef_update_1M_ref", us, "fused EF accumulate+sparsify")
+    out["ef"] = us
+
+    B, H, S, D = 1, 8, 1024, 128
+    q = jax.random.normal(key, (B, H, S, D)) * 0.1
+    k = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D)) * 0.1
+    v = jax.random.normal(jax.random.fold_in(key, 3), (B, H, S, D))
+    f_at = jax.jit(lambda q, k, v: ops.attention(q, k, v))
+    us = timeit(f_at, q, k, v, n=5)
+    emit("kernel_attention_1k_ref", us, "causal MHA 8hx1024x128")
+    out["attn"] = us
+
+    x = jax.random.normal(key, (4096, 2048))
+    w = jnp.ones((2048,))
+    f_rn = jax.jit(lambda x, w: ops.rms_norm(x, w))
+    us = timeit(f_rn, x, w)
+    emit("kernel_rmsnorm_4kx2k_ref", us, "fused rmsnorm")
+    out["rmsnorm"] = us
+    return out
+
+
+if __name__ == "__main__":
+    main()

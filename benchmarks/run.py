@@ -1,0 +1,59 @@
+# One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable (d)).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig4,fig5,...]
+
+Modules (paper artifact -> module):
+    Fig 5  (scaled vs non-scaled GD)         fig5_scaled_gd
+    Fig 4  (scaling necessity, compressed)   fig4_scaling_necessity
+    Figs 1-3 (NN training vs non-adaptive)   fig1_nn_training
+    Table I (validation accuracy)            table1_validation
+    SIV-B  (Armijo overhead)                 armijo_overhead
+    comm saving (core claim, quantified)     collective_bytes
+    kernels (hot-path micro-bench)           kernel_bench
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from . import (armijo_overhead, collective_bytes, fig1_nn_training,
+               fig4_scaling_necessity, fig5_scaled_gd, kernel_bench,
+               table1_validation)
+
+MODULES = {
+    "fig5": fig5_scaled_gd,
+    "fig4": fig4_scaling_necessity,
+    "fig1": fig1_nn_training,
+    "table1": table1_validation,
+    "armijo": armijo_overhead,
+    "collective": collective_bytes,
+    "kernels": kernel_bench,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args, _ = ap.parse_known_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        t0 = time.time()
+        try:
+            MODULES[name].main()
+            print(f"bench_{name}_wall,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:
+            failures.append(name)
+            traceback.print_exc()
+            print(f"bench_{name}_wall,{(time.time()-t0)*1e6:.0f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

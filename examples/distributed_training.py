@@ -1,0 +1,74 @@
+"""DCSGD-ASSS (paper Algorithm 3) on a simulated 8-chip mesh.
+
+Each data-parallel worker line-searches on ITS OWN batch, compresses its
+gradient with error feedback, and only the sparse (values, indices) pairs
+cross the wire — watch the wire-bytes column vs the dense baseline.
+
+    PYTHONPATH=src python examples/distributed_training.py
+(the script re-execs itself with XLA_FLAGS for 8 host devices)
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
+from repro.core import ArmijoConfig, Compressor
+from repro.data.synthetic import TokenPipeline
+from repro.launch.train_step import (build_train_step, init_opt_state,
+                                     opt_state_shardings)
+from repro.models import build_model
+from repro.sharding import param_shardings
+
+
+def run(kind: str, steps=15, gamma=0.02):
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_smoke_config("yi-34b")
+    model = build_model(cfg)
+    run_cfg = RunConfig(
+        model=cfg, shape=ShapeConfig("ex", 64, 8, "train"),
+        optimizer=OptimizerConfig(kind=kind, armijo=ArmijoConfig(),
+                                  compressor=Compressor(gamma=gamma,
+                                                        min_compress_size=64),
+                                  eta=0.05))
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=64,
+                         global_batch=8)
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        params = jax.device_put(params, param_shardings(params, mesh))
+        st = init_opt_state(params, run_cfg, 4)
+        st = jax.device_put(st, opt_state_shardings(st, params, mesh,
+                                                    run_cfg))
+        step_fn = None
+        for i in range(steps):
+            batch = pipe.batch(i)
+            batch = jax.device_put(batch, jax.tree.map(
+                lambda _: NamedSharding(mesh, P("data")), batch))
+            if step_fn is None:
+                step_fn = build_train_step(model, run_cfg, mesh)(params, batch)
+            params, st, m = step_fn(params, st, batch)
+            if i % 5 == 0 or i == steps - 1:
+                print(f"  [{kind:9s}] step {i:3d} loss={float(m['loss']):.4f}"
+                      f" alpha={float(m['alpha']):.4f}"
+                      f" wire_bytes/worker={float(m['wire_bytes']):.3e}")
+    return float(m["wire_bytes"])
+
+
+def main():
+    print("== DCSGD-ASSS (compressed, per-worker Armijo) ==")
+    wire_c = run("csgd_asss")
+    print("== dense SGD baseline (uncompressed all-reduce) ==")
+    wire_d = run("dense")
+    print(f"\ncommunication saving: {wire_d / wire_c:.1f}x "
+          f"({wire_c:.2e} vs {wire_d:.2e} bytes/worker/step)")
+
+
+if __name__ == "__main__":
+    main()

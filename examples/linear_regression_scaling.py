@@ -1,0 +1,57 @@
+"""Paper Fig. 4 reproduction: why scaling is NECESSARY for compressed SGD
+with Armijo search (not a proof technicality).
+
+Interpolated linear regression, the paper's exact setup: n=10000, d=1024,
+top_k at 1%, batch 64.  Run both variants and watch the unscaled one
+diverge exponentially while the scaled one (a = 3*sigma) converges.
+
+    PYTHONPATH=src python examples/linear_regression_scaling.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ArmijoConfig, Compressor, CSGDConfig, csgd_asss
+from repro.data.synthetic import interpolated_regression, regression_batch
+
+
+def run(use_scaling: bool, steps=200):
+    A, b, _ = interpolated_regression(10000, 1024, seed=0)
+    cfg = CSGDConfig(
+        armijo=ArmijoConfig(sigma=0.1, a_scale=0.3),
+        compressor=Compressor(gamma=0.01, min_compress_size=1),
+        use_scaling=use_scaling)
+    opt = csgd_asss(cfg)
+    w = jnp.zeros(1024)
+    st = opt.init(w)
+
+    @jax.jit
+    def step(w, st, Ab, bb):
+        return opt.step(lambda ww: jnp.mean((Ab @ ww - bb) ** 2), w, st)
+
+    label = "scaled(a=3s)" if use_scaling else "non-scaled  "
+    for t in range(steps):
+        Ab, bb = regression_batch(A, b, 64, t)
+        w, st, aux = step(w, st, Ab, bb)
+        if t % 25 == 0 or t == steps - 1:
+            print(f"  {label} step {t:4d}  loss={float(aux.loss):.4e}")
+        if not np.isfinite(float(aux.loss)) or float(aux.loss) > 1e12:
+            print(f"  {label} DIVERGED at step {t}")
+            return float("inf")
+    return float(aux.loss)
+
+
+def main():
+    print("== with scaling (paper CSGD-ASSS) ==")
+    ls = run(True)
+    print("== without scaling (naive Armijo + top_k) ==")
+    lu = run(False)
+    print(f"\nfinal: scaled={ls:.3e}  unscaled={lu:.3e}")
+    # initial loss ~ d = 1024; scaled must be converging (well below the
+    # start), unscaled must have blown up by orders of magnitude.
+    assert ls < 300.0 and (lu > 1e6 or not np.isfinite(lu)), (ls, lu)
+    print("paper Fig. 4 claim reproduced: scaling is necessary.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train a small transformer LM with CSGD-ASSS (Algorithm 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Covers the whole public API in ~40 lines: config -> model -> data ->
+compressed adaptive optimizer -> train loop.
+"""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import ArmijoConfig, Compressor, CSGDConfig, csgd_asss
+from repro.data.synthetic import TokenPipeline
+from repro.models import build_model
+
+
+def main():
+    cfg = get_smoke_config("qwen1.5-4b")       # any of the 10 archs works
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    opt = csgd_asss(CSGDConfig(
+        armijo=ArmijoConfig(sigma=0.1, a_scale=0.3,   # paper: a = 3*sigma
+                            omega=1.2, rho=0.8, alpha0=0.1),
+        compressor=Compressor(gamma=0.01),            # 1% top_k + feedback
+    ))
+    state = opt.init(params)
+
+    pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=128,
+                         global_batch=8)
+
+    @jax.jit
+    def train_step(params, state, batch):
+        return opt.step(lambda p: model.loss(p, batch)[0], params, state)
+
+    for step in range(60):
+        params, state, aux = train_step(params, state, pipe.batch(step))
+        if step % 10 == 0:
+            print(f"step {step:3d}  loss={float(aux.loss):.4f}  "
+                  f"alpha={float(aux.alpha):.4f}  "
+                  f"armijo_evals={int(aux.n_evals)}")
+    print("done — adaptive step size found without any tuning.")
+
+
+if __name__ == "__main__":
+    main()

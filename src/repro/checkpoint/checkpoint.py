@@ -1,0 +1,105 @@
+"""Pytree checkpointing: npz-based, step-managed, restart-safe.
+
+Layout::
+
+    <dir>/step_<N>/
+        manifest.json      (treedef + leaf dtypes/shapes + metadata)
+        arrays.npz         (flattened leaves, keyed leaf_<i>)
+        COMMITTED          (written last -> partial checkpoints are ignored)
+
+No external deps (orbax is not available offline).  Works for params,
+optimizer state and data-pipeline cursors alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _treedef_repr(tree) -> str:
+    return str(jax.tree.structure(tree))
+
+
+def save(directory: str, step: int, tree: PyTree,
+         metadata: dict | None = None, keep: int = 3) -> str:
+    """Atomically save ``tree`` at ``step``; prunes to ``keep`` newest."""
+    path = os.path.join(directory, f"step_{step:010d}")
+    tmp = path + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "treedef": _treedef_repr(tree),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    _prune(directory, keep)
+    return path
+
+
+def _prune(directory: str, keep: int) -> None:
+    steps = sorted(all_steps(directory))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, name, "COMMITTED")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = all_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, tree_like: PyTree,
+            step: int | None = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``tree_like`` (shapes are verified)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree.flatten(tree_like)
+    assert manifest["n_leaves"] == len(leaves_like), \
+        (manifest["n_leaves"], len(leaves_like))
+    leaves = []
+    for i, like in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        expect = tuple(getattr(like, "shape", arr.shape))
+        assert tuple(arr.shape) == expect, (i, arr.shape, expect)
+        leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves), manifest["metadata"]

@@ -1,0 +1,39 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_config(name)`` returns the full production ModelConfig;
+``get_smoke_config(name)`` the reduced same-family variant.
+"""
+from repro.configs.base import (ModelConfig, OptimizerConfig, RunConfig,
+                                ShapeConfig, SHAPES, smoke_variant)
+
+from . import (seamless_m4t_large_v2, zamba2_7b, llama3_405b,
+               llama_3_2_vision_11b, qwen1_5_32b, granite_moe_1b_a400m,
+               yi_34b, rwkv6_1_6b, qwen1_5_4b, qwen3_moe_30b_a3b,
+               paper_models)
+
+ARCH_CONFIGS = {
+    "seamless-m4t-large-v2": seamless_m4t_large_v2.CONFIG,
+    "zamba2-7b": zamba2_7b.CONFIG,
+    "llama3-405b": llama3_405b.CONFIG,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b.CONFIG,
+    "qwen1.5-32b": qwen1_5_32b.CONFIG,
+    "granite-moe-1b-a400m": granite_moe_1b_a400m.CONFIG,
+    "yi-34b": yi_34b.CONFIG,
+    "rwkv6-1.6b": rwkv6_1_6b.CONFIG,
+    "qwen1.5-4b": qwen1_5_4b.CONFIG,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b.CONFIG,
+    # paper-scale models for the convergence benchmarks
+    "paper-mlp": paper_models.MLP_CONFIG,
+    "paper-cnn": paper_models.CNN_CONFIG,
+    "paper-lm-100m": paper_models.LM_100M_CONFIG,
+}
+
+ARCH_NAMES = [n for n in ARCH_CONFIGS if not n.startswith("paper-")]
+
+
+def get_config(name: str) -> ModelConfig:
+    return ARCH_CONFIGS[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return smoke_variant(ARCH_CONFIGS[name])

@@ -1,0 +1,219 @@
+"""Config system: model architecture, optimizer, input shapes, run configs.
+
+Every assigned architecture gets a ``ModelConfig`` in its own module citing
+its source. Shapes are the four assigned global input shapes. ``RunConfig``
+composes model x shape x mesh x optimizer for the launcher/dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.armijo import ArmijoConfig
+from repro.core.compression import Compressor
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_d_ff: int = 0             # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+    # beyond-paper perf: explicit expert-parallel shard_map (each model
+    # shard routes+computes its local experts on its replicated token set;
+    # one psum combines) instead of auto-partitioned gathers — see §Perf.
+    moe_expert_parallel: bool = False
+    # --- SSM (Mamba2) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0    # >0: tied attn block every k ssm layers
+    # --- enc-dec ---
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    # --- VLM ---
+    cross_attn_every: int = 0     # >0: one cross-attn layer per k self layers
+    n_patches: int = 0
+    # --- rwkv ---
+    rwkv_lora_rank: int = 64
+    # --- attention variants ---
+    sliding_window: int = 0       # 0 = full attention
+    swa_for_long_context: bool = True  # long_500k uses window if full-attn
+    long_context_window: int = 8192
+    # --- numerics / impl ---
+    seq_parallel: bool = False    # Megatron-SP residual stream (S over model)
+    # beyond-paper: int8 self-attention KV cache (per-position absmax
+    # scales) — halves the decode shapes' dominant HBM term vs bf16.
+    kv_cache_dtype: str = ""      # "" = compute dtype | "int8"
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    attn_chunk: int = 1024        # query-chunked attention above this seq len
+    remat: bool = True
+    use_pallas: bool = False      # flip on real TPU
+    citation: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a 256 multiple so embedding/head tables shard
+        over any model-axis size; padded logits are masked in lm_head."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm" and self.shared_attn_every == 0
+
+    @property
+    def subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND model-FLOPs and memory checks)."""
+        D, V = self.d_model, self.vocab_size
+        hd = self.hd
+        emb = V * D * (1 if self.tie_embeddings else 2)
+
+        def attn_p():
+            qp = self.n_heads * hd * D
+            kvp = 2 * self.n_kv_heads * hd * D
+            op = self.n_heads * hd * D
+            b = (self.n_heads + 2 * self.n_kv_heads) * hd if self.qkv_bias else 0
+            return qp + kvp + op + b
+
+        def mlp_p(ff):
+            return 3 * D * ff            # SwiGLU gate+up+down
+
+        def mamba_p():
+            d_in = self.ssm_expand * D
+            nh = d_in // self.ssm_head_dim
+            in_proj = D * (2 * d_in + 2 * self.ssm_state + nh)
+            conv = (d_in + 2 * self.ssm_state) * self.ssm_conv
+            out = d_in * D
+            return in_proj + conv + out + 2 * nh + nh  # A, D, dt_bias
+
+        def rwkv_p():
+            tm = 4 * D * D + D * D       # r,k,v,g + output
+            w_lora = 2 * D * self.rwkv_lora_rank * 5
+            cm = 2 * D * self.d_ff       # channel mix
+            return tm + w_lora + cm + 6 * D
+
+        per_layer = 0
+        n_layers = self.n_layers
+        if self.family in ("dense", "vlm"):
+            per_layer = attn_p() + mlp_p(self.d_ff) + 2 * D
+        elif self.family == "moe":
+            per_layer = attn_p() + 2 * D + \
+                self.n_experts * 3 * D * self.moe_d_ff + D * self.n_experts
+        elif self.family == "ssm" and self.shared_attn_every == 0:
+            per_layer = rwkv_p() + 2 * D if self.name.startswith("rwkv") \
+                else mamba_p() + 2 * D
+        elif self.family == "hybrid":
+            per_layer = mamba_p() + 2 * D
+        elif self.family == "encdec":
+            enc = attn_p() + mlp_p(self.d_ff) + 2 * D
+            dec = 2 * attn_p() + mlp_p(self.d_ff) + 3 * D
+            return emb + self.n_enc_layers * enc + self.n_dec_layers * dec + D
+        total = emb + n_layers * per_layer + D
+        if self.family == "vlm" and self.cross_attn_every:
+            n_cross = self.n_layers // self.cross_attn_every
+            total += n_cross * (2 * attn_p() + 2 * D)
+        if self.family == "hybrid" and self.shared_attn_every:
+            total += attn_p() + mlp_p(self.d_ff) + 2 * D  # one tied block
+        return int(total)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "csgd_asss"       # csgd_asss | nonadaptive | sgd | sls | dense
+    armijo: ArmijoConfig = ArmijoConfig()
+    compressor: Compressor = Compressor()
+    eta: float = 0.1              # for non-adaptive baselines
+    ef_dtype: str = "float32"
+    ef_host_offload: bool = False  # beyond-paper: EF memory in host RAM
+    # beyond-paper: compress per (layer, model-shard) under a nested
+    # manual-model shard_map so top_k never gathers the full gradient
+    # (same contraction constant — see DESIGN.md §3; §Perf iteration 1).
+    shard_local_topk: bool = False
+    # beyond-paper (paper §V lists local iterations as future work):
+    # Qsparse-local-style — each worker takes `local_steps` uncompressed
+    # Armijo-SGD steps on its own microbatches, then the accumulated model
+    # delta is EF-compressed and exchanged once.  Divides exchange
+    # frequency by local_steps.  Requires microbatches == local_steps.
+    local_steps: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    optimizer: OptimizerConfig = OptimizerConfig()
+    multi_pod: bool = False
+    microbatches: int = 1          # gradient accumulation per worker
+    seq_shard_activations: bool = True   # sequence-parallel residual stream
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (prompt contract:
+    2 layers, d_model <= 512, <= 4 experts)."""
+    kw = dict(
+        n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 0,
+        d_ff=256, vocab_size=512, head_dim=32,
+        param_dtype="float32", compute_dtype="float32",
+        attn_chunk=64, remat=False,
+    )
+    if cfg.family == "moe":
+        # capacity_factor = E/k so C = T (drop-free): smoke tests assert
+        # exact decode/forward consistency, which dropping would break.
+        kw.update(n_experts=4, experts_per_token=2, moe_d_ff=64,
+                  capacity_factor=2.0)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_head_dim=32)
+    if cfg.family == "hybrid":
+        kw.update(n_layers=5, shared_attn_every=2)
+    if cfg.family == "encdec":
+        kw.update(n_enc_layers=2, n_dec_layers=2)
+    if cfg.family == "vlm":
+        kw.update(n_layers=4, cross_attn_every=2, n_patches=16)
+    if cfg.name.startswith("rwkv"):
+        kw.update(rwkv_lora_rank=8)
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    return dataclasses.replace(cfg, **kw)

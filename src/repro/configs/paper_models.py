@@ -1,0 +1,114 @@
+"""CPU-scale stand-ins for the paper's own experiment models (§IV).
+
+The paper trains ResNet-18/34 and DenseNet-121 on CIFAR-10/100.  Those are
+GPU-scale CNNs on datasets not available offline; the *claims* being tested
+are optimizer-vs-optimizer, so we provide:
+
+* ``MLP_CONFIG``  — 3-layer MLP classifier (interpolation realizable),
+* ``CNN_CONFIG``  — small conv net on 32x32x3 synthetic images (the CIFAR
+  geometry), channels scaled to CPU budget,
+* ``LM_100M_CONFIG`` — a ~100M dense transformer for the end-to-end driver.
+
+MLP/CNN are defined functionally here (they are not transformer LMs); the
+synthetic datasets come from ``repro.data.synthetic`` with teacher labels so
+the interpolation condition can hold.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperNetConfig:
+    name: str
+    kind: str                  # mlp | cnn
+    in_dim: int = 3072         # 32*32*3
+    n_classes: int = 100
+    widths: tuple = (512, 512)
+    channels: tuple = (32, 64, 128)
+
+
+MLP_CONFIG = PaperNetConfig(name="paper-mlp", kind="mlp")
+CNN_CONFIG = PaperNetConfig(name="paper-cnn", kind="cnn")
+
+LM_100M_CONFIG = ModelConfig(
+    name="paper-lm-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=2048, vocab_size=16384,
+    rope_theta=10000.0,
+    param_dtype="float32", compute_dtype="float32",
+    attn_chunk=2048, remat=False,
+    citation="end-to-end driver model (~100M params)",
+)
+
+
+# ----------------------------- MLP ------------------------------------------
+
+def init_mlp_net(cfg: PaperNetConfig, key):
+    dims = (cfg.in_dim,) + cfg.widths + (cfg.n_classes,)
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        k = jax.random.fold_in(key, i)
+        params.append({"w": jax.random.normal(k, (a, b)) / jnp.sqrt(a),
+                       "b": jnp.zeros((b,))})
+    return params
+
+
+def mlp_net_logits(params, x):
+    h = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params):
+        h = h @ p["w"] + p["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ----------------------------- CNN ------------------------------------------
+
+def init_cnn_net(cfg: PaperNetConfig, key):
+    params = []
+    cin = 3
+    for i, cout in enumerate(cfg.channels):
+        k = jax.random.fold_in(key, i)
+        params.append({"w": jax.random.normal(k, (3, 3, cin, cout))
+                       / jnp.sqrt(9 * cin)})
+        cin = cout
+    k = jax.random.fold_in(key, 99)
+    feat = cfg.channels[-1] * (32 // (2 ** len(cfg.channels))) ** 2
+    params.append({"w": jax.random.normal(k, (feat, cfg.n_classes))
+                   / jnp.sqrt(feat), "b": jnp.zeros((cfg.n_classes,))})
+    return params
+
+
+def cnn_net_logits(params, x):
+    """x: (B, 32, 32, 3)."""
+    h = x
+    for p in params[:-1]:
+        h = jax.lax.conv_general_dilated(
+            h, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        h = jax.nn.relu(h)
+        h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    p = params[-1]
+    return h @ p["w"] + p["b"]
+
+
+def net_loss(cfg: PaperNetConfig, params, batch):
+    """Cross-entropy for either net. batch: {"x": images, "y": labels}."""
+    logits = (mlp_net_logits if cfg.kind == "mlp" else cnn_net_logits)(
+        params, batch["x"])
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], 1))
+
+
+def init_net(cfg: PaperNetConfig, key):
+    return (init_mlp_net if cfg.kind == "mlp" else init_cnn_net)(cfg, key)

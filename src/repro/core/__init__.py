@@ -1,0 +1,31 @@
+"""Core of the reproduction: the paper's optimizer family.
+
+Public API:
+  - Compressor, Sparse              (top_k / block-local compression)
+  - ArmijoConfig, armijo_search     (scaled Armijo search, Algorithm 1)
+  - CSGDConfig, csgd_asss, CSGD     (Algorithm 2)
+  - NonAdaptiveCSGD, SGD, SLS       (paper baselines)
+  - worker_compress_aggregate       (Algorithm 3 building block for shard_map)
+"""
+from .compression import (Compressor, Sparse, topk_select, sparse_to_dense,
+                          block_threshold, threshold_select, tree_wire_bytes,
+                          contraction_gamma, MIN_COMPRESS_SIZE)
+from .armijo import ArmijoConfig, ArmijoResult, armijo_search, next_alpha_max, tree_sqnorm
+from .csgd import CSGD, CSGDConfig, CSGDState, StepAux, csgd_asss
+from .baselines import NonAdaptiveCSGD, SGD, SLS
+from .dcsgd import worker_compress_aggregate, dense_aggregate
+from .error_feedback import (init_ef, init_ef_quantized, quantize_ef,
+                             dequantize_ef, QuantizedEF)
+
+__all__ = [
+    "Compressor", "Sparse", "topk_select", "sparse_to_dense",
+    "block_threshold", "threshold_select", "tree_wire_bytes",
+    "contraction_gamma", "MIN_COMPRESS_SIZE",
+    "ArmijoConfig", "ArmijoResult", "armijo_search", "next_alpha_max",
+    "tree_sqnorm",
+    "CSGD", "CSGDConfig", "CSGDState", "StepAux", "csgd_asss",
+    "NonAdaptiveCSGD", "SGD", "SLS",
+    "worker_compress_aggregate", "dense_aggregate",
+    "init_ef", "init_ef_quantized", "quantize_ef", "dequantize_ef",
+    "QuantizedEF",
+]

@@ -1,0 +1,121 @@
+"""Armijo step-size search with scaling (paper Algorithm 1 + §III-A).
+
+Faithful semantics:
+
+* search starts at ``alpha_max`` and *first multiplies by rho* before the
+  first test (Algorithm 1 lines 4-6: ``repeat alpha <- alpha*rho ... until``);
+* stopping condition (2): ``f(x - alpha*grad) <= f(x) - sigma*alpha*||grad||^2``
+  — evaluated with the *unscaled* alpha;
+* the descent step uses ``eta = a * alpha`` with scale ``a < 2*sigma``
+  (the paper's key contribution; default ``a = 3*sigma`` per §IV-A... note
+  3*sigma=0.3 < 2*sigma=0.2 is FALSE for sigma=0.1 — the paper uses a=3σ
+  empirically while theory needs a ≤ ζ−ε; we expose both, default to the
+  paper's empirical 3σ and validate convergence in benchmarks);
+* across iterations ``alpha_max_t = omega * alpha_{t-1}`` (Algorithm 2 step 3).
+
+Implemented as a ``jax.lax.while_loop`` so it lowers into the train_step HLO;
+each trial costs one forward pass of the sampled batch's loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArmijoConfig:
+    sigma: float = 0.1          # sufficient-decrease parameter (paper sigma)
+    rho: float = 0.8            # backtracking factor (paper rho)
+    omega: float = 1.2          # alpha_max growth (paper omega)
+    a_scale: float = 0.3        # eta = a * alpha  (paper uses a = 3*sigma)
+    alpha0: float = 0.1         # initial alpha_max (paper §IV-A)
+    max_backtracks: int = 40    # safety cap on the while loop
+    alpha_min: float = 1e-8     # numerical floor
+
+    @property
+    def theory_a_bound(self) -> float:
+        """Scaled-GD theory bound a < 2*sigma (Theorem 15)."""
+        return 2.0 * self.sigma
+
+    def zeta(self, gamma: float) -> float:
+        """Compressed-SGD theory bound: a <= zeta = sigma*gamma/(2-gamma)."""
+        return self.sigma * gamma / (2.0 - gamma)
+
+
+class ArmijoResult(NamedTuple):
+    alpha: jax.Array          # accepted (unscaled) alpha_t
+    eta: jax.Array            # a * alpha_t — the step used in the descent
+    f0: jax.Array             # f(x_t) at the sampled batch
+    n_evals: jax.Array        # number of stopping-condition evaluations
+    accepted: jax.Array       # bool: condition met before max_backtracks
+
+
+def _tree_axpy(a: jax.Array, x: PyTree, y: PyTree) -> PyTree:
+    """y - a*x elementwise over the tree (candidate iterate)."""
+    return jax.tree.map(lambda yi, xi: yi - a * xi.astype(yi.dtype), y, x)
+
+
+def tree_sqnorm(t: PyTree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+               for l in jax.tree.leaves(t))
+
+
+def armijo_search(
+    loss_fn: Callable[[PyTree], jax.Array],
+    params: PyTree,
+    grads: PyTree,
+    alpha_max: jax.Array,
+    cfg: ArmijoConfig,
+    f0: jax.Array | None = None,
+    grad_sqnorm: jax.Array | None = None,
+) -> ArmijoResult:
+    """Run Algorithm 1 starting at ``alpha_max`` for loss ``loss_fn``.
+
+    ``loss_fn`` must be the loss of the *sampled batch* ``f_{i_t}`` closed
+    over the batch (paper line-searches the sampled function, not f).
+    """
+    if f0 is None:
+        f0 = loss_fn(params)
+    if grad_sqnorm is None:
+        grad_sqnorm = tree_sqnorm(grads)
+    f0 = f0.astype(jnp.float32)
+    alpha_max = jnp.asarray(alpha_max, jnp.float32)
+
+    def trial(alpha):
+        cand = _tree_axpy(alpha, grads, params)
+        return loss_fn(cand).astype(jnp.float32)
+
+    def cond(state):
+        alpha, f_try, n = state
+        ok = f_try <= f0 - cfg.sigma * alpha * grad_sqnorm
+        return jnp.logical_and(~ok,
+                               jnp.logical_and(n < cfg.max_backtracks,
+                                               alpha > cfg.alpha_min))
+
+    def body(state):
+        alpha, _, n = state
+        alpha = alpha * cfg.rho
+        return alpha, trial(alpha), n + 1
+
+    # First candidate is alpha_max itself (do-while reading of Algorithm 1:
+    # the literal pseudocode pre-multiplies by rho before the first test,
+    # which with omega*rho = 0.96 < 1 would make alpha monotonically
+    # decreasing — contradicting the paper's own §IV-B accounting of "~2
+    # stopping-condition evaluations per step".  Testing alpha_max first
+    # matches [15] and the paper's cost claim; see DESIGN.md §7).
+    init = (alpha_max, trial(alpha_max), jnp.int32(1))
+    alpha, f_try, n = jax.lax.while_loop(cond, body, init)
+    accepted = f_try <= f0 - cfg.sigma * alpha * grad_sqnorm
+    eta = cfg.a_scale * alpha
+    return ArmijoResult(alpha=alpha, eta=eta, f0=f0,
+                        n_evals=n, accepted=accepted)
+
+
+def next_alpha_max(alpha_t: jax.Array, cfg: ArmijoConfig) -> jax.Array:
+    """Algorithm 2 step 3: alpha_max_{t+1} = omega * alpha_t."""
+    return jnp.clip(cfg.omega * alpha_t, cfg.alpha_min, 1e6)

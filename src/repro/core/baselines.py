@@ -1,0 +1,134 @@
+"""Baseline optimizers the paper compares against (§IV).
+
+* ``NonAdaptiveCSGD`` — top_k + memory feedback with a *fixed* step size
+  (Aji & Heafield [3]; the paper's main baseline, run at 0.1/0.05/0.01).
+* ``SGD``             — plain uncompressed SGD (optionally with momentum).
+* ``SLS``             — uncompressed SGD with Armijo line search
+  (Vaswani et al. [15]; the method CSGD-ASSS extends to compression).
+
+All expose the same ``init/step(loss_fn, params, state)`` interface as CSGD
+so train loops and benchmarks are optimizer-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .armijo import ArmijoConfig, armijo_search, next_alpha_max, tree_sqnorm
+from .compression import Compressor
+from . import error_feedback as ef
+
+PyTree = Any
+
+
+class NonAdaptiveState(NamedTuple):
+    step: jax.Array
+    memory: PyTree
+
+
+class NonAdaptiveAux(NamedTuple):
+    loss: jax.Array
+    grad_sqnorm: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NonAdaptiveCSGD:
+    """Compressed SGD with memory feedback, fixed step size eta [3]."""
+
+    eta: float = 0.1
+    compressor: Compressor = Compressor()
+
+    def init(self, params: PyTree) -> NonAdaptiveState:
+        return NonAdaptiveState(step=jnp.int32(0), memory=ef.init_ef(params))
+
+    def step(self, loss_fn: Callable, params: PyTree,
+             state: NonAdaptiveState):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+
+        def leaf(m, g):
+            acc = m + self.eta * g.astype(m.dtype)
+            return self.compressor.compress_dense(acc)
+
+        flat_m, treedef = jax.tree.flatten(state.memory)
+        flat_g = treedef.flatten_up_to(grads)
+        pairs = [leaf(m, g) for m, g in zip(flat_m, flat_g)]
+        sent = treedef.unflatten([p[0] for p in pairs])
+        resid = treedef.unflatten([p[1] for p in pairs])
+        new_params = jax.tree.map(
+            lambda p, s: (p.astype(jnp.float32) - s).astype(p.dtype),
+            params, sent)
+        return new_params, NonAdaptiveState(state.step + 1, resid), \
+            NonAdaptiveAux(loss=loss, grad_sqnorm=tree_sqnorm(grads))
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: PyTree | None
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    """Plain (uncompressed) SGD, optional heavy-ball momentum."""
+
+    eta: float = 0.1
+    beta: float = 0.0
+
+    def init(self, params: PyTree) -> SGDState:
+        mom = (jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+               if self.beta else None)
+        return SGDState(step=jnp.int32(0), momentum=mom)
+
+    def step(self, loss_fn: Callable, params: PyTree, state: SGDState):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        if self.beta:
+            mom = jax.tree.map(lambda v, g: self.beta * v + g.astype(jnp.float32),
+                               state.momentum, grads)
+            upd = mom
+        else:
+            mom = None
+            upd = grads
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32)
+                          - self.eta * u.astype(jnp.float32)).astype(p.dtype),
+            params, upd)
+        return new_params, SGDState(state.step + 1, mom), \
+            NonAdaptiveAux(loss=loss, grad_sqnorm=tree_sqnorm(grads))
+
+
+class SLSState(NamedTuple):
+    step: jax.Array
+    alpha_prev: jax.Array
+
+
+class SLSAux(NamedTuple):
+    loss: jax.Array
+    alpha: jax.Array
+    n_evals: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SLS:
+    """Uncompressed stochastic line search [15] (no scaling, no compression)."""
+
+    armijo: ArmijoConfig = ArmijoConfig(a_scale=1.0)
+
+    def init(self, params: PyTree) -> SLSState:
+        return SLSState(step=jnp.int32(0),
+                        alpha_prev=jnp.float32(self.armijo.alpha0))
+
+    def step(self, loss_fn: Callable, params: PyTree, state: SLSState):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        gsq = tree_sqnorm(grads)
+        amax = next_alpha_max(state.alpha_prev, self.armijo)
+        res = armijo_search(loss_fn, params, grads, amax, self.armijo,
+                            f0=loss, grad_sqnorm=gsq)
+        eta = self.armijo.a_scale * res.alpha
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - eta * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, SLSState(state.step + 1, res.alpha), \
+            SLSAux(loss=loss, alpha=res.alpha, n_evals=res.n_evals)

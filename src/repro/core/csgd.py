@@ -1,0 +1,155 @@
+"""CSGD-ASSS — Compressed SGD with Armijo Step-Size Search and Scaling.
+
+Paper Algorithm 2, single-process semantics (the distributed version is in
+``dcsgd.py``).  The optimizer is exposed optax-style, except that — being a
+line-search method — ``update`` needs the sampled batch's loss function:
+
+    opt = csgd_asss(CSGDConfig(...))
+    state = opt.init(params)
+    (params, state, aux) = opt.step(loss_fn, params, state)
+
+where ``loss_fn(params) -> scalar`` is ``f_{i_t}`` closed over the batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .armijo import ArmijoConfig, ArmijoResult, armijo_search, next_alpha_max, tree_sqnorm
+from .compression import Compressor
+from . import error_feedback as ef
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CSGDConfig:
+    armijo: ArmijoConfig = ArmijoConfig()
+    compressor: Compressor = Compressor()
+    ef_dtype: str = "float32"       # float32 | bfloat16 | int8
+    use_scaling: bool = True        # False reproduces the divergent variant
+    # beyond-paper (paper §V lists momentum as future work): heavy-ball
+    # velocity accumulated BEFORE compression — EF-SGDm style, the error
+    # feedback recycles what compression drops from the momentum update.
+    momentum: float = 0.0
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+class CSGDState(NamedTuple):
+    step: jax.Array          # int32
+    alpha_prev: jax.Array    # alpha_{t-1} (per-worker in DCSGD)
+    memory: PyTree           # error-feedback m_t, shaped like params
+    n_evals_ema: jax.Array   # running mean of Armijo fwd evals (telemetry)
+    velocity: PyTree = ()    # heavy-ball state (momentum > 0 only)
+
+
+class StepAux(NamedTuple):
+    loss: jax.Array
+    alpha: jax.Array
+    eta: jax.Array
+    n_evals: jax.Array
+    grad_sqnorm: jax.Array
+    accepted: jax.Array
+
+
+def _ef_to_dense(memory, dtype=jnp.float32):
+    def leaf(m):
+        if isinstance(m, ef.QuantizedEF):
+            return ef.dequantize_ef(m, dtype)
+        return m.astype(dtype)
+    return jax.tree.map(leaf, memory,
+                        is_leaf=lambda x: isinstance(x, ef.QuantizedEF))
+
+
+def _ef_from_dense(memory_dense, ef_dtype: str):
+    if ef_dtype == "int8":
+        return jax.tree.map(ef.quantize_ef, memory_dense)
+    return jax.tree.map(lambda m: m.astype(jnp.dtype(ef_dtype)), memory_dense)
+
+
+class CSGD:
+    """Algorithm 2. Also covers the non-adaptive baseline via armijo=None."""
+
+    def __init__(self, cfg: CSGDConfig):
+        self.cfg = cfg
+
+    def init(self, params: PyTree) -> CSGDState:
+        if self.cfg.ef_dtype == "int8":
+            memory = ef.init_ef_quantized(params)
+        else:
+            memory = ef.init_ef(params, jnp.dtype(self.cfg.ef_dtype))
+        vel = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params) if self.cfg.momentum else ())
+        return CSGDState(
+            step=jnp.int32(0),
+            alpha_prev=jnp.float32(self.cfg.armijo.alpha0),
+            memory=memory,
+            n_evals_ema=jnp.float32(0.0),
+            velocity=vel,
+        )
+
+    # ------------------------------------------------------------------
+    def step(
+        self,
+        loss_fn: Callable[[PyTree], jax.Array],
+        params: PyTree,
+        state: CSGDState,
+    ) -> tuple[PyTree, CSGDState, StepAux]:
+        cfg = self.cfg
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        gsq = tree_sqnorm(grads)
+
+        # --- Armijo search with alpha_max = omega * alpha_{t-1} (step 3) ---
+        alpha_max = next_alpha_max(state.alpha_prev, cfg.armijo)
+        res = armijo_search(loss_fn, params, grads, alpha_max, cfg.armijo,
+                            f0=loss, grad_sqnorm=gsq)
+        eta = res.eta if cfg.use_scaling else res.alpha  # a=1 -> divergence
+
+        # --- (optional) heavy-ball velocity, pre-compression --------------
+        if cfg.momentum:
+            vel = jax.tree.map(
+                lambda v, g: cfg.momentum * v + g.astype(jnp.float32),
+                state.velocity, grads)
+            descent = vel
+        else:
+            vel = state.velocity
+            descent = grads
+
+        # --- compressed descent with error feedback (steps 6-8) -----------
+        mem = _ef_to_dense(state.memory)
+
+        def leaf_update(m, g):
+            acc = m + eta * g.astype(m.dtype)
+            sent, resid = cfg.compressor.compress_dense(acc)
+            return sent, resid
+
+        flat_m, treedef = jax.tree.flatten(mem)
+        flat_g = treedef.flatten_up_to(descent)
+        pairs = [leaf_update(m, g) for m, g in zip(flat_m, flat_g)]
+        sent = treedef.unflatten([p[0] for p in pairs])
+        resid = treedef.unflatten([p[1] for p in pairs])
+
+        new_params = jax.tree.map(
+            lambda p, s: (p.astype(jnp.float32) - s).astype(p.dtype),
+            params, sent)
+        new_state = CSGDState(
+            step=state.step + 1,
+            alpha_prev=res.alpha,
+            memory=_ef_from_dense(resid, cfg.ef_dtype),
+            n_evals_ema=0.9 * state.n_evals_ema +
+            0.1 * res.n_evals.astype(jnp.float32),
+            velocity=vel,
+        )
+        aux = StepAux(loss=loss, alpha=res.alpha, eta=eta,
+                      n_evals=res.n_evals, grad_sqnorm=gsq,
+                      accepted=res.accepted)
+        return new_params, new_state, aux
+
+
+def csgd_asss(cfg: CSGDConfig | None = None) -> CSGD:
+    return CSGD(cfg or CSGDConfig())

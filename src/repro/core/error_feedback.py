@@ -1,0 +1,64 @@
+"""Error-feedback memory state (paper eq. (6) and Algorithm 2 step 8).
+
+The memory ``m_t`` accumulates what compression dropped:
+
+    g_t     = top_k(m_t + eta_t * grad_t)
+    m_{t+1} = m_t + eta_t * grad_t - g_t
+
+Lemma 6: ``m_t = x_t - x_hat_t`` where ``x_hat`` is the uncompressed virtual
+iterate — tested as a property test.
+
+Supports quantized storage (int8 with per-block scales) as a beyond-paper
+memory optimization for mega-models (see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_ef(params: PyTree, dtype=jnp.float32) -> PyTree:
+    """m_0 = 0, shaped like params (per paper; per-worker in DCSGD)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)
+
+
+# --------------------------- int8 quantized EF -----------------------------
+
+EF_QBLOCK = 256
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QuantizedEF:
+    """Per-block absmax-scaled int8 residual storage (4x smaller than f32)."""
+
+    q: jax.Array        # int8, padded flat (nb, EF_QBLOCK)
+    scale: jax.Array    # f32 (nb, 1)
+    shape: tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+
+
+def quantize_ef(m: jax.Array) -> QuantizedEF:
+    flat = m.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % EF_QBLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, EF_QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return QuantizedEF(q=q, scale=scale, shape=tuple(m.shape))
+
+
+def dequantize_ef(qef: QuantizedEF, dtype=jnp.float32) -> jax.Array:
+    d = 1
+    for n in qef.shape:
+        d *= n
+    flat = (qef.q.astype(jnp.float32) * qef.scale).reshape(-1)[:d]
+    return flat.reshape(qef.shape).astype(dtype)
+
+
+def init_ef_quantized(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: quantize_ef(jnp.zeros(p.shape, jnp.float32)),
+                        params)

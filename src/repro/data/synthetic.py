@@ -1,0 +1,111 @@
+"""Deterministic, shard-aware synthetic data pipelines.
+
+Three generators:
+
+* ``TokenPipeline``      — LM token streams with Zipfian unigram structure +
+  an order-2 Markov mixing so the loss has learnable signal; deterministic
+  per (seed, step, shard), so every dp worker slices its own batch shard
+  without coordination and restarts are reproducible from the step counter.
+* ``interpolated_regression`` — the paper's Fig-4 setup: `<a_i, x*> = b_i`
+  exactly (interpolation holds by construction).
+* ``teacher_classification`` — images/labels from a fixed random teacher so
+  an over-parameterized student can interpolate (paper's NN experiments).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipeline:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1
+    shard: int = 0
+
+    @property
+    def local_batch(self) -> int:
+        assert self.global_batch % self.n_shards == 0
+        return self.global_batch // self.n_shards
+
+    def batch(self, step: int) -> dict:
+        """Deterministic batch for (step, shard). CPU-side numpy; returns
+        int32 tokens (local_batch, seq_len)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        B, S, V = self.local_batch, self.seq_len, self.vocab_size
+        # zipf unigrams
+        ranks = np.arange(1, V + 1)
+        probs = 1.0 / ranks
+        probs /= probs.sum()
+        base = rng.choice(V, size=(B, S), p=probs)
+        # order-2 structure: with prob .5, token t = (t-1 + t-2) % V
+        mix = rng.random((B, S)) < 0.5
+        for t in range(2, S):
+            base[:, t] = np.where(mix[:, t],
+                                  (base[:, t - 1] + base[:, t - 2]) % V,
+                                  base[:, t])
+        return {"tokens": jnp.asarray(base, jnp.int32)}
+
+    def batch_with_aux(self, step: int, cfg) -> dict:
+        """Adds the stubbed modality inputs required by vlm/encdec archs."""
+        b = self.batch(step)
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed + 7, step, self.shard]))
+        if cfg.family == "vlm":
+            b["image_embed"] = jnp.asarray(
+                rng.standard_normal((self.local_batch, cfg.n_patches,
+                                     cfg.d_model), dtype=np.float32))
+        if cfg.family == "encdec":
+            b["src_embed"] = jnp.asarray(
+                rng.standard_normal((self.local_batch, self.seq_len,
+                                     cfg.d_model), dtype=np.float32))
+        return b
+
+
+def interpolated_regression(n: int, d: int, *, feature_std: float = 1.0,
+                            seed: int = 0):
+    """Paper Fig. 4: least squares with an exact interpolant.
+
+    Returns (A (n,d), b (n,), x_star (d,)). Features ~ N(0, feature_std^2).
+    """
+    rng = np.random.default_rng(seed)
+    x_star = rng.standard_normal(d)
+    A = rng.standard_normal((n, d)) * feature_std
+    b = A @ x_star
+    return (jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32),
+            jnp.asarray(x_star, jnp.float32))
+
+
+def regression_batch(A, b, batch_size: int, step: int, seed: int = 0):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    idx = rng.integers(0, A.shape[0], batch_size)
+    return A[idx], b[idx]
+
+
+def teacher_classification(n: int, *, n_classes: int = 100, seed: int = 0,
+                           image: bool = True):
+    """32x32x3 inputs with labels from a fixed random linear teacher —
+    realizable, so interpolation can hold for an over-parameterized net."""
+    rng = np.random.default_rng(seed)
+    if image:
+        x = rng.standard_normal((n, 32, 32, 3)).astype(np.float32)
+        feats = x.reshape(n, -1)
+    else:
+        x = rng.standard_normal((n, 3072)).astype(np.float32)
+        feats = x
+    W = rng.standard_normal((feats.shape[1], n_classes)) / np.sqrt(feats.shape[1])
+    y = np.argmax(feats @ W, axis=1)
+    return jnp.asarray(x), jnp.asarray(y, jnp.int32)
+
+
+def class_batch(x, y, batch_size: int, step: int, seed: int = 0):
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
+    idx = rng.integers(0, x.shape[0], batch_size)
+    return {"x": x[idx], "y": y[idx]}

@@ -1,0 +1,76 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Every op takes ``impl`` ("pallas" | "ref"): the dry-run/CPU path uses "ref"
+(pure jnp — the CPU backend cannot lower TPU custom calls), real-TPU configs
+flip to "pallas".  In tests both paths are compared (pallas in interpret
+mode) across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .ef_topk import ef_apply, block_stats
+from .flash_attention import flash_attention
+from .rmsnorm import rmsnorm
+
+_INTERPRET = True  # CPU container: interpret Pallas; on TPU set False.
+
+
+# --------------------------------------------------------------------------
+def ef_threshold_update(m, g, eta, tau, *, impl: str = "ref"):
+    """Fused EF accumulate+sparsify. m, g: any shape; returns (sent, m')."""
+    if impl == "ref":
+        return ref.ef_threshold_update(m, g, jnp.asarray(eta),
+                                       jnp.asarray(tau))
+    shape = m.shape
+    flat = m.reshape(-1)
+    C = 1024
+    pad = (-flat.size) % C
+    m2 = jnp.pad(m.reshape(-1), (0, pad)).reshape(-1, C)
+    g2 = jnp.pad(g.reshape(-1), (0, pad)).reshape(-1, C)
+    sent, mnew = ef_apply(m2, g2, jnp.asarray(eta, jnp.float32),
+                          jnp.asarray(tau, jnp.float32),
+                          interpret=_INTERPRET)
+    d = flat.size
+    return (sent.reshape(-1)[:d].reshape(shape),
+            mnew.reshape(-1)[:d].reshape(shape))
+
+
+def block_topk_threshold(x, k_b: int, block: int = 1024, *,
+                         impl: str = "ref"):
+    """Per-block k_b-th |.| statistic; (n_blocks,) f32."""
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    if impl == "ref":
+        return ref.block_abs_topk_threshold(blocks.reshape(-1), k_b, block)
+    return block_stats(blocks, k_b, interpret=_INTERPRET).reshape(-1)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None, q_offset: int | None = None,
+              impl: str = "ref"):
+    """MHA (B,H,S,D)x(B,H,Sk,D). GQA: broadcast kv heads before calling."""
+    if impl == "ref" or q_offset is not None:
+        return ref.mha_reference(q, k, v, causal=causal, window=window,
+                                 scale=scale, q_offset=q_offset)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           scale=scale, interpret=_INTERPRET)
+
+
+def rms_norm(x, w, *, eps: float = 1e-6, impl: str = "ref"):
+    if impl == "ref":
+        return ref.rmsnorm_reference(x, w, eps)
+    return rmsnorm(x, w, eps=eps, interpret=_INTERPRET)
+
+
+def wkv(r, k, v, w, u, s0, *, impl: str = "ref"):
+    """RWKV-6 WKV recurrence (see rwkv_wkv.py). Returns (y, final_state)."""
+    if impl == "ref":
+        return ref.wkv_reference(r, k, v, w, u, s0)
+    from .rwkv_wkv import wkv_forward
+    return wkv_forward(r, k, v, w, u, s0, interpret=_INTERPRET)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel. Ground truth for tests.
+
+Each function mirrors the corresponding kernel's contract exactly; kernels are
+validated with ``assert_allclose`` against these across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------- ef_topk ---------------------------------------
+
+def ef_threshold_update(m: jax.Array, g: jax.Array, eta: jax.Array,
+                        tau: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Fused error-feedback threshold sparsification (DESIGN.md §3).
+
+        acc  = m + eta * g
+        sent = acc * (|acc| >= tau)
+        m'   = acc - sent
+
+    All arrays same shape; eta, tau scalars. Returns (sent, m_new) in the
+    dtype of ``m``.
+    """
+    acc = m.astype(jnp.float32) + eta.astype(jnp.float32) * g.astype(jnp.float32)
+    mask = jnp.abs(acc) >= tau.astype(jnp.float32)
+    sent = jnp.where(mask, acc, 0.0)
+    m_new = acc - sent
+    return sent.astype(m.dtype), m_new.astype(m.dtype)
+
+
+def block_abs_topk_threshold(x: jax.Array, k_b: int, block: int) -> jax.Array:
+    """Per-block k_b-th largest |x|. x flat, padded to a multiple of block.
+
+    Returns (n_blocks,) thresholds — pass-1 statistics for the two-pass
+    block-local selection.
+    """
+    blocks = x.reshape(-1, block)
+    mag = jnp.abs(blocks)
+    vals, _ = jax.lax.top_k(mag, k_b)
+    return vals[:, -1]
+
+
+# --------------------------- flash attention -------------------------------
+
+def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None,
+                  q_offset: int | None = None) -> jax.Array:
+    """Multi-head attention oracle.
+
+    q: (B, H, Sq, D); k, v: (B, H, Sk, D). ``window`` = sliding-window size
+    (None = full). ``q_offset`` = absolute position of the first query
+    (default Sk - Sq: queries are the trailing positions). Returns
+    (B, H, Sq, D) in q.dtype, computed in f32.
+    """
+    *_, Sq, D = q.shape
+    Sk = k.shape[-2]
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if q_offset is None:
+        q_offset = Sk - Sq
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------- rmsnorm ----------------------------------------
+
+def rmsnorm_reference(x: jax.Array, w: jax.Array,
+                      eps: float = 1e-6) -> jax.Array:
+    """RMSNorm oracle: x * rsqrt(mean(x^2) + eps) * w, f32 accumulation."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------- rwkv wkv ---------------------------------------
+
+def wkv_reference(r, k, v, w, u, s0):
+    """Sequential oracle for the RWKV-6 WKV recurrence.
+
+    r/k/v/w: (B, S, H, K|V); u: (H, K); s0: (B, H, K, V).
+    Returns (y: (B, S, H, V), sT)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    S_state = s0.astype(jnp.float32)
+    ys = []
+    for t in range(S):
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, t].astype(jnp.float32),
+                        v[:, t].astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", r[:, t].astype(jnp.float32),
+                       S_state + u[None, :, :, None] * kv)
+        ys.append(y)
+        S_state = w[:, t].astype(jnp.float32)[..., None] * S_state + kv
+    return jnp.stack(ys, axis=1), S_state

@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+A function, not a module-level constant: importing this module never touches
+jax device state.  Single pod = 256 v5e chips as (data=16, model=16);
+multi-pod = 2 pods = 512 chips as (pod=2, data=16, model=16) — the DCSGD
+worker set is the (pod, data) axes product.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(4, 2), axes=("data", "model")):
+    """Small mesh for CPU integration tests (8 forced host devices)."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~4 links/chip on v5e)

@@ -1,0 +1,134 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step per chip:
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = wire_bytes_per_chip / ICI_BW
+
+plus MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per chip and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.roofline results/dryrun.json \
+        [--md results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ARCH_CONFIGS, SHAPES
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def active_params(cfg) -> int:
+    """Active (per-token) parameters: MoE counts top-k experts only."""
+    n = cfg.n_params()
+    if cfg.family == "moe":
+        inactive = cfg.n_layers * (cfg.n_experts - cfg.experts_per_token) \
+            * 3 * cfg.d_model * cfg.moe_d_ff
+        n -= inactive
+    return n
+
+
+def model_flops(cfg, shape, n_chips: int) -> float:
+    """6*N_active*D per chip (train); fwd-only shapes use 2*N*D."""
+    tokens = shape.seq_len * shape.global_batch
+    if shape.kind == "decode":
+        tokens = shape.global_batch          # one token per sequence
+    n = active_params(cfg)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens / n_chips
+
+
+def analyze(rec: dict) -> dict | None:
+    """Three roofline terms from the trip-count-aware HLO analysis:
+
+    * compute    = HLO matmul FLOPs per chip / peak bf16
+    * memory     = HLO buffer-traffic bytes per chip / HBM bandwidth
+      (2x non-fused instruction results; fusion internals never hit HBM)
+    * collective = parsed wire bytes per chip / ICI link bandwidth
+
+    Plus MODEL_FLOPS = 6*N_active*D and the useful-compute ratio.  The
+    'fits' column is per-chip *persistent* state (compiled argument bytes:
+    params + optimizer/EF memory + caches); transient temp bytes come from
+    the CPU backend's buffer assignment and are reported separately (the
+    TPU compiler re-schedules them under the 16 GB ceiling).
+    """
+    if rec.get("status") != "ok":
+        return None
+    cfg = ARCH_CONFIGS[rec["arch"]]
+    shape = SHAPES[rec["shape"]]
+    n_chips = rec.get("n_chips", 256)
+    t_compute = rec["flops_per_chip"] / PEAK_FLOPS_BF16
+    t_memory = rec["bytes_per_chip"] / HBM_BW
+    wire = rec.get("collectives", {}).get("total_wire_bytes", 0.0)
+    t_coll = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape, n_chips)
+    bound = max(terms.values())
+    arg_gb = rec["memory"]["argument_bytes"] / 2**30
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "mesh")},
+        "opt": rec.get("opt", "-"),
+        "variant": rec.get("variant", ""),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "useful_ratio": (mf / rec["flops_per_chip"]
+                         if rec["flops_per_chip"] else 0.0),
+        "roofline_step_s": bound,
+        "mfu_upper_bound": (mf / PEAK_FLOPS_BF16) / bound if bound else 0.0,
+        "hbm_gb": arg_gb,
+        "temp_gb": rec["memory"]["temp_bytes"] / 2**30,
+        "fits_v5e_16gb": arg_gb < 16.0,
+    }
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | opt | compute s | memory s | coll s | "
+           "dominant | useful | MFU-UB | HBM GiB | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['opt']} "
+                 f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+                 f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+                 f"| {r['useful_ratio']:.2f} | {r['mfu_upper_bound']:.2f} "
+                 f"| {r['hbm_gb']:.1f} | {'y' if r['fits_v5e_16gb'] else 'N'} |\n")
+    return hdr + body
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("records", nargs="+")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--json", dest="json_out", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    for path in args.records:
+        with open(path) as f:
+            for rec in json.load(f):
+                row = analyze(rec)
+                if row:
+                    rows.append(row)
+                elif rec.get("status") not in ("skipped",):
+                    print(f"!! {rec.get('arch')} {rec.get('shape')}: "
+                          f"{rec.get('status')} {rec.get('error', '')[:120]}")
+    md = to_markdown(rows)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Training driver: DCSGD-ASSS on a device mesh, with checkpointing.
+
+CPU-scale entry point (the production mesh path is exercised by dryrun.py):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \
+        --steps 50 --mesh 4x2 --opt csgd_asss --gamma 0.05
+
+Runs real steps on the (forced-host) mesh, logs loss/alpha/wire-bytes, and
+writes checkpoints.  ``--arch paper-lm-100m`` is the ~100M end-to-end run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs import ARCH_CONFIGS, get_config, get_smoke_config
+from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig)
+from repro.core.armijo import ArmijoConfig
+from repro.core.compression import Compressor
+from repro.data.synthetic import TokenPipeline
+from repro.launch.train_step import (build_train_step, init_opt_state,
+                                     opt_state_shardings)
+from repro.models import build_model
+from repro.sharding import dp_axes_of, param_shardings
+
+
+def parse_mesh(spec: str):
+    dims = tuple(int(x) for x in spec.split("x"))
+    if len(dims) == 2:
+        return jax.make_mesh(dims, ("data", "model"),
+                             devices=jax.devices()[:math.prod(dims)])
+    return jax.make_mesh(dims, ("pod", "data", "model"),
+                         devices=jax.devices()[:math.prod(dims)])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-lm-100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of --arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--mesh", default="2x1")
+    ap.add_argument("--opt", default="csgd_asss",
+                    choices=["csgd_asss", "nonadaptive", "sgd", "dense", "sls"])
+    ap.add_argument("--gamma", type=float, default=0.01)
+    ap.add_argument("--eta", type=float, default=0.1)
+    # (momentum is a single-node CSGDConfig option — see repro.core.csgd;
+    # the distributed worker implements the paper's Algorithm 3 + the
+    # local-steps extension.)
+    ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--value-bits", type=int, default=32,
+                    choices=[32, 16, 8])
+    ap.add_argument("--ef-dtype", default="float32")
+    ap.add_argument("--shard-local-topk", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--out", default=None, help="JSON metrics log")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    mesh = parse_mesh(args.mesh)
+    dp = dp_axes_of(mesh)
+    W = math.prod(mesh.shape[a] for a in dp)
+    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
+    run = RunConfig(
+        model=cfg, shape=shape,
+        optimizer=OptimizerConfig(
+            kind=args.opt, armijo=ArmijoConfig(),
+            compressor=Compressor(gamma=args.gamma,
+                                  value_bits=args.value_bits),
+            eta=args.eta, ef_dtype=args.ef_dtype,
+            shard_local_topk=args.shard_local_topk,
+            local_steps=args.local_steps),
+        microbatches=args.microbatches)
+
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.PRNGKey(0))
+        params = jax.device_put(params, param_shardings(params, mesh))
+        opt_state = init_opt_state(params, run, W)
+        opt_state = jax.device_put(
+            opt_state, opt_state_shardings(opt_state, params, mesh, run))
+
+        start = 0
+        if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir):
+            (params, opt_state), meta = ckpt.restore(
+                args.ckpt_dir, (params, opt_state))
+            start = meta.get("step", 0)
+            print(f"resumed from step {start}")
+
+        pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                             global_batch=args.global_batch)
+        bspec = NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+
+        def put_batch(b):
+            return jax.tree.map(lambda x: jax.device_put(x, bspec), b)
+
+        step_fn = None
+        log = []
+        t_start = time.time()
+        for step in range(start, args.steps):
+            batch = put_batch(pipe.batch_with_aux(step, cfg))
+            if step_fn is None:
+                step_fn = build_train_step(model, run, mesh)(params, batch)
+                t0 = time.time()
+                step_fn = step_fn.lower(params, opt_state, batch).compile()
+                print(f"compiled train_step in {time.time()-t0:.1f}s")
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = round(time.time() - t_start, 1)
+                log.append(m)
+                print(f"step {step:5d} loss={m['loss']:.4f} "
+                      f"alpha={m['alpha']:.4g} evals={m['n_evals']:.2f} "
+                      f"wire={m['wire_bytes']:.3e}B", flush=True)
+            if args.ckpt_dir and step and step % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, step, (params, opt_state),
+                          metadata={"step": step})
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, args.steps, (params, opt_state),
+                      metadata={"step": args.steps})
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            with open(args.out, "w") as f:
+                json.dump(log, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

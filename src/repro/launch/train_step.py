@@ -1,0 +1,367 @@
+"""Distributed train/serve step builders — DCSGD-ASSS as a first-class
+feature of the runtime (DESIGN.md §4).
+
+``build_train_step``: jit(shard_map(worker_fn)) where the shard_map is
+*manual* over the data-parallel axes (('pod','data') or ('data',)) and
+*auto* over 'model' (XLA partitions the tensor-parallel math from the
+parameter shardings + in-model hints).  Each dp worker:
+
+  grads  <- value_and_grad over its microbatches           (model-axis TP)
+  alpha  <- Armijo search on its first microbatch          (Algorithm 3 l.4)
+  update <- compress + all-gather sparse over dp axes      (Algorithm 3 l.5-7)
+
+Per-worker optimizer state (EF memory m^(k), alpha^(k)) is stored with a
+leading worker axis sharded over the dp mesh axes — per-chip EF memory is
+P/|model| as analyzed in DESIGN.md §6.
+
+``build_prefill_step`` / ``build_decode_step``: pure-pjit serving steps with
+batch-over-dp, seq-sharded KV caches (flash-decode combine emerges from the
+partitioner; see models/attention.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
+from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
+from repro.models.registry import Model
+from repro.sharding import cache_pspecs, dp_axes_of, param_pspecs
+from repro.utils import DP, TP, hint
+
+PyTree = Any
+
+
+class DistOptState(NamedTuple):
+    step: jax.Array          # () int32
+    alpha_prev: jax.Array    # (W,) per-worker carried step size
+    memory: PyTree           # per-worker EF: leaves (W, *param_shape)
+    n_evals_ema: jax.Array   # (W,)
+
+
+def _n_workers(mesh) -> int:
+    return math.prod(mesh.shape[a] for a in dp_axes_of(mesh))
+
+
+def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
+                   abstract: bool = False) -> DistOptState:
+    opt = run_cfg.optimizer
+    ef_dt = jnp.dtype(opt.ef_dtype)
+
+    def mem_leaf(p):
+        shape = (n_workers,) + tuple(p.shape)
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, ef_dt)
+        return jnp.zeros(shape, ef_dt)
+
+    needs_mem = opt.kind in ("csgd_asss", "nonadaptive")
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+        (lambda s, d: jnp.zeros(s, d))
+    return DistOptState(
+        step=mk((), jnp.int32),
+        alpha_prev=(mk((n_workers,), jnp.float32) if abstract else
+                    jnp.full((n_workers,), opt.armijo.alpha0, jnp.float32)),
+        memory=jax.tree.map(mem_leaf, params) if needs_mem else (),
+        n_evals_ema=mk((n_workers,), jnp.float32),
+    )
+
+
+def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
+                        run_cfg: RunConfig) -> DistOptState:
+    """Shardings: leading dim over dp axes; remaining dims follow the param
+    pspec (so m^(k) is model-sharded exactly like its parameter)."""
+    dp = dp_axes_of(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    pspecs = param_pspecs(params)
+    mem_kind = ("pinned_host" if run_cfg.optimizer.ef_host_offload
+                else "device")
+
+    def mem_sh(ps):
+        return NamedSharding(mesh, P(dp_spec, *ps), memory_kind=mem_kind)
+
+    rep = NamedSharding(mesh, P())
+    vec = NamedSharding(mesh, P(dp_spec))
+    return DistOptState(
+        step=rep,
+        alpha_prev=vec,
+        memory=(jax.tree.map(mem_sh, pspecs)
+                if opt_state.memory != () else ()),
+        n_evals_ema=vec,
+    )
+
+
+# ===========================================================================
+# train step
+# ===========================================================================
+
+def build_train_step(model: Model, run_cfg: RunConfig, mesh):
+    """Returns (train_step, in_shardings, batch_sharding).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    """
+    cfg = model.cfg
+    opt = run_cfg.optimizer
+    dp = dp_axes_of(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    W = _n_workers(mesh)
+    micro = run_cfg.microbatches
+    stacked = None  # computed lazily from params inside
+
+    def local_loss(params, batch):
+        loss, _ = model.loss(params, batch)
+        return loss
+
+    def _local_steps_worker(params, opt_state, batch, mem, alpha_prev, ema):
+        """H local Armijo-SGD steps, then ONE EF-compressed exchange of the
+        accumulated model delta (paper §V future work; Qsparse-local [8])."""
+        H = run_cfg.optimizer.local_steps
+        assert micro == H, "local_steps requires microbatches == local_steps"
+        mbs = jax.tree.map(
+            lambda x: x.reshape(H, x.shape[0] // H, *x.shape[1:]), batch)
+
+        def one(carry, mb):
+            p_loc, amax, ev = carry
+            loss, g = jax.value_and_grad(local_loss)(p_loc, mb)
+            gsq = tree_sqnorm(g)
+            res = armijo_search(lambda p: local_loss(p, mb), p_loc, g,
+                                amax, opt.armijo, f0=loss, grad_sqnorm=gsq)
+            eta = opt.armijo.a_scale * res.alpha
+            p_loc = jax.tree.map(
+                lambda p, gg: (p.astype(jnp.float32)
+                               - eta * gg.astype(jnp.float32)).astype(p.dtype),
+                p_loc, g)
+            return (p_loc, next_alpha_max(res.alpha, opt.armijo),
+                    ev + res.n_evals.astype(jnp.float32)), (loss, res.alpha)
+
+        amax0 = next_alpha_max(alpha_prev, opt.armijo)
+        (p_end, amax_f, evals), (losses, alphas) = jax.lax.scan(
+            one, (params, amax0, jnp.float32(0.0)), mbs)
+
+        # accumulated local update (already eta-scaled) -> EF + exchange
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            params, p_end)
+        smask = model.stacked_mask(params)
+        updates, new_mem, wire = worker_compress_aggregate(
+            delta, mem, jnp.float32(1.0), opt.compressor, dp,
+            stacked_mask=smask)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+            params, updates)
+        metrics = {
+            "loss": jax.lax.pmean(jnp.mean(losses), dp),
+            "grad_sqnorm": jnp.float32(0.0),
+            "alpha": jax.lax.pmean(alphas[-1], dp),
+            "n_evals": jax.lax.pmean(evals / H, dp),
+            "wire_bytes": jax.lax.pmean(wire, dp),
+        }
+        new_state = DistOptState(
+            step=opt_state.step + 1,
+            alpha_prev=(amax_f / opt.armijo.omega)[None],
+            memory=jax.tree.map(lambda x: x[None], new_mem),
+            n_evals_ema=(0.9 * ema + 0.1 * evals / H)[None],
+        )
+        return new_params, new_state, metrics
+
+    def worker_fn(params, opt_state, batch):
+        # squeeze the per-worker leading axis of the optimizer state
+        mem = jax.tree.map(lambda x: x[0], opt_state.memory) \
+            if opt_state.memory != () else ()
+        alpha_prev = opt_state.alpha_prev[0]
+        ema = opt_state.n_evals_ema[0]
+
+        # ---- local iterations (Qsparse-local-style, beyond-paper) -------
+        if run_cfg.optimizer.local_steps > 1 and \
+                opt.kind in ("csgd_asss", "nonadaptive"):
+            return _local_steps_worker(params, opt_state, batch, mem,
+                                       alpha_prev, ema)
+
+        # ---- gradient over microbatches (accumulated) -------------------
+        if micro > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape(micro, x.shape[0] // micro, *x.shape[1:]),
+                batch)
+            probe = jax.tree.map(lambda x: x[0], mbs)
+
+            def acc(carry, mb):
+                l, g = jax.value_and_grad(local_loss)(params, mb)
+                cl, cg = carry
+                return (cl + l, jax.tree.map(jnp.add, cg, g)), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc, (jnp.float32(0.0), zero_g), mbs)
+            loss = loss_sum / micro
+            grads = jax.tree.map(lambda g: g / micro, grads)
+        else:
+            probe = batch
+            loss, grads = jax.value_and_grad(local_loss)(params, batch)
+
+        gsq = tree_sqnorm(grads)
+        metrics = {"loss": jax.lax.pmean(loss, dp),
+                   "grad_sqnorm": jax.lax.pmean(gsq, dp)}
+
+        # ---- step size --------------------------------------------------
+        if opt.kind in ("csgd_asss", "sls"):
+            amax = next_alpha_max(alpha_prev, opt.armijo)
+            res = armijo_search(lambda p: local_loss(p, probe), params,
+                                grads, amax, opt.armijo,
+                                grad_sqnorm=gsq)
+            eta = opt.armijo.a_scale * res.alpha
+            new_alpha = res.alpha
+            new_ema = 0.9 * ema + 0.1 * res.n_evals.astype(jnp.float32)
+            metrics["alpha"] = jax.lax.pmean(res.alpha, dp)
+            metrics["n_evals"] = jax.lax.pmean(
+                res.n_evals.astype(jnp.float32), dp)
+        else:
+            eta = jnp.float32(opt.eta)
+            new_alpha = alpha_prev
+            new_ema = ema
+            metrics["alpha"] = eta
+            metrics["n_evals"] = jnp.float32(0.0)
+
+        # ---- aggregate (compressed or dense) ----------------------------
+        if opt.kind in ("csgd_asss", "nonadaptive"):
+            smask = model.stacked_mask(params)
+            if opt.shard_local_topk:
+                # per-(layer, model-shard) top_k: nested manual-'model'
+                # region so selection runs on the local gradient shard and
+                # the only collective stays the small dp sparse all-gather.
+                pspecs = param_pspecs(params)
+                inner = jax.shard_map(
+                    lambda g, m2, e: worker_compress_aggregate(
+                        g, m2, e, opt.compressor, dp, stacked_mask=smask),
+                    mesh=jax.sharding.get_abstract_mesh(),  # nested: context
+                    in_specs=(pspecs, pspecs, P()),
+                    out_specs=(pspecs, pspecs, P()),
+                    axis_names={"model"}, check_vma=False)
+                updates, new_mem, wire = inner(grads, mem, eta)
+            else:
+                updates, new_mem, wire = worker_compress_aggregate(
+                    grads, mem, eta, opt.compressor, dp, stacked_mask=smask)
+            new_mem = jax.tree.map(lambda x: x[None], new_mem)
+        else:
+            updates, wire = dense_aggregate(grads, eta, dp)
+            new_mem = opt_state.memory
+        metrics["wire_bytes"] = jax.lax.pmean(wire, dp)
+
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+            params, updates)
+        new_state = DistOptState(
+            step=opt_state.step + 1,
+            alpha_prev=new_alpha[None],
+            memory=new_mem,
+            n_evals_ema=new_ema[None],
+        )
+        return new_params, new_state, metrics
+
+    # ---- specs ------------------------------------------------------------
+    lead = P(dp_spec)
+    rep = P()
+
+    def batch_spec_of(batch_tree):
+        return jax.tree.map(lambda _: P(dp_spec), batch_tree)
+
+    def make(params_like, batch_like):
+        state_in = DistOptState(
+            step=rep, alpha_prev=lead,
+            memory=(jax.tree.map(lambda _: lead, params_like)
+                    if opt.kind in ("csgd_asss", "nonadaptive") else ()),
+            n_evals_ema=lead)
+        metrics_spec = {k: rep for k in
+                        ("loss", "grad_sqnorm", "alpha", "n_evals",
+                         "wire_bytes")}
+        sm = jax.shard_map(
+            worker_fn, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: rep, params_like),
+                      state_in, batch_spec_of(batch_like)),
+            out_specs=(jax.tree.map(lambda _: rep, params_like),
+                       state_in, metrics_spec),
+            axis_names=set(dp), check_vma=False)
+        # outer jit: model-axis shardings
+        pspecs = param_pspecs(params_like)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+        opt_sh = opt_state_shardings(
+            init_opt_state(params_like, run_cfg, W, abstract=True),
+            params_like, mesh, run_cfg)
+        bsh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(dp_spec)), batch_like)
+        msh = {k: NamedSharding(mesh, P()) for k in
+               ("loss", "grad_sqnorm", "alpha", "n_evals", "wire_bytes")}
+        # donation of pinned_host-backed state trips an XLA SPMD RET_CHECK
+        # (side-effecting copy-to-host without sharding); skip it there.
+        donate = () if opt.ef_host_offload else (0, 1)
+        return jax.jit(sm,
+                       in_shardings=(psh, opt_sh, bsh),
+                       out_shardings=(psh, opt_sh, msh),
+                       donate_argnums=donate)
+
+    return make
+
+
+# ===========================================================================
+# serve steps
+# ===========================================================================
+
+def build_prefill_step(model: Model, run_cfg: RunConfig, mesh,
+                       shape: ShapeConfig, params_2d: bool = False):
+    """Batched prefill under auto pjit: batch over dp, TP from hints.
+
+    ``params_2d``: weights additionally sharded over the data axis (serving
+    memory optimization — see sharding.param_pspecs)."""
+    dp = dp_axes_of(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch)
+        return logits, cache
+
+    def make(params_like, batch_like):
+        pspecs = param_pspecs(params_like, two_d=params_2d)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+        bsh = jax.tree.map(lambda _: NamedSharding(mesh, P(dp_spec)),
+                           batch_like)
+        return jax.jit(prefill_step, in_shardings=(psh, bsh))
+    return make
+
+
+def decode_seq_axes(mesh, shape: ShapeConfig) -> tuple[str, ...]:
+    """Cache-seq sharding axes: 'model' normally; every axis for batch=1."""
+    if shape.global_batch == 1:
+        return tuple(mesh.axis_names)
+    return ("model",)
+
+
+def build_decode_step(model: Model, run_cfg: RunConfig, mesh,
+                      shape: ShapeConfig, params_2d: bool = False):
+    """One-token serve_step: new token against a seq_len KV cache."""
+    dp = dp_axes_of(mesh)
+    seq_axes = decode_seq_axes(mesh, shape)
+
+    def serve_step(params, token, cache, cur_len):
+        logits, cache = model.decode_step(params, token, cache, cur_len)
+        return logits, cache
+
+    def make(params_like, token_like, cache_like):
+        pspecs = param_pspecs(params_like, two_d=params_2d)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+        dp_spec = dp if len(dp) > 1 else dp[0]
+        tok_sh = NamedSharding(
+            mesh, P(dp_spec) if shape.global_batch > 1 else P())
+        cspecs = cache_pspecs(cache_like,
+                              dp if shape.global_batch > 1 else (), seq_axes)
+        csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                           is_leaf=lambda x: isinstance(x, P))
+        return jax.jit(serve_step,
+                       in_shardings=(psh, tok_sh, csh, NamedSharding(mesh, P())),
+                       out_shardings=None)
+    return make

@@ -1,0 +1,571 @@
+"""Decoder-only language models: dense / MoE / SSM (Mamba2, RWKV6) /
+hybrid (Zamba2) / VLM (cross-attn) — one scan-over-layers implementation.
+
+Layer parameters are *stacked* on a leading layer axis and driven by
+``jax.lax.scan`` (optionally ``jax.checkpoint``-rematerialized), so the HLO
+is one layer body regardless of depth — essential for the 80-combination
+dry-run compile budget and for per-layer gradient compression (the stacked
+leaves are compressed per layer, paper §IV-A).
+
+Three entry points per model:  ``loss``  (train),  ``prefill``  (batched
+context ingestion returning caches),  ``decode_step``  (one token against
+caches).  Caches are pytrees with stacked layer axes, scanned jointly with
+the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils import DP, TP, hint
+from . import attention as attn
+from . import moe as moe_mod
+from . import rwkv as rwkv_mod
+from . import ssm as ssm_mod
+from .layers import (dense, embed, init_dense, init_embed, init_lm_head,
+                     init_mlp, init_rms_norm, lm_head, mlp, rms_norm,
+                     softmax_xent)
+
+PyTree = Any
+
+
+def _stack_init(init_one, key, n: int):
+    """vmap an init function over n layer keys -> stacked params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_one)(keys)
+
+
+def _is_rwkv(cfg: ModelConfig) -> bool:
+    return cfg.name.startswith("rwkv")
+
+
+# ===========================================================================
+# per-layer blocks
+# ===========================================================================
+
+def _init_dense_block(cfg: ModelConfig, dtype):
+    def one(key):
+        ks = jax.random.split(key, 4)
+        blk = {
+            "attn_norm": init_rms_norm(cfg.d_model, dtype),
+            "attn": attn.init_attn(ks[0], cfg, dtype),
+            "mlp_norm": init_rms_norm(cfg.d_model, dtype),
+        }
+        if cfg.family == "moe":
+            blk["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            blk["mlp"] = init_mlp(ks[1], cfg, dtype=dtype)
+        return blk
+    return one
+
+
+def _dense_block(p, x, cfg: ModelConfig, *, pos=None, window=None):
+    """Pre-norm attn + (mlp|moe). Returns (x, kv, aux)."""
+    h, kv = attn.attention_block(p["attn"],
+                                 rms_norm(p["attn_norm"], x, cfg.norm_eps),
+                                 cfg, pos=pos, window=window)
+    x = x + h
+    hn = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe" or "moe" in p:
+        h2, aux = moe_mod.moe_block(p["moe"], hn, cfg)
+    else:
+        h2, aux = mlp(p["mlp"], hn), jnp.float32(0.0)
+    return x + h2, kv, aux
+
+
+def _dense_block_decode(p, x, kv_cache, cur_len, cfg: ModelConfig,
+                        window=None):
+    h, kv = attn.decode_attention_block(
+        p["attn"], rms_norm(p["attn_norm"], x, cfg.norm_eps),
+        kv_cache, cur_len, cfg, window=window)
+    x = x + h
+    hn = rms_norm(p["mlp_norm"], x, cfg.norm_eps)
+    if "moe" in p:
+        h2, _ = moe_mod.moe_block(p["moe"], hn, cfg, no_drop=True)
+    else:
+        h2 = mlp(p["mlp"], hn)
+    return x + h2, kv
+
+
+def _init_mamba_block(cfg: ModelConfig, dtype):
+    def one(key):
+        return {"norm": init_rms_norm(cfg.d_model, dtype),
+                "mamba": ssm_mod.init_mamba2(key, cfg, dtype)}
+    return one
+
+
+def _mamba_block(p, x, cfg, state=None, return_state=False):
+    h, st = ssm_mod.mamba2_block(p["mamba"],
+                                 rms_norm(p["norm"], x, cfg.norm_eps),
+                                 cfg, state=state, return_state=return_state)
+    return x + h, st
+
+
+def _mamba_block_decode(p, x, state, cfg):
+    h, st = ssm_mod.mamba2_decode(p["mamba"],
+                                  rms_norm(p["norm"], x, cfg.norm_eps),
+                                  state, cfg)
+    return x + h, st
+
+
+def _init_rwkv_block(cfg: ModelConfig, dtype):
+    def one(key):
+        return {"norm1": init_rms_norm(cfg.d_model, dtype),
+                "norm2": init_rms_norm(cfg.d_model, dtype),
+                "rwkv": rwkv_mod.init_rwkv6(key, cfg, dtype)}
+    return one
+
+
+def _rwkv_block(p, x, cfg, state: rwkv_mod.RWKVState):
+    h, state = rwkv_mod.time_mix(p["rwkv"],
+                                 rms_norm(p["norm1"], x, cfg.norm_eps),
+                                 cfg, state)
+    x = x + h
+    h, state = rwkv_mod.channel_mix(p["rwkv"],
+                                    rms_norm(p["norm2"], x, cfg.norm_eps),
+                                    state)
+    return x + h, state
+
+
+def _init_cross_block(cfg: ModelConfig, dtype):
+    def one(key):
+        ks = jax.random.split(key, 2)
+        return {
+            "norm": init_rms_norm(cfg.d_model, dtype),
+            "cross": attn.init_cross_attn(ks[0], cfg, dtype),
+            "mlp_norm": init_rms_norm(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[1], cfg, dtype=dtype),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+    return one
+
+
+def _cross_block(p, x, memory, cfg, kv=None):
+    """Gated cross-attn block (llama-3.2-vision style)."""
+    h, kv = attn.cross_attention_block(
+        p["cross"], rms_norm(p["norm"], x, cfg.norm_eps), memory, cfg, kv=kv)
+    x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+    h2 = mlp(p["mlp"], rms_norm(p["mlp_norm"], x, cfg.norm_eps))
+    return x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * h2, kv
+
+
+# ===========================================================================
+# parameter init
+# ===========================================================================
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> PyTree:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_blocks, k_head, k_extra = jax.random.split(key, 4)
+    params: dict[str, Any] = {
+        "embed": init_embed(k_emb, cfg, dtype),
+        "final_norm": init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_lm_head(k_head, cfg, dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        params["blocks"] = _stack_init(_init_dense_block(cfg, dtype),
+                                       k_blocks, cfg.n_layers)
+    elif fam == "ssm" and _is_rwkv(cfg):
+        params["blocks"] = _stack_init(_init_rwkv_block(cfg, dtype),
+                                       k_blocks, cfg.n_layers)
+    elif fam == "ssm":
+        params["blocks"] = _stack_init(_init_mamba_block(cfg, dtype),
+                                       k_blocks, cfg.n_layers)
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        groups, tail = divmod(cfg.n_layers, every)
+        stacked = _stack_init(_init_mamba_block(cfg, dtype),
+                              k_blocks, groups * every)
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape(groups, every, *x.shape[1:]), stacked)
+        if tail:
+            params["tail"] = _stack_init(_init_mamba_block(cfg, dtype),
+                                         jax.random.fold_in(k_blocks, 1), tail)
+        ks = jax.random.split(k_extra, 2)
+        params["shared"] = {
+            "attn_norm": init_rms_norm(cfg.d_model, dtype),
+            "attn": attn.init_attn(ks[0], cfg, dtype),
+            "mlp_norm": init_rms_norm(cfg.d_model, dtype),
+            "mlp": init_mlp(ks[1], cfg, dtype=dtype),
+        }
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        groups = cfg.n_layers // every
+        stacked = _stack_init(_init_dense_block(cfg, dtype),
+                              k_blocks, cfg.n_layers)
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape(groups, every, *x.shape[1:]), stacked)
+        params["cross"] = _stack_init(_init_cross_block(cfg, dtype),
+                                      k_extra, groups)
+    else:
+        raise ValueError(f"init_params: family {fam} handled in encdec.py")
+    return params
+
+
+def stacked_mask(params: PyTree) -> PyTree:
+    """True for leaves with a leading layer axis (per-layer compression)."""
+    def mark(path, leaf):
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        return top in ("blocks", "cross", "tail")
+    return jax.tree_util.tree_map_with_path(mark, params)
+
+
+# ===========================================================================
+# forward passes
+# ===========================================================================
+
+def _maybe_remat(f, cfg: ModelConfig):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _backbone_train(params, x, cfg: ModelConfig, batch) -> tuple[jax.Array, jax.Array]:
+    """Residual-stream forward over all layers. x: (B, S, D)."""
+    fam = cfg.family
+    aux0 = jnp.float32(0.0)
+    window = cfg.sliding_window or None
+
+    def sp(h):
+        # Megatron-style sequence parallelism: the residual stream carried
+        # between blocks (and saved by remat) lives seq-sharded over the
+        # model axis; the partitioner inserts all-gather at attention/MLP
+        # entry and reduce-scatter at exit instead of full all-reduces.
+        return hint(h, DP, TP, None) if cfg.seq_parallel else h
+
+    if fam in ("dense", "moe"):
+        def body(carry, lp):
+            h, aux = carry
+            h, _, a = _dense_block(lp, sp(h), cfg, window=window)
+            return (sp(h), aux + a), None
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, aux0),
+                                   params["blocks"])
+        return x, aux
+
+    if fam == "ssm" and _is_rwkv(cfg):
+        B = x.shape[0]
+        def body(carry, lp):
+            h, aux = carry
+            st = rwkv_mod.init_rwkv_state(cfg, B)
+            h, _ = _rwkv_block(lp, sp(h), cfg, st)
+            return (sp(h), aux), None
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, aux0),
+                                   params["blocks"])
+        return x, aux
+
+    if fam == "ssm":
+        def body(carry, lp):
+            h, aux = carry
+            h, _ = _mamba_block(lp, sp(h), cfg)
+            return (sp(h), aux), None
+        (x, aux), _ = jax.lax.scan(_maybe_remat(body, cfg), (x, aux0),
+                                   params["blocks"])
+        return x, aux
+
+    if fam == "hybrid":
+        shared = params["shared"]
+
+        def group(carry, gp):
+            h, aux = carry
+            def inner(c, lp):
+                hh, _ = _mamba_block(lp, sp(c), cfg)
+                return sp(hh), None
+            h, _ = jax.lax.scan(inner, h, gp)
+            h, _, a = _dense_block(
+                {**shared, "mlp": shared["mlp"]}, h, cfg, window=window)
+            return (h, aux + a), None
+        (x, aux), _ = jax.lax.scan(_maybe_remat(group, cfg), (x, aux0),
+                                   params["blocks"])
+        if "tail" in params:
+            def inner(c, lp):
+                hh, _ = _mamba_block(lp, c, cfg)
+                return hh, None
+            x, _ = jax.lax.scan(inner, x, params["tail"])
+        return x, aux
+
+    if fam == "vlm":
+        memory = batch["image_embed"].astype(x.dtype)
+        memory = hint(memory, DP, None, None)
+
+        def group(carry, gp):
+            h, aux = carry
+            self_p, cross_p = gp
+            def inner_body(c, lp):
+                hh, _, a = _dense_block(lp, sp(c[0]), cfg, window=window)
+                return (sp(hh), c[1] + a), None
+            (h, aux), _ = jax.lax.scan(inner_body, (h, aux), self_p)
+            h, _ = _cross_block(cross_p, h, memory, cfg)
+            return (h, aux), None
+        (x, aux), _ = jax.lax.scan(_maybe_remat(group, cfg), (x, aux0),
+                                   (params["blocks"], params["cross"]))
+        return x, aux
+
+    raise ValueError(fam)
+
+
+def loss_fn(params: PyTree, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Next-token CE. batch["tokens"]: (B, S) int32."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    x = embed(params["embed"], inputs, cfg)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    x, aux = _backbone_train(params, x, cfg, batch)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(params.get("lm_head", {"w": params["embed"]["w"].T}), x, cfg.vocab_size)
+    ce = softmax_xent(logits, targets)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+class DecodeCache(NamedTuple):
+    """Family-polymorphic cache container; unused fields are () sentinels."""
+    kv: Any = ()          # stacked KVCache (dense/moe/vlm self / hybrid shared)
+    ssm: Any = ()         # stacked SSMState / RWKVState
+    tail_ssm: Any = ()    # hybrid tail layers
+    cross_kv: Any = ()    # static memory K/V (vlm / encdec)
+
+
+def init_cache(cfg: ModelConfig, B: int, capacity: int,
+               dtype=None) -> DecodeCache:
+    """Zero caches with seq capacity ``capacity`` (abstract-safe)."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    hd = cfg.hd
+    fam = cfg.family
+
+    def kv_stack(n, s=None):
+        shape = (n, B, capacity, cfg.n_kv_heads, hd) if s is None \
+            else (n, B, s, cfg.n_kv_heads, hd)
+        if cfg.kv_cache_dtype == "int8":
+            sshape = shape[:-1] + (1,)
+            return attn.KVCache(k=jnp.zeros(shape, jnp.int8),
+                                v=jnp.zeros(shape, jnp.int8),
+                                k_scale=jnp.zeros(sshape, jnp.float32),
+                                v_scale=jnp.zeros(sshape, jnp.float32))
+        return attn.KVCache(k=jnp.zeros(shape, dtype),
+                            v=jnp.zeros(shape, dtype))
+
+    if fam in ("dense", "moe"):
+        return DecodeCache(kv=kv_stack(cfg.n_layers))
+    if fam == "ssm" and _is_rwkv(cfg):
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            rwkv_mod.init_rwkv_state(cfg, B))
+        return DecodeCache(ssm=states)
+    if fam == "ssm":
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(),
+            ssm_mod.init_ssm_state(cfg, B, dtype))
+        return DecodeCache(ssm=states)
+    if fam == "hybrid":
+        every = cfg.shared_attn_every
+        groups, tail = divmod(cfg.n_layers, every)
+        st1 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (groups, every) + x.shape).copy(),
+            ssm_mod.init_ssm_state(cfg, B, dtype))
+        st2 = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (tail,) + x.shape).copy(),
+            ssm_mod.init_ssm_state(cfg, B, dtype)) if tail else ()
+        return DecodeCache(kv=kv_stack(groups), ssm=st1, tail_ssm=st2)
+    if fam == "vlm":
+        groups = cfg.n_layers // cfg.cross_attn_every
+        cross = attn.KVCache(
+            k=jnp.zeros((groups, B, cfg.n_patches, cfg.n_kv_heads, hd), dtype),
+            v=jnp.zeros((groups, B, cfg.n_patches, cfg.n_kv_heads, hd), dtype))
+        return DecodeCache(
+            kv=jax.tree.map(
+                lambda x: x.reshape(groups, cfg.cross_attn_every, *x.shape[1:]),
+                kv_stack(cfg.n_layers)),
+            cross_kv=cross)
+    raise ValueError(fam)
+
+
+def shard_cache(cache: DecodeCache, seq_axes) -> DecodeCache:
+    """Apply seq-dim sharding hints to KV caches (decode layout)."""
+    def kv_leaf(x):
+        if not hasattr(x, "ndim") or x.ndim < 5:
+            return x
+        spec = [None] * x.ndim
+        spec[-3] = seq_axes      # the capacity/seq dim of (..., B, S, H, hd)
+        spec[-4] = DP if x.shape[-4] > 1 else None
+        return hint(x, *spec)
+    kv = jax.tree.map(kv_leaf, cache.kv) if cache.kv != () else ()
+    return cache._replace(kv=kv)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params: PyTree, batch: dict, cfg: ModelConfig,
+            capacity: int | None = None) -> tuple[jax.Array, DecodeCache]:
+    """Ingest (B, S) context; return last-position logits + caches.
+
+    Caches are allocated at ``capacity`` (default S) along seq.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    capacity = capacity or S
+    x = embed(params["embed"], tokens, cfg)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    fam = cfg.family
+    window = cfg.sliding_window or None
+
+    def pad_kv(kv: attn.KVCache) -> attn.KVCache:
+        kv = attn.maybe_quantize_cache(kv, cfg)
+        pad = capacity - kv.k.shape[1]
+        if pad <= 0:
+            return kv
+
+        def p4(x):
+            if not hasattr(x, "ndim"):
+                return x
+            return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return attn.KVCache(k=p4(kv.k), v=p4(kv.v),
+                            k_scale=p4(kv.k_scale), v_scale=p4(kv.v_scale))
+
+    if fam in ("dense", "moe"):
+        def body(h, lp):
+            h, kv, _ = _dense_block(lp, h, cfg, window=window)
+            return h, pad_kv(kv)
+        x, kvs = jax.lax.scan(body, x, params["blocks"])
+        cache = DecodeCache(kv=kvs)
+    elif fam == "ssm" and _is_rwkv(cfg):
+        def body(h, lp):
+            st = rwkv_mod.init_rwkv_state(cfg, B)
+            h, st = _rwkv_block(lp, h, cfg, st)
+            return h, st
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        cache = DecodeCache(ssm=states)
+    elif fam == "ssm":
+        def body(h, lp):
+            h, st = _mamba_block(lp, h, cfg, return_state=True)
+            return h, st
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        cache = DecodeCache(ssm=states)
+    elif fam == "hybrid":
+        shared = params["shared"]
+        def group(h, gp):
+            def inner(c, lp):
+                hh, st = _mamba_block(lp, c, cfg, return_state=True)
+                return hh, st
+            h, sts = jax.lax.scan(inner, h, gp)
+            h, kv, _ = _dense_block(shared, h, cfg, window=window)
+            return h, (sts, pad_kv(kv))
+        x, (ssm_states, kvs) = jax.lax.scan(group, x, params["blocks"])
+        tail_states = ()
+        if "tail" in params:
+            def inner(c, lp):
+                hh, st = _mamba_block(lp, c, cfg, return_state=True)
+                return hh, st
+            x, tail_states = jax.lax.scan(inner, x, params["tail"])
+        cache = DecodeCache(kv=kvs, ssm=ssm_states, tail_ssm=tail_states)
+    elif fam == "vlm":
+        memory = batch["image_embed"].astype(x.dtype)
+        def group(h, gp):
+            self_p, cross_p = gp
+            def inner(c, lp):
+                hh, kv, _ = _dense_block(lp, c, cfg, window=window)
+                return hh, pad_kv(kv)
+            h, kvs = jax.lax.scan(inner, h, self_p)
+            h, ckv = _cross_block(cross_p, h, memory, cfg)
+            return h, (kvs, ckv)
+        x, (kvs, cross_kvs) = jax.lax.scan(group, x,
+                                           (params["blocks"], params["cross"]))
+        cache = DecodeCache(kv=kvs, cross_kv=cross_kvs)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    logits = lm_head(params.get("lm_head", {"w": params["embed"]["w"].T}), x, cfg.vocab_size)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(params: PyTree, token: jax.Array, cache: DecodeCache,
+                cur_len: jax.Array, cfg: ModelConfig,
+                window: int | None = None) -> tuple[jax.Array, DecodeCache]:
+    """One decode step. token: (B, 1) int32; cur_len: history length (the
+    new token is written at cache index cur_len). Returns (logits, cache)."""
+    x = embed(params["embed"], token, cfg)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    fam = cfg.family
+    window = window or (cfg.sliding_window or None)
+
+    if fam in ("dense", "moe"):
+        def body(h, inp):
+            lp, kv = inp
+            h, kv = _dense_block_decode(lp, h, kv, cur_len, cfg, window=window)
+            return h, kv
+        x, kvs = jax.lax.scan(body, x, (params["blocks"], cache.kv))
+        cache = cache._replace(kv=kvs)
+    elif fam == "ssm" and _is_rwkv(cfg):
+        def body(h, inp):
+            lp, st = inp
+            h, st = _rwkv_block(lp, h, cfg, st)
+            return h, st
+        x, states = jax.lax.scan(body, x, (params["blocks"], cache.ssm))
+        cache = cache._replace(ssm=states)
+    elif fam == "ssm":
+        def body(h, inp):
+            lp, st = inp
+            h, st = _mamba_block_decode(lp, h, st, cfg)
+            return h, st
+        x, states = jax.lax.scan(body, x, (params["blocks"], cache.ssm))
+        cache = cache._replace(ssm=states)
+    elif fam == "hybrid":
+        shared = params["shared"]
+        def group(h, inp):
+            gp, sts, kv = inp
+            def inner(c, i2):
+                lp, st = i2
+                hh, st = _mamba_block_decode(lp, c, st, cfg)
+                return hh, st
+            h, sts = jax.lax.scan(inner, h, (gp, sts))
+            h, kv = _dense_block_decode(shared, h, kv, cur_len, cfg,
+                                        window=window)
+            return h, (sts, kv)
+        x, (ssm_states, kvs) = jax.lax.scan(
+            group, x, (params["blocks"], cache.ssm, cache.kv))
+        tail_states = cache.tail_ssm
+        if "tail" in params:
+            def inner(c, i2):
+                lp, st = i2
+                hh, st = _mamba_block_decode(lp, c, st, cfg)
+                return hh, st
+            x, tail_states = jax.lax.scan(inner, x,
+                                          (params["tail"], cache.tail_ssm))
+        cache = cache._replace(kv=kvs, ssm=ssm_states, tail_ssm=tail_states)
+    elif fam == "vlm":
+        def group(h, inp):
+            (self_p, cross_p), kvs, ckv = inp
+            def inner(c, i2):
+                lp, kv = i2
+                hh, kv = _dense_block_decode(lp, c, kv, cur_len, cfg,
+                                             window=window)
+                return hh, kv
+            h, kvs = jax.lax.scan(inner, h, (self_p, kvs))
+            h, _ = _cross_block(cross_p, h, None, cfg,
+                                kv=attn.KVCache(k=ckv.k, v=ckv.v))
+            return h, kvs
+        x, kvs = jax.lax.scan(
+            group, x, ((params["blocks"], params["cross"]), cache.kv,
+                       cache.cross_kv))
+        cache = cache._replace(kv=kvs)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_head(params.get("lm_head", {"w": params["embed"]["w"].T}), x, cfg.vocab_size)
+    return logits, cache

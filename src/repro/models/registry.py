@@ -1,0 +1,81 @@
+"""Model registry: uniform API over decoder-only and enc-dec families.
+
+``build_model(cfg)`` returns a ``Model`` with ``init / loss / prefill /
+decode_step / init_cache / input_specs`` — the launcher, dry-run, tests and
+benchmarks all go through this object.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from . import encdec, lm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], PyTree]
+    loss: Callable[[PyTree, dict], tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_cache: Callable[..., Any]
+    stacked_mask: Callable[[PyTree], PyTree]
+
+    def input_specs(self, shape: ShapeConfig,
+                    local_batch: int | None = None) -> dict:
+        """ShapeDtypeStruct stand-ins for every model input of a shape.
+
+        For train/prefill the batch dim is the *global* batch (the launcher
+        shards it); ``local_batch`` overrides (inside shard_map bodies).
+        """
+        cfg = self.cfg
+        B = local_batch or shape.global_batch
+        S = shape.seq_len
+        f = jnp.dtype(cfg.compute_dtype)
+        i = jnp.int32
+        sd = jax.ShapeDtypeStruct
+
+        if shape.kind in ("train", "prefill"):
+            if cfg.family == "encdec":
+                return {"src_embed": sd((B, S // 2, cfg.d_model), f),
+                        "tokens": sd((B, S // 2), i)}
+            spec = {"tokens": sd((B, S), i)}
+            if cfg.family == "vlm":
+                spec["image_embed"] = sd((B, cfg.n_patches, cfg.d_model), f)
+            return spec
+        # decode: one token + cache of S
+        spec = {"token": sd((B, 1), i)}
+        return spec
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(cfg, key),
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg),
+            prefill=lambda p, b, **kw: encdec.prefill(p, b, cfg, **kw),
+            decode_step=lambda p, t, c, n, **kw: encdec.decode_step(
+                p, t, c, n, cfg, **kw),
+            init_cache=lambda B, capacity, s_enc=None, dtype=None:
+                encdec.init_cache(cfg, B, capacity, s_enc or capacity, dtype),
+            stacked_mask=lm.stacked_mask,
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init_params(cfg, key),
+        loss=lambda p, b: lm.loss_fn(p, b, cfg),
+        prefill=lambda p, b, **kw: lm.prefill(p, b, cfg, **kw),
+        decode_step=lambda p, t, c, n, **kw: lm.decode_step(
+            p, t, c, n, cfg, **kw),
+        init_cache=lambda B, capacity, dtype=None, **kw:
+            lm.init_cache(cfg, B, capacity, dtype),
+        stacked_mask=lm.stacked_mask,
+    )

@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode.  [Dao & Gu '24, as used by Zamba2, arXiv:2411.15242]
+
+State-space semantics per head h with scalar decay A_h < 0:
+
+    dA_t = exp(dt_t * A)                  (per-token decay)
+    S_t  = dA_t * S_{t-1} + dt_t * B_t (x) x_t     (S: (hd, N))
+    y_t  = C_t . S_t + D_skip * x_t
+
+Train/prefill uses the chunked formulation (intra-chunk quadratic attention-
+like term + inter-chunk state scan over ``seq/chunk`` steps); TPU-wise, the
+intra-chunk einsums are MXU matmuls of shape (chunk x chunk) and the scan
+carries only the (H, hd, N) state — the sequential dependency is seq/chunk
+long, not seq long.  Heads are tensor-parallel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils import DP, TP, hint
+from .layers import he_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, K-1, d_conv_in)  rolling conv window
+    ssm: jax.Array     # (B, H, hd, N)        recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    d_in, nh, N, hd = _dims(cfg)
+    d_conv_in = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": {"w": he_init(ks[0], (D, 2 * d_in + 2 * N + nh), dtype)},
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_conv_in))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_conv_in,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"w": jnp.ones((d_in,), dtype)},
+        "out_proj": {"w": he_init(ks[3], (d_in, D), dtype)},
+    }
+
+
+def _causal_conv(xBC, w, b, state=None):
+    """Depthwise causal conv over seq. xBC: (B, L, Cc); w: (K, Cc).
+
+    If ``state`` (B, K-1, Cc) is given, it is the rolling history (decode /
+    chunked prefill continuation); returns (out, new_state)."""
+    B, L, Cc = xBC.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, Cc), xBC.dtype)
+    full = jnp.concatenate([state, xBC], axis=1)           # (B, L+K-1, Cc)
+    out = jnp.zeros((B, L, Cc), jnp.float32)
+    for i in range(K):                                      # K=4: unrolled taps
+        out = out + full[:, i:i + L].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = full[:, L:]
+    return jax.nn.silu(out).astype(xBC.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B, L, H, P); dt: (B, L, H); A: (H,) (negative); Bm, Cm: (B, L, N).
+    Returns (y: (B, L, H, P), final_state: (B, H, P, N)).
+    """
+    Bb, L, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = max(1, L // chunk)
+    cl = L // nc
+    assert nc * cl == L, (L, chunk)
+
+    xr = x.reshape(Bb, nc, cl, H, P)
+    dtr = dt.reshape(Bb, nc, cl, H)
+    Br = Bm.reshape(Bb, nc, cl, N)
+    Cr = Cm.reshape(Bb, nc, cl, N)
+
+    dA = dtr * A                                   # (B, nc, cl, H), negative
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk log decay
+    total = cum[:, :, -1:, :]                      # (B, nc, 1, H)
+
+    dx = dtr[..., None] * xr                       # dt * x
+
+    # intra-chunk: y[i] += sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dx_j
+    li = cum[:, :, :, None, :]                     # (B,nc,cl_i,1,H)
+    lj = cum[:, :, None, :, :]                     # (B,nc,1,cl_j,H)
+    mask = jnp.tril(jnp.ones((cl, cl), bool))[None, None, :, :, None]
+    # mask in log space BEFORE exp: exp(positive) for j>i would overflow and
+    # poison the backward pass with inf*0 = nan.
+    logdecay = jnp.where(mask, li - lj, -1e30)
+    decay = jnp.exp(logdecay)                      # (B,nc,i,j,H)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr.astype(jnp.float32),
+                    Br.astype(jnp.float32))        # (B,nc,i,j)
+    att = cb[..., None] * decay                    # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att,
+                         dx.astype(jnp.float32))
+
+    # chunk-final states: S_c = sum_j exp(total - cum_j) B_j (x) dx_j
+    sdecay = jnp.exp(total - cum)                  # (B,nc,cl,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", sdecay,
+                         Br.astype(jnp.float32), dx.astype(jnp.float32))
+
+    # inter-chunk scan: S = exp(total_c) * S_prev + S_chunk
+    tot_t = jnp.exp(total[:, :, 0, :])             # (B, nc, H)
+
+    def scan_fn(S, inp):
+        t, sc = inp                                # t: (B,H); sc: (B,H,P,N)
+        S_new = S * t[..., None, None] + sc
+        return S_new, S                            # emit state *entering* chunk
+
+    S0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bb, H, P, N), jnp.float32))
+    S_final, S_enter = jax.lax.scan(
+        scan_fn, S0, (tot_t.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    S_enter = S_enter.transpose(1, 0, 2, 3, 4)     # (B, nc, H, P, N)
+
+    # inter-chunk contribution: y[i] += exp(cum_i) * C_i . S_enter
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp", jnp.exp(cum),
+                         Cr.astype(jnp.float32), S_enter)
+    y = (y_intra + y_inter).reshape(Bb, L, H, P)
+    return y, S_final
+
+
+def mamba2_block(p, x, cfg: ModelConfig, state: SSMState | None = None,
+                 return_state: bool = False):
+    """x: (B, L, D) -> (y, new_state|None). Full-sequence path."""
+    B, L, D = x.shape
+    d_in, nh, N, hd = _dims(cfg)
+    proj = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    conv_state = state.conv if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xs = hint(xs.reshape(B, L, nh, hd), DP, None, TP, None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, S = ssd_chunked(xs, dt, A, Bm, Cm, min(cfg.ssm_chunk, L),
+                       init_state=state.ssm if state is not None else None)
+    y = y + p["D_skip"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = hint(y @ p["out_proj"]["w"].astype(x.dtype), DP, None, None)
+    if return_state:
+        return out, SSMState(conv=new_conv, ssm=S)
+    return out, None
+
+
+def mamba2_decode(p, x, state: SSMState, cfg: ModelConfig):
+    """One-token recurrence. x: (B, 1, D). Returns (y, new_state)."""
+    B, _, D = x.shape
+    d_in, nh, N, hd = _dims(cfg)
+    proj = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], state.conv)
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                       # (B, H)
+    dx = dt[..., None] * xs.astype(jnp.float32)                # (B, H, P)
+    S = state.ssm * dA[..., None, None] + \
+        jnp.einsum("bn,bhp->bhpn", Bm[:, 0].astype(jnp.float32), dx)
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), S)
+    y = y + p["D_skip"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"]["w"].astype(x.dtype)
+    return out, SSMState(conv=new_conv, ssm=S)
+
+
+def init_ssm_state(cfg: ModelConfig, B: int, dtype) -> SSMState:
+    d_in, nh, N, hd = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((B, cfg.ssm_conv - 1, d_in + 2 * N), dtype),
+        ssm=jnp.zeros((B, nh, hd, N), jnp.float32),
+    )

@@ -1,0 +1,23 @@
+"""Shared fixtures. NOTE: no XLA device-count flags here — smoke tests and
+benches must see 1 device (the dry-run sets its own flags in-process, and
+distributed tests spawn subprocesses with their own env)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _f32_default():
+    # deterministic, CPU-friendly numerics for tests
+    yield
+
+
+def tree_allclose(a, b, **kw):
+    oks = jax.tree.map(lambda x, y: np.allclose(x, y, **kw), a, b)
+    return all(jax.tree.leaves(oks))

@@ -1,0 +1,115 @@
+"""Armijo step-size search with scaling (Algorithm 1 + Theorem 15)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ArmijoConfig, armijo_search, next_alpha_max
+
+
+def quad_loss(w):
+    return 0.5 * jnp.sum(w ** 2)
+
+
+def test_condition_satisfied(key):
+    w = jax.random.normal(key, (32,))
+    g = jax.grad(quad_loss)(w)
+    cfg = ArmijoConfig(sigma=0.1)
+    res = armijo_search(quad_loss, w, g, jnp.float32(10.0), cfg)
+    f0 = quad_loss(w)
+    f_after = quad_loss(w - res.alpha * g)
+    assert bool(res.accepted)
+    assert float(f_after) <= float(f0 - cfg.sigma * res.alpha
+                                   * jnp.sum(g ** 2)) + 1e-6
+
+
+def test_alpha_lower_bound():
+    """Lemma 9: accepted alpha >= rho * 2(1-sigma)/L (L=1 quadratic)."""
+    cfg = ArmijoConfig(sigma=0.1, rho=0.8)
+    w = jnp.ones((8,))
+    g = jax.grad(quad_loss)(w)
+    res = armijo_search(quad_loss, w, g, jnp.float32(100.0), cfg)
+    assert float(res.alpha) >= cfg.rho * 2 * (1 - cfg.sigma) - 1e-6
+
+
+def test_accepts_alpha_max_when_valid():
+    cfg = ArmijoConfig(sigma=0.1)
+    w = jnp.ones((8,))
+    g = jax.grad(quad_loss)(w)
+    res = armijo_search(quad_loss, w, g, jnp.float32(0.5), cfg)
+    assert float(res.alpha) == pytest.approx(0.5)
+    assert int(res.n_evals) == 1
+
+
+def test_alpha_max_growth():
+    cfg = ArmijoConfig(omega=1.2)
+    assert float(next_alpha_max(jnp.float32(0.1), cfg)) == pytest.approx(0.12)
+
+
+def test_scaled_gd_convex_rate():
+    """Theorem 15: scaled Armijo GD achieves O(1/T) on a convex quadratic
+    for sigma < 0.5 (where the unscaled theory does not apply)."""
+    cfg = ArmijoConfig(sigma=0.1, a_scale=0.15)  # a < 2*sigma
+    scales = 2.0 ** -jnp.arange(1, 11)
+
+    def f(w):
+        return jnp.sum(scales * w ** 2)
+
+    w = jnp.ones((10,))
+    losses = []
+    alpha_max = jnp.float32(cfg.alpha0)
+    for t in range(200):
+        g = jax.grad(f)(w)
+        res = armijo_search(f, w, g, alpha_max, cfg)
+        w = w - cfg.a_scale * res.alpha * g
+        alpha_max = next_alpha_max(res.alpha, cfg)
+        losses.append(float(f(w)))
+    assert losses[-1] < 1e-3
+    # O(1/T): f(x_T) * T bounded
+    assert losses[-1] * 200 < losses[0] * 10
+
+
+def test_scaling_beats_unscaled_on_asymmetric():
+    """Paper Fig. 5b: on sum x_i^2/2^i, scaled GD converges much faster
+    than unscaled GD with the same search — without scaling the accepted
+    step is pinned at the steepest direction's 2/L stability cap (~1.92
+    here), while scaling lets the search return alpha 10-30x larger for
+    the flat directions.  The gap grows with T (paper: orders of magnitude
+    by ~10k iters); at T=1000 we assert >=5x."""
+    scales = 2.0 ** -jnp.arange(1, 11)
+
+    def f(w):
+        return jnp.sum(scales * w ** 2)
+
+    def run(a_scale, T=1000):
+        cfg = ArmijoConfig(sigma=0.1, a_scale=a_scale)
+
+        @jax.jit
+        def step(w, amax):
+            g = jax.grad(f)(w)
+            res = armijo_search(f, w, g, amax, cfg)
+            return (w - a_scale * res.alpha * g,
+                    next_alpha_max(res.alpha, cfg))
+
+        w = jnp.ones((10,))
+        amax = jnp.float32(cfg.alpha0)
+        for _ in range(T):
+            w, amax = step(w, amax)
+        return float(f(w))
+
+    scaled = run(0.15)     # a = 1.5*sigma (paper's appendix setting)
+    unscaled = run(1.0)
+    assert scaled < unscaled * 0.2, (scaled, unscaled)
+
+
+def test_max_backtracks_cap():
+    cfg = ArmijoConfig(max_backtracks=3)
+
+    def bad_loss(w):  # never satisfies sufficient decrease w/ huge grad lie
+        return jnp.sum(w ** 2) * 0 + 1.0
+
+    w = jnp.ones((4,))
+    g = jnp.ones((4,)) * 100.0
+    res = armijo_search(bad_loss, w, g, jnp.float32(1.0), cfg)
+    assert int(res.n_evals) <= cfg.max_backtracks + 1
+    assert not bool(res.accepted)

@@ -1,0 +1,94 @@
+"""Unit tests for the top_k / block-local compression operators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Compressor, block_threshold, contraction_gamma,
+                        sparse_to_dense, threshold_select, topk_select,
+                        tree_wire_bytes)
+
+
+def test_topk_selects_largest_magnitudes(key):
+    x = jax.random.normal(key, (1000,))
+    s = topk_select(x, 10)
+    dense = sparse_to_dense(s)
+    kept = np.sort(np.abs(np.asarray(x)))[-10:]
+    np.testing.assert_allclose(np.sort(np.abs(np.asarray(s.values))), kept,
+                               rtol=1e-6)
+    # kept values preserved exactly (biased operator, eq. (3))
+    nz = np.nonzero(np.asarray(dense))[0]
+    assert len(nz) == 10
+    np.testing.assert_array_equal(np.asarray(dense)[nz],
+                                  np.asarray(x)[nz])
+
+
+def test_topk_k_greater_than_d(key):
+    x = jax.random.normal(key, (5,))
+    s = topk_select(x, 10)
+    np.testing.assert_array_equal(np.asarray(sparse_to_dense(s)),
+                                  np.asarray(x))
+
+
+def test_small_leaves_uncompressed(key):
+    comp = Compressor(gamma=0.01)
+    x = jax.random.normal(key, (999,))      # < MIN_COMPRESS_SIZE
+    sent, resid = comp.compress_dense(x)
+    np.testing.assert_array_equal(np.asarray(sent), np.asarray(x))
+    assert float(jnp.sum(jnp.abs(resid))) == 0.0
+
+
+def test_compress_dense_identity(key):
+    """sent + residual == input, exactly (EF bookkeeping)."""
+    comp = Compressor(gamma=0.05)
+    x = jax.random.normal(key, (4096,))
+    sent, resid = comp.compress_dense(x)
+    np.testing.assert_allclose(np.asarray(sent + resid), np.asarray(x),
+                               atol=1e-7)
+    assert int(jnp.sum(sent != 0)) == comp.k_for(4096)
+
+
+@pytest.mark.parametrize("gamma", [0.01, 0.1, 0.5])
+def test_contraction_lemma7(key, gamma):
+    """||x - top_k(x)||^2 <= (1-gamma)||x||^2 (paper Lemma 7)."""
+    comp = Compressor(gamma=gamma)
+    for i in range(5):
+        x = jax.random.normal(jax.random.fold_in(key, i), (2048,))
+        sent, resid = comp.compress_dense(x)
+        lhs = float(jnp.sum(resid ** 2))
+        rhs = (1 - comp.k_for(2048) / 2048) * float(jnp.sum(x ** 2))
+        assert lhs <= rhs + 1e-5
+
+
+def test_block_threshold_keeps_about_gamma(key):
+    x = jax.random.normal(key, (8192,))
+    tau = block_threshold(x, gamma=0.05, block=512)
+    kept = int(jnp.sum(jnp.abs(x) >= tau))
+    assert 0.05 * 8192 * 0.5 <= kept <= 0.05 * 8192 * 2.5
+
+
+def test_block_topk_sparse_wire(key):
+    comp = Compressor(gamma=0.05, method="block_topk", block=256)
+    x = jax.random.normal(key, (4096,))
+    s = comp.compress_sparse(x)
+    # fixed wire size: k_b per block
+    assert s.values.size == (4096 // 256) * max(1, round(0.05 * 256))
+    dense = sparse_to_dense(s)
+    # selected entries preserved exactly
+    nz = np.nonzero(np.asarray(dense))[0]
+    np.testing.assert_array_equal(np.asarray(dense)[nz], np.asarray(x)[nz])
+
+
+def test_wire_bytes_accounting():
+    comp = Compressor(gamma=0.01)
+    tree = {"a": jnp.zeros((100000,)), "b": jnp.zeros((500,))}
+    b = tree_wire_bytes(tree, comp)
+    assert b == 1000 * 8 + 500 * 4  # k*(val+idx) + dense small leaf
+
+
+def test_contraction_gamma_metric(key):
+    x = jax.random.normal(key, (2048,))
+    comp = Compressor(gamma=0.1)
+    sent, _ = comp.compress_dense(x)
+    g = float(contraction_gamma(x, sent))
+    assert g >= 0.1  # top-k keeps at least gamma of the energy

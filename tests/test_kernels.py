@@ -1,0 +1,132 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles,
+swept over shapes and dtypes (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [1024, 3000, 8192, 65536])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ef_threshold_update_sweep(key, n, dtype):
+    m = jax.random.normal(key, (n,), dtype)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype)
+    s1, m1 = ops.ef_threshold_update(m, g, 0.1, 0.3, impl="ref")
+    s2, m2 = ops.ef_threshold_update(m, g, 0.1, 0.3, impl="pallas")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(s1, np.float32),
+                               np.asarray(s2, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(m1, np.float32),
+                               np.asarray(m2, np.float32), atol=tol)
+    # fused-update identity: sent + m' == m + eta*g
+    acc = np.asarray(m, np.float32) + 0.1 * np.asarray(g, np.float32)
+    np.testing.assert_allclose(np.asarray(s2, np.float32)
+                               + np.asarray(m2, np.float32), acc, atol=2e-2)
+
+
+@pytest.mark.parametrize("k_b", [1, 8, 32])
+def test_block_stats_sweep(key, k_b):
+    x = jax.random.normal(key, (4096,))
+    t1 = ops.block_topk_threshold(x, k_b, 512, impl="ref")
+    t2 = ops.block_topk_threshold(x, k_b, 512, impl="pallas")
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 128, 32), (2, 4, 256, 64),
+                                   (1, 8, 512, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [None, 64])
+def test_flash_attention_sweep(key, shape, causal, window):
+    B, H, S, D = shape
+    q = jax.random.normal(key, shape, jnp.float32) * 0.1
+    k = jax.random.normal(jax.random.fold_in(key, 1), shape) * 0.1
+    v = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    o1 = ops.attention(q, k, v, causal=causal, window=window, impl="ref")
+    o2 = ops.attention(q, k, v, causal=causal, window=window, impl="pallas")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+
+
+def test_flash_attention_rectangular(key):
+    B, H, D = 2, 2, 64
+    k = jax.random.normal(key, (B, H, 256, D)) * 0.1
+    v = jax.random.normal(jax.random.fold_in(key, 1), (B, H, 256, D))
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, H, 128, D)) * 0.1
+    o1 = ops.attention(q, k, v, causal=True, impl="ref")
+    o2 = ops.attention(q, k, v, causal=True, impl="pallas")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+
+
+def test_flash_attention_bf16(key):
+    shape = (1, 2, 256, 64)
+    q = (jax.random.normal(key, shape) * 0.1).astype(jnp.bfloat16)
+    k = (jax.random.normal(jax.random.fold_in(key, 1), shape) * 0.1
+         ).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2), shape
+                          ).astype(jnp.bfloat16)
+    o1 = ops.attention(q, k, v, impl="ref")
+    o2 = ops.attention(q, k, v, impl="pallas")
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (2, 100, 256), (3, 7, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(key, shape, dtype):
+    x = jax.random.normal(key, shape, dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (shape[-1],),
+                          jnp.float32)
+    o1 = ops.rms_norm(x, w, impl="ref")
+    o2 = ops.rms_norm(x, w, impl="pallas")
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=1e-5)
+
+
+def test_softmax_invariance_flash(key):
+    """Flash accumulation must be shift-invariant: adding a constant to all
+    logits (via scaled q) changes nothing."""
+    shape = (1, 1, 256, 64)
+    q = jax.random.normal(key, shape) * 0.1
+    k = jax.random.normal(jax.random.fold_in(key, 1), shape) * 0.1
+    v = jax.random.normal(jax.random.fold_in(key, 2), shape)
+    o1 = ops.attention(q, k, v, impl="pallas")
+    o2 = ops.attention(q, k + 100.0 * 0, v, impl="pallas")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)
+
+
+@pytest.mark.parametrize("S", [8, 33, 64])
+@pytest.mark.parametrize("K", [8, 64])
+def test_wkv_kernel_sweep(key, S, K):
+    """RWKV-6 WKV Pallas kernel vs sequential oracle."""
+    B, H, V = 2, 2, K
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (B, S, H, K)) * 0.3
+    k = jax.random.normal(ks[1], (B, S, H, K)) * 0.3
+    v = jax.random.normal(ks[2], (B, S, H, V))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, S, H, K)))
+    u = jax.random.normal(ks[4], (H, K)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, H, K, V)) * 0.1
+    y1, sT1 = ops.wkv(r, k, v, w, u, s0, impl="ref")
+    y2, sT2 = ops.wkv(r, k, v, w, u, s0, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(sT1), np.asarray(sT2), atol=2e-5)
+
+
+def test_wkv_kernel_matches_time_mix_scan(key):
+    """The kernel path of rwkv.time_mix == the scan path (same block)."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models import rwkv as rwkv_mod
+    cfg = get_smoke_config("rwkv6-1.6b")
+    p = rwkv_mod.init_rwkv6(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model))
+    st = rwkv_mod.init_rwkv_state(cfg, 2)
+    y_scan, st_scan = rwkv_mod.time_mix(p, x, cfg, st)
+    cfg_k = dataclasses.replace(cfg, use_pallas=True)
+    st2 = rwkv_mod.init_rwkv_state(cfg, 2)
+    y_ker, st_ker = rwkv_mod.time_mix(p, x, cfg_k, st2)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_ker),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_scan.wkv),
+                               np.asarray(st_ker.wkv), atol=1e-4)

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests (deliverable (f)): reduced same-family
+variant (2 layers, d_model<=512, <=4 experts) — one forward/train step on
+CPU asserting output shapes + no NaNs, plus prefill/decode paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.core import ArmijoConfig, Compressor, CSGDConfig, csgd_asss
+from repro.models import build_model
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key, seq=S):
+    kb = jax.random.fold_in(key, 99)
+    if cfg.family == "encdec":
+        return {"src_embed": jax.random.normal(kb, (B, seq // 2, cfg.d_model)),
+                "tokens": jax.random.randint(kb, (B, seq // 2), 0,
+                                             cfg.vocab_size)}
+    b = {"tokens": jax.random.randint(kb, (B, seq), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["image_embed"] = jax.random.normal(kb, (B, cfg.n_patches,
+                                                  cfg.d_model))
+    return b
+
+
+@pytest.fixture(scope="module", params=ARCH_NAMES)
+def arch(request):
+    return request.param
+
+
+def test_smoke_contract(arch):
+    """Prompt contract for the reduced variants."""
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512
+    assert cfg.n_layers <= 5
+    if cfg.family == "moe":
+        assert cfg.n_experts <= 4
+    assert cfg.family == get_config(arch).family
+
+
+def test_forward_and_train_step(arch, key):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    assert float(loss) > 0
+
+    # one CSGD-ASSS train step on CPU: finite, params change
+    opt = csgd_asss(CSGDConfig(
+        armijo=ArmijoConfig(),
+        compressor=Compressor(gamma=0.1, min_compress_size=128)))
+    st = opt.init(params)
+    new_params, st, aux = jax.jit(
+        lambda p, s: opt.step(lambda pp: model.loss(pp, batch)[0], p, s)
+    )(params, st)
+    assert bool(jnp.isfinite(aux.loss))
+    deltas = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                          params, new_params)
+    assert max(jax.tree.leaves(deltas)) > 0
+
+
+def test_prefill_decode_shapes(arch, key):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = make_batch(cfg, key)
+    ctx = S // 2 if cfg.family == "encdec" else S
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, capacity=ctx + 4))(params, batch)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab_size])))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert int(jnp.max(tok)) < cfg.vocab_size  # padded logits masked
+    lg2, cache2 = jax.jit(model.decode_step)(params, tok, cache,
+                                             jnp.int32(ctx))
+    assert lg2.shape == (B, 1, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(lg2[..., :cfg.vocab_size])))
+
+
+def test_full_config_dims(arch):
+    """The production config matches the assigned spec."""
+    cfg = get_config(arch)
+    spec = {
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+    }[arch]
+    L, D, H, KV, FF, V = spec
+    assert cfg.n_layers == L and cfg.d_model == D
+    assert cfg.n_heads == H and cfg.n_kv_heads == KV
+    assert cfg.d_ff == FF and cfg.vocab_size == V
+    assert cfg.citation
+
+
+def test_param_count_sanity(arch):
+    """Analytic count within 2x of the arch's nameplate size."""
+    cfg = get_config(arch)
+    nameplate = {
+        "seamless-m4t-large-v2": 2.3e9, "zamba2-7b": 7e9,
+        "llama3-405b": 405e9, "llama-3.2-vision-11b": 10e9,  # LM part
+        "qwen1.5-32b": 32e9, "granite-moe-1b-a400m": 1.3e9,
+        "yi-34b": 34e9, "rwkv6-1.6b": 1.6e9, "qwen1.5-4b": 4e9,
+        "qwen3-moe-30b-a3b": 30e9,
+    }[arch]
+    n = cfg.n_params()
+    assert 0.4 * nameplate < n < 2.5 * nameplate, (n, nameplate)

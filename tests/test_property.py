@@ -1,0 +1,111 @@
+"""Hypothesis property tests on the system's invariants (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ArmijoConfig, Compressor, armijo_search,
+                        topk_select, sparse_to_dense)
+from repro.core.error_feedback import dequantize_ef, quantize_ef
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+finite_arrays = st.integers(0, 2**31 - 1).flatmap(
+    lambda seed: st.integers(64, 2048).map(
+        lambda n: np.random.default_rng(seed).standard_normal(n)
+        .astype(np.float32)))
+
+
+@given(finite_arrays, st.floats(0.01, 0.9))
+def test_topk_contraction_property(x, gamma):
+    """Lemma 7 for arbitrary inputs and ratios."""
+    d = x.size
+    k = max(1, int(round(gamma * d)))
+    s = topk_select(jnp.asarray(x), k)
+    dense = np.asarray(sparse_to_dense(s))
+    lhs = np.sum((x - dense) ** 2)
+    rhs = (1 - k / d) * np.sum(x ** 2)
+    assert lhs <= rhs + 1e-4 * max(1.0, rhs)
+
+
+@given(finite_arrays)
+def test_topk_idempotent(x):
+    k = max(1, x.size // 10)
+    s = topk_select(jnp.asarray(x), k)
+    dense = sparse_to_dense(s)
+    s2 = topk_select(dense, k)
+    np.testing.assert_allclose(np.asarray(sparse_to_dense(s2)),
+                               np.asarray(dense), atol=1e-7)
+
+
+@given(finite_arrays, st.floats(0.0, 0.5), st.floats(0.0, 2.0))
+def test_ef_update_telescopes(x, eta, tau):
+    """sent + m' == m + eta*g exactly, for any threshold."""
+    n = x.size // 2
+    m, g = jnp.asarray(x[:n]), jnp.asarray(x[n:2 * n])
+    sent, m_new = ref.ef_threshold_update(m, g, jnp.float32(eta),
+                                          jnp.float32(tau))
+    np.testing.assert_allclose(np.asarray(sent + m_new),
+                               np.asarray(m + eta * g), atol=1e-5)
+
+
+@given(finite_arrays)
+def test_ef_quantization_bounded_error(x):
+    """int8 EF storage: error bounded by scale/2 per block."""
+    m = jnp.asarray(x)
+    q = quantize_ef(m)
+    back = dequantize_ef(q)
+    err = np.abs(np.asarray(back) - x)
+    per_block_bound = np.repeat(np.asarray(q.scale)[:, 0], 256)[:x.size]
+    assert np.all(err <= per_block_bound * 0.75 + 1e-7)
+
+
+@given(st.integers(0, 10**6), st.floats(0.05, 0.45),
+       st.floats(0.5, 0.95))
+def test_armijo_alpha_in_bounds(seed, sigma, rho):
+    """Accepted alpha in [alpha_min, alpha_max]; condition holds on a
+    random convex quadratic."""
+    rng = np.random.default_rng(seed)
+    scales = jnp.asarray(rng.uniform(0.1, 4.0, 16).astype(np.float32))
+
+    def f(w):
+        return jnp.sum(scales * w ** 2)
+
+    w = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+    g = jax.grad(f)(w)
+    cfg = ArmijoConfig(sigma=sigma, rho=rho, max_backtracks=60)
+    amax = jnp.float32(1.0)
+    res = armijo_search(f, w, g, amax, cfg)
+    assert 0 < float(res.alpha) <= 1.0 + 1e-6
+    if bool(res.accepted):
+        lhs = float(f(w - res.alpha * g))
+        rhs = float(f(w) - sigma * res.alpha * jnp.sum(g ** 2))
+        assert lhs <= rhs + 1e-4 * max(1.0, abs(rhs))
+
+
+@given(st.integers(0, 10**6), st.integers(1, 4))
+def test_attention_window_subset_of_causal(seed, wexp):
+    """Sliding-window attention == causal attention when window >= seq."""
+    rng = np.random.default_rng(seed)
+    B, H, S, D = 1, 2, 16, 8
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)).astype(np.float32)) * .1
+    k = jnp.asarray(rng.standard_normal((B, H, S, D)).astype(np.float32)) * .1
+    v = jnp.asarray(rng.standard_normal((B, H, S, D)).astype(np.float32))
+    full = ref.mha_reference(q, k, v, causal=True)
+    win = ref.mha_reference(q, k, v, causal=True, window=S * wexp)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(full), atol=1e-5)
+
+
+@given(st.integers(0, 10**6))
+def test_blockwise_gamma_at_least_half(seed):
+    """DESIGN §3: block-local selection achieves realized gamma >= gamma/2
+    in energy terms for the kept-count (count-based check)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+    comp = Compressor(gamma=0.1, method="block_topk", block=256,
+                      min_compress_size=1)
+    sent, resid = comp.compress_dense(x)
+    kept = int(jnp.sum(sent != 0))
+    assert kept >= int(0.5 * 0.1 * 4096)

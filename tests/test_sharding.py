@@ -1,0 +1,82 @@
+"""Partition-rule unit tests: param pspecs, 2D widening, cache pspecs."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.sharding import cache_pspecs, param_pspecs
+
+
+def _find(specs, *path):
+    node = specs
+    for p in path:
+        node = node[p]
+    return node
+
+
+def test_dense_param_rules(key):
+    cfg = get_smoke_config("yi-34b")
+    params = build_model(cfg).init(key)
+    specs = param_pspecs(params)
+    # column-parallel: qkv/mlp-in shard the output dim
+    assert _find(specs, "blocks", "attn", "wq", "w") == P(None, None, "model")
+    assert _find(specs, "blocks", "mlp", "wg") == P(None, None, "model")
+    # row-parallel: output projections shard the input dim
+    assert _find(specs, "blocks", "attn", "wo", "w") == P(None, "model", None)
+    assert _find(specs, "blocks", "mlp", "wo") == P(None, "model", None)
+    # vocab-parallel head, d_model-sharded embedding, replicated norms
+    assert _find(specs, "lm_head", "w") == P(None, "model")
+    assert _find(specs, "embed", "w") == P(None, "model")
+    assert _find(specs, "final_norm", "w") == P(None)
+
+
+def test_moe_param_rules(key):
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    params = build_model(cfg).init(key)
+    specs = param_pspecs(params)
+    # experts sharded on E (dim -3 of the stacked (L, E, D, F) leaf)
+    assert _find(specs, "blocks", "moe", "wg") == P(None, "model", None, None)
+    assert _find(specs, "blocks", "moe", "router", "w") == P(None, None, None)
+
+
+def test_qkv_bias_sharded(key):
+    cfg = get_smoke_config("qwen1.5-4b")
+    params = build_model(cfg).init(key)
+    specs = param_pspecs(params)
+    assert _find(specs, "blocks", "attn", "wq", "b") == P(None, "model")
+
+
+def test_two_d_widening(key):
+    cfg = get_smoke_config("yi-34b")
+    params = build_model(cfg).init(key)
+    specs = param_pspecs(params, two_d=True)
+    # big 2D+ leaves gain a data-axis dim; small leaves unchanged
+    emb = _find(specs, "embed", "w")
+    assert "data" in jax.tree.leaves(emb) or emb == P(None, "model") \
+        or emb == P("data", "model")
+    assert _find(specs, "final_norm", "w") == P(None)
+
+
+def test_cache_pspecs_kv_and_ssm(key):
+    cfg = get_smoke_config("zamba2-7b")
+    model = build_model(cfg)
+    cache = model.init_cache(4, 32)
+    specs = cache_pspecs(cache, ("data",), ("model",))
+    kv_spec = specs.kv.k
+    # (G, B, S, H, hd): B over data, S over model
+    assert kv_spec[-4] == "data" and kv_spec[-3] == "model"
+    ssm_spec = specs.ssm.ssm
+    assert ssm_spec[-4] == "data" and ssm_spec[-3] == "model"
+    conv_spec = specs.ssm.conv
+    assert conv_spec[-3] == "data" and conv_spec[-1] == "model"
+
+
+def test_cache_pspecs_long_context():
+    cfg = get_smoke_config("rwkv6-1.6b")
+    model = build_model(cfg)
+    cache = model.init_cache(1, 64)
+    specs = cache_pspecs(cache, (), ("data", "model"))
+    # batch=1: no dp sharding anywhere
+    for leaf in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert "data" not in [e for e in jax.tree.leaves(leaf) if e]

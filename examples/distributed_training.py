@@ -15,6 +15,8 @@ if "XLA_FLAGS" not in os.environ:
     os.execv(sys.executable, [sys.executable] + sys.argv)
 
 import jax
+
+from repro.compat import set_mesh
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -40,7 +42,7 @@ def run(kind: str, steps=15, gamma=0.02):
                                   eta=0.05))
     pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=64,
                          global_batch=8)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, param_shardings(params, mesh))
         st = init_opt_state(params, run_cfg, 4)

@@ -1,0 +1,188 @@
+"""Version-compat shims for JAX APIs that moved between 0.4.x and 0.5+.
+
+Every version-sensitive JAX lookup in the codebase lives HERE and only here
+(DESIGN.md §7).  The rest of the code is written against the *new* API
+surface (``jax.set_mesh``, ``jax.shard_map(axis_names=..., check_vma=...)``,
+``jax.sharding.get_abstract_mesh``, ``jax.lax.axis_size``) and this module
+backfills it on JAX 0.4.x:
+
+* :func:`set_mesh`            — ``jax.set_mesh`` | ``with mesh:`` + own ctx
+* :func:`get_abstract_mesh`   — returns a :class:`MeshView` (mesh + manual
+                                axes) or None; on 0.4.x the view is tracked
+                                by this module's context stack, which
+                                :func:`shard_map` and :func:`set_mesh` push
+* :func:`shard_map`           — new keyword API on top of
+                                ``jax.experimental.shard_map`` (``axis_names``
+                                -> ``auto`` complement, ``check_vma`` ->
+                                ``check_rep``)
+* :func:`axis_size`           — ``jax.lax.axis_size`` | ``lax.psum(1, ax)``
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import functools
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+_HAS_GET_ABSTRACT_MESH = hasattr(jax.sharding, "get_abstract_mesh")
+_HAS_AXIS_SIZE = hasattr(jax.lax, "axis_size")
+
+#: On 0.4.x XLA, partially-manual shard_map does not compose with
+#: ``lax.scan``: any operand sharded over an *auto* axis reaching a scan
+#: inside the manual body (via with_sharding_constraint or an input's
+#: committed sharding) trips ``Check failed: sharding.IsManualSubgroup()``.
+#: When False, utils.hint() drops hints inside manual regions and the
+#: train step keeps params/EF-memory replicated over the auto 'model'
+#: axis (pure-pjit serving paths keep full TP either way).
+PARTIAL_AUTO_SAFE = _HAS_JAX_SHARD_MAP
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshView:
+    """Uniform view of the active mesh for trace-time introspection.
+
+    ``mesh`` is the underlying concrete ``jax.sharding.Mesh`` (or the native
+    abstract mesh on new JAX); ``manual_axes`` is the set of axis names that
+    are manual (shard_map-bound) at the current trace point — model code uses
+    it to drop axes that must not appear in sharding hints.
+    """
+
+    mesh: Any
+    manual_axes: frozenset = frozenset()
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(self.mesh.axis_names)
+
+    @property
+    def shape(self) -> dict[str, int]:
+        return dict(self.mesh.shape)
+
+
+# Trace-time context for 0.4.x, pushed by set_mesh / shard_map below.
+_ACTIVE: contextvars.ContextVar[MeshView | None] = \
+    contextvars.ContextVar("repro_active_mesh", default=None)
+
+
+def _as_mesh(mesh) -> Any:
+    return mesh.mesh if isinstance(mesh, MeshView) else mesh
+
+
+def get_abstract_mesh() -> MeshView | None:
+    """The mesh visible at the current trace point, or None outside any."""
+    if _HAS_GET_ABSTRACT_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not getattr(m, "axis_names", ()):
+            return None
+        return MeshView(m, frozenset(getattr(m, "manual_axes", ()) or ()))
+    view = _ACTIVE.get()
+    if view is not None:
+        return view
+    from jax._src import mesh as _mesh_lib
+    phys = _mesh_lib.thread_resources.env.physical_mesh
+    if phys.empty:
+        return None
+    return MeshView(phys)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — the new-JAX ``jax.set_mesh`` everywhere.
+
+    On 0.4.x this both enters the classic ``with mesh:`` context (so bare
+    ``PartitionSpec`` sharding constraints resolve) and pushes the mesh onto
+    this module's view stack for :func:`get_abstract_mesh`.
+    """
+    if _HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    token = _ACTIVE.set(MeshView(_as_mesh(mesh)))
+    try:
+        with _as_mesh(mesh):
+            yield mesh
+    finally:
+        _ACTIVE.reset(token)
+
+
+def shard_map(f: Callable, *, mesh=None, in_specs, out_specs,
+              axis_names: Iterable[str], check_vma: bool = False) -> Callable:
+    """New-style ``jax.shard_map`` keyword API on every supported JAX.
+
+    ``axis_names`` is the set of mesh axes this shard_map is *manual* over;
+    the remaining axes stay auto (XLA-partitioned).  ``mesh=None`` resolves
+    the mesh from the surrounding :func:`set_mesh` / shard_map context
+    (nested use).
+    """
+    manual = frozenset(axis_names)
+    if mesh is None:
+        view = get_abstract_mesh()
+        if view is None:
+            raise ValueError("shard_map: no mesh given and none active")
+        mesh = view
+    base = _as_mesh(mesh)
+
+    if _HAS_JAX_SHARD_MAP:
+        return jax.shard_map(f, mesh=base, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(manual),
+                             check_vma=check_vma)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    outer = _ACTIVE.get()
+    outer_manual = outer.manual_axes if outer is not None else frozenset()
+    auto = frozenset(base.axis_names) - manual - outer_manual
+
+    @functools.wraps(f)
+    def wrapped(*args):
+        token = _ACTIVE.set(MeshView(base, manual | outer_manual))
+        try:
+            return f(*args)
+        finally:
+            _ACTIVE.reset(token)
+
+    return _shard_map(wrapped, base, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def named_sharding(mesh, spec, memory_kind: str | None = None):
+    """NamedSharding with a best-effort ``memory_kind``.
+
+    Backends disagree on which memory kinds exist ("device" is not a valid
+    kind on the 0.4.x CPU backend); when the requested kind is not
+    addressable, fall back to the device default rather than erroring.
+    """
+    from jax.sharding import NamedSharding
+    if memory_kind is None:
+        return NamedSharding(_as_mesh(mesh), spec)
+    try:
+        return NamedSharding(_as_mesh(mesh), spec, memory_kind=memory_kind)
+    except ValueError:
+        return NamedSharding(_as_mesh(mesh), spec)
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every JAX (0.4.x
+    returns a one-element list of per-device dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def axis_size(axes: str | Sequence[str]):
+    """Size of one mapped mesh axis (or the product over several)."""
+    if isinstance(axes, str):
+        axes = (axes,)
+    if _HAS_AXIS_SIZE:
+        n = 1
+        for ax in axes:
+            n = n * jax.lax.axis_size(ax)
+        return n
+    # psum of a Python literal folds to a static int on 0.4.x
+    return jax.lax.psum(1, tuple(axes))

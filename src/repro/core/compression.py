@@ -113,6 +113,29 @@ def threshold_select(x: jax.Array, tau: jax.Array) -> jax.Array:
     return jnp.where(jnp.abs(x) >= tau, x, jnp.zeros_like(x))
 
 
+def block_extract_sparse(x2d: jax.Array, comp: "Compressor"):
+    """Wire pairs via exact per-block top-k_b — THE block extraction used
+    by every block_topk path (compress_sparse, compress_leaf, and the
+    fused-kernel path in dcsgd).
+
+    x2d: (L, d) per-layer rows; blocks never span layers.  Returns
+    (vals, idx), each (L, nb*k_b), idx flat into [0, d) (clamped — padding
+    positions carry zero values).
+    """
+    L, d = x2d.shape
+    block = comp.block
+    pad = (-d) % block
+    blocks = jnp.pad(x2d, ((0, 0), (0, pad))).reshape(L, -1, block)
+    nb = blocks.shape[1]
+    k_b = comp.block_k()
+    _, bidx = jax.lax.top_k(jnp.abs(blocks), k_b)          # (L, nb, k_b)
+    base = (jnp.arange(nb, dtype=jnp.int32) * block)[None, :, None]
+    idx = (bidx.astype(jnp.int32) + base).reshape(L, -1)
+    idx = jnp.minimum(idx, d - 1)
+    vals = jnp.take_along_axis(blocks, bidx, axis=2).reshape(L, -1)
+    return vals, idx
+
+
 # ---------------------------------------------------------------------------
 # Compressor objects
 # ---------------------------------------------------------------------------
@@ -127,6 +150,11 @@ class Compressor:
     is preserved exactly and quantization error is recycled like any other
     compression error.  At 8 bits the wire cost per entry drops from
     4+4 B (f32 value + int32 index) to 1+4 B.
+
+    ``use_kernel``: route the ``block_topk`` hot path through the fused
+    Pallas two-pass kernels (repro/kernels/ef_topk.py, dispatched by
+    repro/kernels/dispatch.py).  Escape hatch: False falls back to the
+    pure-jnp composition.
     """
 
     gamma: float = 0.01
@@ -134,11 +162,27 @@ class Compressor:
     block: int = 1024
     min_compress_size: int = MIN_COMPRESS_SIZE
     value_bits: int = 32
+    use_kernel: bool = True
 
     def k_for(self, d: int) -> int:
         if self.method == "none" or d < self.min_compress_size:
             return d
         return max(1, int(round(self.gamma * d)))
+
+    def block_k(self) -> int:
+        """k_b: entries kept per ``block``-wide block (block_topk)."""
+        return max(1, int(round(self.gamma * self.block)))
+
+    def sparse_k(self, d: int) -> int:
+        """Actual number of (value, index) pairs on the wire for a leaf
+        of size d — ``block_topk`` ships exactly k_b per (padded) block."""
+        k = self.k_for(d)
+        if k == d:
+            return d
+        if self.method == "block_topk":
+            nb = -(-d // self.block)
+            return nb * self.block_k()
+        return k
 
     def quantize_values(self, vals: jax.Array) -> jax.Array:
         """Simulate wire quantization (returns dequantized f32 values —
@@ -168,6 +212,17 @@ class Compressor:
                            s.shape)
             dense = sparse_to_dense(s, x.dtype)
         elif self.method == "block_topk":
+            if self.use_kernel:
+                # fused Pallas path: pass-1 per-block stats, pass-2 fused
+                # split (1 read + 2 writes) — see repro/kernels/ef_topk.py.
+                # Both passes see the same flattened block layout.
+                from repro.kernels import ops
+                flat = x.reshape(-1)
+                tau = ops.block_topk_threshold(flat, self.block_k(),
+                                               self.block)
+                dense, resid = ops.threshold_split_blocks(
+                    flat, tau.reshape(-1, 1), self.block)
+                return dense.reshape(x.shape), resid.reshape(x.shape)
             tau = block_threshold(x, self.gamma, self.block)
             dense = threshold_select(x, tau)
         else:
@@ -182,31 +237,42 @@ class Compressor:
             return Sparse(flat, jnp.arange(d, dtype=jnp.int32), x.shape)
         if self.method == "block_topk":
             # block-local exact top-k_b: hardware-aligned, fixed wire size.
-            flat = x.reshape(-1)
-            pad = (-d) % self.block
-            blocks = jnp.pad(flat, (0, pad)).reshape(-1, self.block)
-            k_b = max(1, int(round(self.gamma * self.block)))
-            mag = jnp.abs(blocks)
-            _, bidx = jax.lax.top_k(mag, k_b)                   # (nb, k_b)
-            base = (jnp.arange(blocks.shape[0], dtype=jnp.int32)
-                    * self.block)[:, None]
-            idx = (bidx.astype(jnp.int32) + base).reshape(-1)
-            idx = jnp.minimum(idx, d - 1)
-            vals = jnp.take_along_axis(blocks, bidx, axis=1).reshape(-1)
-            return Sparse(vals, idx, x.shape)
+            vals, idx = block_extract_sparse(x.reshape(1, -1), self)
+            return Sparse(vals.reshape(-1), idx.reshape(-1), x.shape)
         return topk_select(x, self.k_for(d))
 
     def wire_bytes(self, x_size: int, itemsize: int = 4) -> int:
-        """Bytes on the wire for one leaf (values + int32 indices)."""
-        k = self.k_for(x_size)
+        """Bytes on the wire for one leaf (values + int32 indices).
+
+        Matches the per-step accounting in ``worker_compress_aggregate``
+        exactly: transmitted values cost ``value_bytes`` each (wire
+        quantization), indices 4 B, and ``block_topk`` ships k_b pairs per
+        padded block.
+        """
+        k = self.sparse_k(x_size)
         if k == x_size:          # uncompressed leaves ship dense, no indices
             return x_size * itemsize
-        return k * (itemsize + 4)
+        return k * (self.value_bytes + 4)
+
+    def leaf_wire_bytes(self, shape: tuple[int, ...],
+                        itemsize: int = 4) -> int:
+        """Wire bytes for one leaf, mirroring ``worker_compress_aggregate``
+        exactly: leaves with ndim >= 2 are scan-stacked and compressed
+        *per layer* (the dense/sparse cutoff and the block padding both
+        apply to the per-layer size d, not the whole leaf)."""
+        if len(shape) >= 2:
+            L = shape[0]
+            d = 1
+            for n in shape[1:]:
+                d *= n
+        else:
+            L, d = 1, (shape[0] if shape else 1)
+        return L * self.wire_bytes(d, itemsize)
 
 
 def tree_wire_bytes(tree: PyTree, comp: Compressor, itemsize: int = 4) -> int:
     """Total communicated bytes per worker per step for a gradient pytree."""
-    return sum(comp.wire_bytes(leaf.size, itemsize)
+    return sum(comp.leaf_wire_bytes(leaf.shape, itemsize)
                for leaf in jax.tree.leaves(tree))
 
 

@@ -27,19 +27,16 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from .compression import Compressor
+from repro import compat
+from repro.kernels import ops
+from .compression import Compressor, block_extract_sparse
 
 PyTree = Any
 AxisNames = Sequence[str] | str
 
 
-def _dp_size(dp_axes: AxisNames) -> jax.Array:
-    if isinstance(dp_axes, str):
-        return jax.lax.axis_size(dp_axes)
-    n = 1
-    for ax in dp_axes:
-        n = n * jax.lax.axis_size(ax)
-    return n
+def _dp_size(dp_axes: AxisNames):
+    return compat.axis_size(dp_axes)
 
 
 def _per_layer_topk(acc2d: jax.Array, k: int):
@@ -65,31 +62,22 @@ def _scatter_layers(vals: jax.Array, idx: jax.Array, L: int, d: int,
     return dense.at[lidx, idx].add(vals.astype(dtype))
 
 
+def _leaf_2d(x: jax.Array, stacked: bool) -> jax.Array:
+    """(L, d) per-layer view of a leaf (L = 1 when unstacked)."""
+    if stacked and x.ndim >= 2:
+        return x.reshape(x.shape[0], -1)
+    return x.reshape(1, -1)
+
+
 def compress_leaf(acc: jax.Array, comp: Compressor, stacked: bool):
     """Per-leaf sparse compression. Returns (vals, idx, (L, d)) flat layout."""
-    if stacked and acc.ndim >= 2:
-        L = acc.shape[0]
-        flat = acc.reshape(L, -1)
-    else:
-        L = 1
-        flat = acc.reshape(1, -1)
-    d = flat.shape[1]
-    k = comp.k_for(d)
+    flat = _leaf_2d(acc, stacked)
+    L, d = flat.shape
     if comp.method == "block_topk" and d >= comp.min_compress_size:
         # block-local selection, batched over layers
-        block = comp.block
-        pad = (-d) % block
-        padded = jnp.pad(flat, ((0, 0), (0, pad)))
-        nb = padded.shape[1] // block
-        blocks = padded.reshape(L, nb, block)
-        k_b = max(1, int(round(comp.gamma * block)))
-        _, bidx = jax.lax.top_k(jnp.abs(blocks), k_b)          # (L, nb, k_b)
-        base = (jnp.arange(nb, dtype=jnp.int32) * block)[None, :, None]
-        idx = (bidx.astype(jnp.int32) + base).reshape(L, -1)
-        idx = jnp.minimum(idx, d - 1)
-        vals = jnp.take_along_axis(blocks, bidx, axis=2).reshape(L, -1)
+        vals, idx = block_extract_sparse(flat, comp)
         return vals, idx, (L, d)
-    vals, idx = _per_layer_topk(flat, k)
+    vals, idx = _per_layer_topk(flat, comp.k_for(d))
     return vals, idx, (L, d)
 
 
@@ -115,23 +103,48 @@ def worker_compress_aggregate(
     else:
         flat_s = treedef.flatten_up_to(stacked_mask)
 
+    use_fused = comp.method == "block_topk" and comp.use_kernel
     updates, new_mem = [], []
     wire = jnp.float32(0.0)
     for g, m, stacked in zip(flat_g, flat_m, flat_s):
-        acc = m.astype(jnp.float32) + eta * g.astype(jnp.float32)
-        d_layer = int(acc.reshape(acc.shape[0], -1).shape[1]) \
-            if (stacked and acc.ndim >= 2) else acc.size
-        if comp.method == "none" or d_layer < comp.min_compress_size:
+        g2 = _leaf_2d(g, stacked)
+        L, d = g2.shape
+        if comp.method == "none" or d < comp.min_compress_size:
+            acc = m.astype(jnp.float32) + eta * g.astype(jnp.float32)
             upd = jax.lax.pmean(acc, dp_axes)
             updates.append(upd)
             new_mem.append(jnp.zeros_like(m))
             wire = wire + jnp.float32(acc.size * acc.dtype.itemsize)
             continue
-        vals, idx, (L, d) = compress_leaf(acc, comp, stacked)
-        # beyond-paper: quantize transmitted values; EF residual is taken
-        # against the *quantized* values so the identity stays exact.
-        vals = comp.quantize_values(vals)
-        own_dense = _scatter_layers(vals, idx, L, d, jnp.float32)
+        if use_fused:
+            # fused two-pass Pallas path (DESIGN.md §3): pass 1 streams
+            # (m, g) once for the per-block k_b-th |m + eta*g| statistic;
+            # pass 2 streams them again and writes (sent, m') — the
+            # accumulator never round-trips through HBM.
+            m2 = _leaf_2d(m, stacked).astype(jnp.float32)
+            sent, resid, _ = ops.fused_ef_compress(
+                m2, g2.astype(jnp.float32), eta, comp.gamma, comp.block)
+            # the dense sent has <= k_b nonzeros per block, so per-block
+            # top-k_b of |sent| recovers exactly the kept wire entries
+            vals, idx = block_extract_sparse(sent, comp)
+            if comp.value_bits < 32:
+                # EF residual against the *quantized* wire values keeps
+                # the telescoping identity exact under quantization.
+                vals = comp.quantize_values(vals)
+                own_dense = _scatter_layers(vals, idx, L, d, jnp.float32)
+                resid = resid + (sent - own_dense)
+            new_mem.append(resid.reshape(m.shape).astype(m.dtype))
+        else:
+            acc2 = _leaf_2d(m, stacked).astype(jnp.float32) \
+                + eta * g2.astype(jnp.float32)
+            vals, idx, (L, d) = compress_leaf(acc2, comp, stacked)
+            # beyond-paper: quantize transmitted values; EF residual is
+            # taken against the *quantized* values so the identity stays
+            # exact.
+            vals = comp.quantize_values(vals)
+            own_dense = _scatter_layers(vals, idx, L, d, jnp.float32)
+            new_mem.append((acc2 - own_dense).reshape(m.shape)
+                           .astype(m.dtype))
         all_vals = jax.lax.all_gather(vals, dp_axes)   # (W, L, k)
         all_idx = jax.lax.all_gather(idx, dp_axes)
         if isinstance(dp_axes, (tuple, list)) and len(dp_axes) > 1:
@@ -139,8 +152,7 @@ def worker_compress_aggregate(
             all_idx = all_idx.reshape(-1, *idx.shape)
         mean_dense = _scatter_layers(all_vals, all_idx, L, d,
                                      jnp.float32) / W
-        updates.append(mean_dense.reshape(acc.shape))
-        new_mem.append((acc - own_dense.reshape(acc.shape)).astype(m.dtype))
+        updates.append(mean_dense.reshape(g.shape))
         wire = wire + jnp.float32(vals.size * comp.value_bytes
                                   + idx.size * 4)
 

@@ -1,0 +1,102 @@
+"""Kernel dispatch: one place decides which implementation runs per op.
+
+Every public op in :mod:`repro.kernels.ops` is registered here with up to
+three implementations:
+
+* ``ref``              — pure jnp oracle (always present; CPU dry-run path)
+* ``pallas-interpret`` — the Pallas kernel, interpret mode (CPU containers;
+                         numerically identical to the TPU lowering)
+* ``pallas-tpu``       — the Pallas kernel, compiled (real TPU)
+
+Selection order for a call: explicit ``impl=`` argument > process-wide
+override (:func:`set_default` / :func:`using`) > the op's registered default
+policy, resolved against the active backend:
+
+* policy ``"pallas"``  — always take the kernel path (interpret off-TPU);
+  used for the EF-compression ops, which are the paper's hot loop and whose
+  interpret-mode cost is one vectorized tile evaluation per grid step;
+* policy ``"backend"`` — kernel on TPU, ``ref`` elsewhere; used for the
+  model-side ops (attention, rmsnorm, wkv) where the jnp oracle is what the
+  CPU dry-run is expected to lower.
+
+``impl="pallas"`` resolves to the backend-appropriate kernel variant, so
+callers (configs' ``use_pallas``) never hard-code interpret mode.  This
+replaces the scattered module-level ``_INTERPRET`` flags (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+IMPLS = ("ref", "pallas-interpret", "pallas-tpu")
+
+_REGISTRY: dict[str, dict[str, Callable]] = {}
+_POLICY: dict[str, str] = {}
+_OVERRIDE: str | None = None
+
+
+def register_op(name: str, *, ref: Callable,
+                pallas_interpret: Callable | None = None,
+                pallas_tpu: Callable | None = None,
+                default: str = "backend") -> None:
+    """Register an op's implementations. ``default``: "backend" | "pallas"."""
+    if default not in ("backend", "pallas"):
+        raise ValueError(f"bad default policy {default!r}")
+    _REGISTRY[name] = {"ref": ref,
+                       "pallas-interpret": pallas_interpret,
+                       "pallas-tpu": pallas_tpu}
+    _POLICY[name] = default
+
+
+def registered() -> dict[str, tuple[str, ...]]:
+    """op -> available impl names (introspection for tests/benchmarks)."""
+    return {op: tuple(k for k, v in impls.items() if v is not None)
+            for op, impls in _REGISTRY.items()}
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+def resolve(name: str, impl: str | None = None) -> str:
+    """Resolve a requested impl ("ref"|"pallas"|full name|None) for an op."""
+    impl = impl or _OVERRIDE or _POLICY.get(name, "backend")
+    if impl == "backend":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        impl = "pallas-tpu" if _on_tpu() else "pallas-interpret"
+    if impl not in IMPLS:
+        raise ValueError(f"unknown impl {impl!r} (want one of {IMPLS})")
+    return impl
+
+
+def call(name: str, *args, impl: str | None = None, **kwargs):
+    """Dispatch ``name`` to the resolved implementation (ref fallback)."""
+    table = _REGISTRY[name]
+    fn = table.get(resolve(name, impl)) or table["ref"]
+    return fn(*args, **kwargs)
+
+
+def set_default(impl: str | None) -> None:
+    """Force every op to ``impl`` process-wide (None restores per-op policy)."""
+    global _OVERRIDE
+    if impl is not None and impl not in IMPLS + ("pallas",):
+        raise ValueError(f"unknown impl {impl!r}")
+    _OVERRIDE = impl
+
+
+@contextlib.contextmanager
+def using(impl: str | None):
+    """Scoped :func:`set_default` — ``with dispatch.using("ref"): ...``"""
+    global _OVERRIDE
+    prev = _OVERRIDE
+    set_default(impl)
+    try:
+        yield
+    finally:
+        _OVERRIDE = prev

@@ -33,7 +33,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
                   window: int | None, bq: int, bk: int, sk: int,
                   q_offset: int):
     qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * scale            # (BQ, D)
+    # NB: refs must be indexed with slices (pl.dslice / [...]), never bare
+    # Python ints — interpret-mode discharge chokes on raw int indices.
+    q = q_ref[...][0].astype(jnp.float32) * scale       # (BQ, D)
     D = q.shape[-1]
 
     # Query i sits at absolute position q_offset + i (q_offset = Sk - Sq:
@@ -49,10 +51,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
 
     def body(kj, carry):
         acc, m_i, l_i = carry
-        k = pl.load(k_ref, (0, pl.dslice(kj * bk, bk), slice(None))
-                    ).astype(jnp.float32)                # (BK, D)
-        v = pl.load(v_ref, (0, pl.dslice(kj * bk, bk), slice(None))
-                    ).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.dslice(0, 1), pl.dslice(kj * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)  # (BK, D)
+        v = pl.load(v_ref, (pl.dslice(0, 1), pl.dslice(kj * bk, bk),
+                            slice(None)))[0].astype(jnp.float32)
         s = q @ k.T                                      # (BQ, BK) on MXU
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
@@ -73,7 +75,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
             jnp.full((bq, 1), NEG_INF, jnp.float32),
             jnp.zeros((bq, 1), jnp.float32))
     acc, m_i, l_i = jax.lax.fori_loop(lo, hi, body, init)
-    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l_i, 1e-30)).astype(o_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "scale",

@@ -1,76 +1,198 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Public kernel ops — thin, shape-normalizing wrappers over the dispatch
+registry (see :mod:`repro.kernels.dispatch`).
 
-Every op takes ``impl`` ("pallas" | "ref"): the dry-run/CPU path uses "ref"
-(pure jnp — the CPU backend cannot lower TPU custom calls), real-TPU configs
-flip to "pallas".  In tests both paths are compared (pallas in interpret
-mode) across shape/dtype sweeps.
+Every op takes ``impl``: None (the op's registered default policy), "ref"
+(pure jnp), "pallas" (backend-appropriate kernel variant), or an explicit
+"pallas-interpret" / "pallas-tpu".  The EF-compression ops default to the
+fused Pallas path everywhere; the model-side ops default to the kernel only
+on TPU (the CPU dry-run lowers the jnp oracle).  In tests both paths are
+compared across shape/dtype sweeps.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
-from .ef_topk import ef_apply, block_stats
+from . import dispatch, ref
+from .ef_topk import (block_stats, ef_apply, ef_block_stats as
+                      _ef_block_stats_kernel, threshold_split as
+                      _threshold_split_kernel)
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
+from .rwkv_wkv import wkv_forward
 
-_INTERPRET = True  # CPU container: interpret Pallas; on TPU set False.
+# --------------------------------------------------------------------------
+# registry — the single place that binds op names to implementations
+# --------------------------------------------------------------------------
+
+dispatch.register_op(
+    "ef_update",
+    ref=ref.ef_block_update,
+    pallas_interpret=functools.partial(ef_apply, interpret=True),
+    pallas_tpu=functools.partial(ef_apply, interpret=False),
+    default="pallas")
+
+dispatch.register_op(
+    "block_stats",
+    ref=lambda x2, k_b: ref.block_abs_topk_threshold(
+        x2.reshape(-1), k_b, x2.shape[1]).reshape(-1, 1),
+    pallas_interpret=functools.partial(block_stats, interpret=True),
+    pallas_tpu=functools.partial(block_stats, interpret=False),
+    default="pallas")
+
+dispatch.register_op(
+    "ef_stats",
+    ref=ref.ef_block_stats,
+    pallas_interpret=functools.partial(_ef_block_stats_kernel,
+                                       interpret=True),
+    pallas_tpu=functools.partial(_ef_block_stats_kernel, interpret=False),
+    default="pallas")
+
+dispatch.register_op(
+    "threshold_split",
+    ref=ref.threshold_split,
+    pallas_interpret=functools.partial(_threshold_split_kernel,
+                                       interpret=True),
+    pallas_tpu=functools.partial(_threshold_split_kernel, interpret=False),
+    default="pallas")
+
+dispatch.register_op(
+    "attention",
+    ref=ref.mha_reference,
+    pallas_interpret=functools.partial(flash_attention, interpret=True),
+    pallas_tpu=functools.partial(flash_attention, interpret=False),
+    default="backend")
+
+dispatch.register_op(
+    "rmsnorm",
+    ref=ref.rmsnorm_reference,
+    pallas_interpret=functools.partial(rmsnorm, interpret=True),
+    pallas_tpu=functools.partial(rmsnorm, interpret=False),
+    default="backend")
+
+dispatch.register_op(
+    "wkv",
+    ref=ref.wkv_reference,
+    pallas_interpret=functools.partial(wkv_forward, interpret=True),
+    pallas_tpu=functools.partial(wkv_forward, interpret=False),
+    default="backend")
 
 
 # --------------------------------------------------------------------------
-def ef_threshold_update(m, g, eta, tau, *, impl: str = "ref"):
-    """Fused EF accumulate+sparsify. m, g: any shape; returns (sent, m')."""
-    if impl == "ref":
-        return ref.ef_threshold_update(m, g, jnp.asarray(eta),
-                                       jnp.asarray(tau))
-    shape = m.shape
-    flat = m.reshape(-1)
-    C = 1024
-    pad = (-flat.size) % C
-    m2 = jnp.pad(m.reshape(-1), (0, pad)).reshape(-1, C)
-    g2 = jnp.pad(g.reshape(-1), (0, pad)).reshape(-1, C)
-    sent, mnew = ef_apply(m2, g2, jnp.asarray(eta, jnp.float32),
-                          jnp.asarray(tau, jnp.float32),
-                          interpret=_INTERPRET)
-    d = flat.size
-    return (sent.reshape(-1)[:d].reshape(shape),
-            mnew.reshape(-1)[:d].reshape(shape))
+# block layout helpers
+# --------------------------------------------------------------------------
+
+def _to_blocks(x: jax.Array, block: int):
+    """(L?, d) -> (L*nb, block) zero-padded block rows; blocks never span
+    the leading (layer) axis.  1D inputs are a single layer."""
+    shape = x.shape
+    L = math.prod(shape[:-1]) if x.ndim >= 2 else 1
+    d = shape[-1] if x.ndim >= 1 else 1
+    flat = x.reshape(L, d)
+    pad = (-d) % block
+    padded = jnp.pad(flat, ((0, 0), (0, pad)))
+    nb = (d + pad) // block
+    return padded.reshape(L * nb, block), (shape, L, d)
+
+
+def _from_blocks(blocks: jax.Array, meta) -> jax.Array:
+    shape, L, d = meta
+    return blocks.reshape(L, -1)[:, :d].reshape(shape)
+
+
+# --------------------------------------------------------------------------
+# EF-compression ops (the paper's per-step hot loop)
+# --------------------------------------------------------------------------
+
+def ef_threshold_update(m, g, eta, tau, *, impl: str | None = None):
+    """Fused EF accumulate+sparsify against ONE scalar threshold.
+
+    m, g: any shape; returns (sent, m') in m.dtype with the exact identity
+    ``sent + m' == m + eta*g``.
+    """
+    m2, meta = _to_blocks(m.reshape(-1), 1024)
+    g2, _ = _to_blocks(g.reshape(-1), 1024)
+    tau_r = jnp.broadcast_to(jnp.asarray(tau, jnp.float32),
+                             (m2.shape[0],)).reshape(-1, 1)
+    sent, mnew = dispatch.call("ef_update", m2, g2,
+                               jnp.asarray(eta, jnp.float32), tau_r,
+                               impl=impl)
+    meta = (m.shape, 1, m.size)
+    return _from_blocks(sent, meta), _from_blocks(mnew, meta)
 
 
 def block_topk_threshold(x, k_b: int, block: int = 1024, *,
-                         impl: str = "ref"):
+                         impl: str | None = None):
     """Per-block k_b-th |.| statistic; (n_blocks,) f32."""
-    flat = x.reshape(-1)
-    pad = (-flat.size) % block
-    blocks = jnp.pad(flat, (0, pad)).reshape(-1, block)
-    if impl == "ref":
-        return ref.block_abs_topk_threshold(blocks.reshape(-1), k_b, block)
-    return block_stats(blocks, k_b, interpret=_INTERPRET).reshape(-1)
+    x2, _ = _to_blocks(x.reshape(-1), block)
+    return dispatch.call("block_stats", x2, k_b, impl=impl).reshape(-1)
 
+
+def ef_block_stats(m, g, eta, k_b: int, block: int = 1024, *,
+                   impl: str | None = None):
+    """Fused pass 1: per-block k_b-th largest |m + eta*g|; (L*nb, 1) f32.
+
+    m, g: (d,) or (L, d); blocks never span layers.
+    """
+    m2, _ = _to_blocks(m, block)
+    g2, _ = _to_blocks(g, block)
+    return dispatch.call("ef_stats", m2, g2, jnp.asarray(eta, jnp.float32),
+                         k_b, impl=impl)
+
+
+def fused_ef_compress(m, g, eta, gamma: float, block: int = 1024, *,
+                      impl: str | None = None):
+    """The full two-pass fused EF compression (DESIGN.md §3).
+
+    Per 1024-wide block b of ``acc = m + eta*g`` (blocks never span the
+    leading layer axis): tau_b = k_b-th largest |acc_b| with
+    k_b = round(gamma*block); sent keeps entries with |acc| >= tau_b and
+    m' carries the rest.  Returns (sent, m', tau) where sent/m' have m's
+    shape and ``sent + m' == m + eta*g`` holds exactly; tau is (L*nb, 1).
+    """
+    k_b = max(1, int(round(gamma * block)))
+    m2, meta = _to_blocks(m, block)
+    g2, _ = _to_blocks(g, block)
+    eta = jnp.asarray(eta, jnp.float32)
+    tau = dispatch.call("ef_stats", m2, g2, eta, k_b, impl=impl)
+    sent, mnew = dispatch.call("ef_update", m2, g2, eta, tau, impl=impl)
+    return _from_blocks(sent, meta), _from_blocks(mnew, meta), tau
+
+
+def threshold_split_blocks(x, tau, block: int = 1024, *,
+                           impl: str | None = None):
+    """Dense split of x into (sent, residual) against per-block tau.
+
+    x: (d,) or (L, d); tau: (L*nb, 1) from :func:`ef_block_stats` /
+    :func:`block_topk_threshold`.  ``sent + residual == x`` exactly.
+    """
+    x2, meta = _to_blocks(x, block)
+    sent, res = dispatch.call("threshold_split", x2, tau, impl=impl)
+    return _from_blocks(sent, meta), _from_blocks(res, meta)
+
+
+# --------------------------------------------------------------------------
+# model-side ops
+# --------------------------------------------------------------------------
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               scale: float | None = None, q_offset: int | None = None,
-              impl: str = "ref"):
+              impl: str | None = None):
     """MHA (B,H,S,D)x(B,H,Sk,D). GQA: broadcast kv heads before calling."""
-    if impl == "ref" or q_offset is not None:
+    if q_offset is not None or dispatch.resolve("attention", impl) == "ref":
         return ref.mha_reference(q, k, v, causal=causal, window=window,
                                  scale=scale, q_offset=q_offset)
-    return flash_attention(q, k, v, causal=causal, window=window,
-                           scale=scale, interpret=_INTERPRET)
+    return dispatch.call("attention", q, k, v, causal=causal, window=window,
+                         scale=scale, impl=impl)
 
 
-def rms_norm(x, w, *, eps: float = 1e-6, impl: str = "ref"):
-    if impl == "ref":
-        return ref.rmsnorm_reference(x, w, eps)
-    return rmsnorm(x, w, eps=eps, interpret=_INTERPRET)
+def rms_norm(x, w, *, eps: float = 1e-6, impl: str | None = None):
+    return dispatch.call("rmsnorm", x, w, eps=eps, impl=impl)
 
 
-def wkv(r, k, v, w, u, s0, *, impl: str = "ref"):
+def wkv(r, k, v, w, u, s0, *, impl: str | None = None):
     """RWKV-6 WKV recurrence (see rwkv_wkv.py). Returns (y, final_state)."""
-    if impl == "ref":
-        return ref.wkv_reference(r, k, v, w, u, s0)
-    from .rwkv_wkv import wkv_forward
-    return wkv_forward(r, k, v, w, u, s0, interpret=_INTERPRET)
+    return dispatch.call("wkv", r, k, v, w, u, s0, impl=impl)

@@ -29,6 +29,42 @@ def ef_threshold_update(m: jax.Array, g: jax.Array, eta: jax.Array,
     return sent.astype(m.dtype), m_new.astype(m.dtype)
 
 
+def ef_block_update(m: jax.Array, g: jax.Array, eta: jax.Array,
+                    tau: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block-row EF threshold sparsification (DESIGN.md §3).
+
+    m, g: (R, C) block rows; eta scalar; tau: (R, 1) per-row thresholds.
+
+        acc  = m + eta * g
+        sent = acc * (|acc| >= tau_row)
+        m'   = acc - sent
+
+    Returns (sent, m_new) in the dtype of ``m``.  The EF identity
+    ``sent + m' == m + eta*g`` holds bit-exactly in f32.
+    """
+    acc = m.astype(jnp.float32) + eta.astype(jnp.float32) * g.astype(jnp.float32)
+    mask = jnp.abs(acc) >= tau.reshape(-1, 1).astype(jnp.float32)
+    sent = jnp.where(mask, acc, 0.0)
+    return sent.astype(m.dtype), (acc - sent).astype(m.dtype)
+
+
+def ef_block_stats(m: jax.Array, g: jax.Array, eta: jax.Array,
+                   k_b: int) -> jax.Array:
+    """Per-block-row k_b-th largest |m + eta*g|. (R, C) -> (R, 1) f32."""
+    acc = m.astype(jnp.float32) + eta.astype(jnp.float32) * g.astype(jnp.float32)
+    vals, _ = jax.lax.top_k(jnp.abs(acc), k_b)
+    return vals[:, -1:]
+
+
+def threshold_split(x: jax.Array, tau: jax.Array) -> tuple[jax.Array,
+                                                           jax.Array]:
+    """Per-block-row dense split: (sent, residual). x: (R, C); tau: (R, 1)."""
+    xf = x.astype(jnp.float32)
+    sent = jnp.where(jnp.abs(xf) >= tau.reshape(-1, 1).astype(jnp.float32),
+                     xf, 0.0)
+    return sent.astype(x.dtype), (xf - sent).astype(x.dtype)
+
+
 def block_abs_topk_threshold(x: jax.Array, k_b: int, block: int) -> jax.Array:
     """Per-block k_b-th largest |x|. x flat, padded to a multiple of block.
 

@@ -30,21 +30,28 @@ from jax.experimental import pallas as pl
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
                 *, seq_len: int):
-    S = s0_ref[0].astype(jnp.float32)              # (K, V)
-    u = u_ref[0].astype(jnp.float32)               # (K,)
+    # NB: refs are indexed with slices (pl.dslice / [...]), never bare
+    # Python ints — interpret-mode discharge chokes on raw int indices.
+    S = s0_ref[...][0].astype(jnp.float32)         # (K, V)
+    u = u_ref[...][0].astype(jnp.float32)          # (K,)
+
+    def _step(ref, t):
+        return pl.load(ref, (pl.dslice(0, 1), pl.dslice(t, 1),
+                             slice(None)))[0, 0]
 
     def body(t, S):
-        rt = r_ref[0, t].astype(jnp.float32)       # (K,)
-        kt = k_ref[0, t].astype(jnp.float32)
-        vt = v_ref[0, t].astype(jnp.float32)       # (V,)
-        wt = w_ref[0, t].astype(jnp.float32)       # (K,)
+        rt = _step(r_ref, t).astype(jnp.float32)   # (K,)
+        kt = _step(k_ref, t).astype(jnp.float32)
+        vt = _step(v_ref, t).astype(jnp.float32)   # (V,)
+        wt = _step(w_ref, t).astype(jnp.float32)   # (K,)
         kv = kt[:, None] * vt[None, :]             # (K, V) outer
         y = jnp.sum(rt[:, None] * (S + u[:, None] * kv), axis=0)
-        y_ref[0, t] = y.astype(y_ref.dtype)
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 y.astype(y_ref.dtype)[None, None])
         return wt[:, None] * S + kv
 
     S = jax.lax.fori_loop(0, seq_len, body, S)
-    sT_ref[0] = S.astype(sT_ref.dtype)
+    sT_ref[...] = S.astype(sT_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -24,6 +24,8 @@ import time
 import traceback
 
 import jax
+
+from repro.compat import set_mesh
 import jax.numpy as jnp
 
 from repro.configs import ARCH_NAMES, SHAPES, get_config
@@ -314,7 +316,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                           local_steps)
     n_chips = mesh.size
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         key_like = jax.ShapeDtypeStruct((2,), jnp.uint32)
         params_like = jax.eval_shape(model.init, key_like)
         rec["n_params"] = int(sum(x.size for x in jax.tree.leaves(params_like)))
@@ -352,7 +354,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 2)
 
-        ca = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis
+        ca = cost_analysis(compiled)
         # raw XLA numbers (per-device, while-bodies counted ONCE — kept as
         # diagnostics; the trip-count-aware numbers below are authoritative)
         rec["xla_flops_body_once"] = float(ca.get("flops", 0.0))

@@ -15,6 +15,8 @@ import math
 import time
 
 import jax
+
+from repro.compat import set_mesh
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -51,7 +53,7 @@ def main() -> None:
     shape = ShapeConfig("serve", CTX + GEN, B, "decode")
     run = RunConfig(model=cfg, shape=shape)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         from repro.sharding import param_pspecs
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s),

@@ -18,6 +18,8 @@ import os
 import time
 
 import jax
+
+from repro.compat import set_mesh
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -55,6 +57,11 @@ def main() -> None:
     ap.add_argument("--opt", default="csgd_asss",
                     choices=["csgd_asss", "nonadaptive", "sgd", "dense", "sls"])
     ap.add_argument("--gamma", type=float, default=0.01)
+    ap.add_argument("--compress-method", default="topk",
+                    choices=["topk", "block_topk", "none"],
+                    help="block_topk = fused Pallas kernel path")
+    ap.add_argument("--no-kernel", action="store_true",
+                    help="block_topk via pure jnp (kernel escape hatch)")
     ap.add_argument("--eta", type=float, default=0.1)
     # (momentum is a single-node CSGDConfig option — see repro.core.csgd;
     # the distributed worker implements the paper's Algorithm 3 + the
@@ -82,13 +89,15 @@ def main() -> None:
         optimizer=OptimizerConfig(
             kind=args.opt, armijo=ArmijoConfig(),
             compressor=Compressor(gamma=args.gamma,
-                                  value_bits=args.value_bits),
+                                  method=args.compress_method,
+                                  value_bits=args.value_bits,
+                                  use_kernel=not args.no_kernel),
             eta=args.eta, ef_dtype=args.ef_dtype,
             shard_local_topk=args.shard_local_topk,
             local_steps=args.local_steps),
         microbatches=args.microbatches)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, param_shardings(params, mesh))
         opt_state = init_opt_state(params, run, W)

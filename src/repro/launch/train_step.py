@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
 from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
@@ -80,11 +81,16 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
     dp = dp_axes_of(mesh)
     dp_spec = dp if len(dp) > 1 else dp[0]
     pspecs = param_pspecs(params)
+    if not compat.PARTIAL_AUTO_SAFE:
+        # 0.4.x: model-sharded state entering the manual-dp shard_map's
+        # scan crashes XLA — keep trailing dims replicated (compat.py).
+        pspecs = jax.tree.map(lambda _: P(), pspecs)
     mem_kind = ("pinned_host" if run_cfg.optimizer.ef_host_offload
-                else "device")
+                else None)
 
     def mem_sh(ps):
-        return NamedSharding(mesh, P(dp_spec, *ps), memory_kind=mem_kind)
+        return compat.named_sharding(mesh, P(dp_spec, *ps),
+                                     memory_kind=mem_kind)
 
     rep = NamedSharding(mesh, P())
     vec = NamedSharding(mesh, P(dp_spec))
@@ -236,10 +242,10 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 # region so selection runs on the local gradient shard and
                 # the only collective stays the small dp sparse all-gather.
                 pspecs = param_pspecs(params)
-                inner = jax.shard_map(
+                inner = compat.shard_map(
                     lambda g, m2, e: worker_compress_aggregate(
                         g, m2, e, opt.compressor, dp, stacked_mask=smask),
-                    mesh=jax.sharding.get_abstract_mesh(),  # nested: context
+                    mesh=None,  # nested: resolve from the trace context
                     in_specs=(pspecs, pspecs, P()),
                     out_specs=(pspecs, pspecs, P()),
                     axis_names={"model"}, check_vma=False)
@@ -280,15 +286,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         metrics_spec = {k: rep for k in
                         ("loss", "grad_sqnorm", "alpha", "n_evals",
                          "wire_bytes")}
-        sm = jax.shard_map(
+        # Manual over dp, auto over 'model' (XLA partitions the TP math).
+        # On 0.4.x partial-auto shard_map cannot contain a lax.scan
+        # (compat.PARTIAL_AUTO_SAFE), so there the body is manual over
+        # EVERY axis and the model axis simply replicates the worker math.
+        manual = set(dp) if compat.PARTIAL_AUTO_SAFE \
+            else set(mesh.axis_names)
+        sm = compat.shard_map(
             worker_fn, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: rep, params_like),
                       state_in, batch_spec_of(batch_like)),
             out_specs=(jax.tree.map(lambda _: rep, params_like),
                        state_in, metrics_spec),
-            axis_names=set(dp), check_vma=False)
-        # outer jit: model-axis shardings
+            axis_names=manual, check_vma=False)
+        # outer jit: model-axis shardings (replicated on 0.4.x — see
+        # compat.PARTIAL_AUTO_SAFE)
         pspecs = param_pspecs(params_like)
+        if not compat.PARTIAL_AUTO_SAFE:
+            pspecs = jax.tree.map(lambda _: P(), pspecs)
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
         opt_sh = opt_state_shardings(
             init_opt_state(params_like, run_cfg, W, abstract=True),

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.utils import DP, TP, hint
 from .layers import he_init
@@ -32,10 +33,10 @@ def _maybe_expert_parallel(p, x, cfg: ModelConfig, no_drop: bool):
     output; a single activation-sized ``psum`` over 'model' combines.
     Returns None when no mesh/model axis is active (CPU smoke path).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or "model" not in mesh.axis_names:
         return None
-    manual = set(getattr(mesh, "manual_axes", ()) or ())
+    manual = set(mesh.manual_axes)
     if "model" in manual:
         return None
     n_shards = mesh.shape["model"]
@@ -68,7 +69,7 @@ def _maybe_expert_parallel(p, x, cfg: ModelConfig, no_drop: bool):
             aux = jax.lax.pmean(aux, tuple(dp))
         return jax.lax.psum(y, "model"), aux
 
-    f = jax.shard_map(
+    f = compat.shard_map(
         body, mesh=mesh,
         in_specs=(xspec, P(), wspec, wspec, wspec),
         out_specs=(xspec, P()),

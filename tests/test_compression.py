@@ -86,6 +86,83 @@ def test_wire_bytes_accounting():
     assert b == 1000 * 8 + 500 * 4  # k*(val+idx) + dense small leaf
 
 
+def _run_worker(tree, comp, eta=0.1):
+    """worker_compress_aggregate under a real 1-device shard_map (this also
+    exercises the compat axis_size path of ``_dp_size``)."""
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core.dcsgd import worker_compress_aggregate
+
+    mesh = jax.make_mesh((1,), ("data",))
+    mem = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+    f = shard_map(
+        partial(worker_compress_aggregate, comp=comp, dp_axes=("data",)),
+        mesh=mesh, in_specs=(spec, spec, P()), out_specs=(spec, spec, P()),
+        axis_names={"data"})
+    return jax.jit(f)(tree, mem, jnp.float32(eta))
+
+
+@pytest.mark.parametrize("method", ["topk", "block_topk"])
+@pytest.mark.parametrize("value_bits", [32, 8])
+def test_wire_bytes_matches_worker_accounting(key, method, value_bits):
+    """Compressor.wire_bytes == the bytes actually counted per step by
+    worker_compress_aggregate, for every method/value_bits combination."""
+    comp = Compressor(gamma=0.05, method=method, value_bits=value_bits,
+                      min_compress_size=64, block=256)
+    tree = {"a": jax.random.normal(key, (4096,)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (50,)),
+            "c": jax.random.normal(jax.random.fold_in(key, 2), (1000,)),
+            # stacked leaves: per-layer blocking/padding (d % block != 0)
+            # and a per-layer size below the dense cutoff
+            "s": jax.random.normal(jax.random.fold_in(key, 3), (4, 1300)),
+            "t": jax.random.normal(jax.random.fold_in(key, 4), (4, 60))}
+    _, _, wire = _run_worker(tree, comp)
+    assert int(wire) == tree_wire_bytes(tree, comp)
+
+
+def test_worker_aggregate_kernel_parity(key):
+    """The fused-kernel block_topk path == the pure-jnp path (use_kernel
+    escape hatch) on the same inputs: identical updates, EF memory, wire."""
+    tree = {"w": jax.random.normal(key, (2, 2048)),   # stacked (L=2)
+            "v": jax.random.normal(jax.random.fold_in(key, 1), (3000,))}
+    mk = lambda use_kernel: Compressor(gamma=0.05, method="block_topk",
+                                       block=512, min_compress_size=64,
+                                       use_kernel=use_kernel)
+    up_k, mem_k, wire_k = _run_worker(tree, mk(True))
+    up_j, mem_j, wire_j = _run_worker(tree, mk(False))
+    for a, b in zip(jax.tree.leaves(up_k), jax.tree.leaves(up_j)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    for a, b in zip(jax.tree.leaves(mem_k), jax.tree.leaves(mem_j)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    assert float(wire_k) == float(wire_j)
+
+
+def test_compress_dense_block_topk_kernel_identity(key):
+    """Dense block_topk path (fused kernels by default): exact split and
+    per-block keep budget."""
+    comp = Compressor(gamma=0.05, method="block_topk", block=1024)
+    x = jax.random.normal(key, (4096,))
+    sent, resid = comp.compress_dense(x)
+    np.testing.assert_array_equal(np.asarray(sent) + np.asarray(resid),
+                                  np.asarray(x))
+    per_block = np.count_nonzero(np.asarray(sent).reshape(4, 1024), axis=1)
+    np.testing.assert_array_equal(per_block, np.full(4, comp.block_k()))
+    # escape hatch still works (global-threshold jnp composition)
+    sent2, resid2 = Compressor(gamma=0.05, method="block_topk", block=1024,
+                               use_kernel=False).compress_dense(x)
+    np.testing.assert_allclose(np.asarray(sent2 + resid2), np.asarray(x),
+                               atol=1e-7)
+    # multi-dim leaf whose last dim is no block multiple: both passes must
+    # agree on one flattened block layout (regression)
+    y = jax.random.normal(jax.random.fold_in(key, 9), (3, 1500))
+    sent3, resid3 = comp.compress_dense(y)
+    assert sent3.shape == y.shape
+    np.testing.assert_array_equal(np.asarray(sent3) + np.asarray(resid3),
+                                  np.asarray(y))
+
+
 def test_contraction_gamma_metric(key):
     x = jax.random.normal(key, (2048,))
     comp = Compressor(gamma=0.1)

@@ -134,6 +134,7 @@ def test_local_steps_distributed():
         from repro.core import Compressor, ArmijoConfig
         from repro.models import build_model
         from repro.launch.train_step import build_train_step, init_opt_state, opt_state_shardings
+        from repro.compat import set_mesh
         from repro.sharding import param_shardings
         from repro.data.synthetic import TokenPipeline
         from jax.sharding import NamedSharding, PartitionSpec as P
@@ -147,7 +148,7 @@ def test_local_steps_distributed():
                 local_steps=2),
             microbatches=2)
         pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             params = m.init(jax.random.PRNGKey(0))
             params = jax.device_put(params, param_shardings(params, mesh))
             st = init_opt_state(params, run, 4)

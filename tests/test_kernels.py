@@ -26,6 +26,88 @@ def test_ef_threshold_update_sweep(key, n, dtype):
                                + np.asarray(m2, np.float32), acc, atol=2e-2)
 
 
+def test_dispatch_registry_and_resolution():
+    """Every op is registered with a ref oracle; resolution follows the
+    per-op policy (EF ops take the kernel path even off-TPU) and the
+    process-wide override wins over policy."""
+    from repro.kernels import dispatch
+    reg = dispatch.registered()
+    for op in ("ef_update", "block_stats", "ef_stats", "threshold_split",
+               "attention", "rmsnorm", "wkv"):
+        assert "ref" in reg[op], op
+        assert "pallas-interpret" in reg[op], op
+        assert "pallas-tpu" in reg[op], op
+    on_tpu = jax.default_backend() == "tpu"
+    want_ef = "pallas-tpu" if on_tpu else "pallas-interpret"
+    assert dispatch.resolve("ef_update") == want_ef
+    assert dispatch.resolve("attention") == ("pallas-tpu" if on_tpu
+                                             else "ref")
+    assert dispatch.resolve("attention", "pallas") == want_ef
+    with dispatch.using("ref"):
+        assert dispatch.resolve("ef_update") == "ref"
+    assert dispatch.resolve("ef_update") == want_ef
+
+
+@pytest.mark.parametrize("shape", [(5000,), (3, 4096), (2, 2500)])
+def test_fused_ef_identity_bitlevel(key, shape):
+    """The fused kernel's EF identity is BIT-exact: sent + m' == m + eta*g
+    (each position is nonzero in exactly one of sent/m'), and the kernel
+    path equals the ref.py math bit-for-bit in f32.
+
+    eta is a power of two so eta*g is exact and FMA-vs-mul+add rounding
+    cannot differ — the comparison against numpy is strict equality.
+    """
+    eta = 0.5
+    m = jax.random.normal(key, shape, jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), shape, jnp.float32)
+    sent, mnew, tau = ops.fused_ef_compress(m, g, eta, gamma=0.03,
+                                            impl="pallas")
+    acc = np.asarray(m, np.float32) + np.float32(eta) * np.asarray(
+        g, np.float32)
+    np.testing.assert_array_equal(np.asarray(sent) + np.asarray(mnew), acc)
+    # disjoint support: fused split never duplicates or drops a position
+    assert not np.any(np.logical_and(np.asarray(sent) != 0,
+                                     np.asarray(mnew) != 0))
+    sent_r, mnew_r, tau_r = ops.fused_ef_compress(m, g, eta, gamma=0.03,
+                                                  impl="ref")
+    np.testing.assert_array_equal(np.asarray(sent), np.asarray(sent_r))
+    np.testing.assert_array_equal(np.asarray(mnew), np.asarray(mnew_r))
+    np.testing.assert_array_equal(np.asarray(tau), np.asarray(tau_r))
+
+
+def test_fused_ef_compress_block_budget(key):
+    """Each full 1024-wide block keeps exactly k_b = round(gamma*block)
+    entries (random floats: no ties)."""
+    m = jax.random.normal(key, (4096,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (4096,))
+    gamma = 0.05
+    sent, mnew, _ = ops.fused_ef_compress(m, g, 0.2, gamma=gamma)
+    k_b = round(gamma * 1024)
+    per_block = np.count_nonzero(np.asarray(sent).reshape(4, 1024), axis=1)
+    np.testing.assert_array_equal(per_block, np.full(4, k_b))
+
+
+def test_threshold_split_blocks_matches_ref(key):
+    x = jax.random.normal(key, (3, 3072))
+    tau = ops.block_topk_threshold(x, 16, 1024).reshape(-1, 1)
+    s1, r1 = ops.threshold_split_blocks(x, tau, 1024, impl="ref")
+    s2, r2 = ops.threshold_split_blocks(x, tau, 1024, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_allclose(np.asarray(s2 + r2), np.asarray(x),
+                               atol=0.0)
+
+
+def test_kth_largest_tie_semantics():
+    """Tied magnitudes count like lax.top_k duplicates: for [5, -5, 3, 0...]
+    the 2nd largest |.| is 5 (not 3) in BOTH the ref and the kernel path."""
+    x = jnp.zeros((512,)).at[0].set(5.0).at[1].set(-5.0).at[2].set(3.0)
+    t_ref = ops.block_topk_threshold(x, 2, 512, impl="ref")
+    t_pal = ops.block_topk_threshold(x, 2, 512, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_pal))
+    assert float(t_pal[0]) == 5.0
+
+
 @pytest.mark.parametrize("k_b", [1, 8, 32])
 def test_block_stats_sweep(key, k_b):
     x = jax.random.normal(key, (4096,))

@@ -64,6 +64,32 @@ def main() -> dict:
     emit("kernel_rmsnorm_4kx2k_ref", us, "fused rmsnorm")
     out["rmsnorm"] = us
 
+    # ---- wire pack/unpack: ref vs pallas on a production payload shape ----
+    # qwen1.5-4b MLP leaf at gamma=1%, value_bits=8: 2560 layer rows of
+    # k=70 entries each -> 16-bit block-local indices + 8-bit values.
+    from repro.kernels import ops as _ops
+    R, k = 2560, 70
+    fields16 = jax.random.randint(key, (R, k), 0, 1 << 16).astype(jnp.uint32)
+    for bits in (8, 16):
+        nwords = -(-k * bits // 32)
+        words = jax.random.randint(jax.random.fold_in(key, bits),
+                                   (R, nwords), 0, 1 << 30).astype(jnp.uint32)
+        row = {}
+        for impl in ("ref", "pallas"):
+            f_p = jax.jit(lambda f, impl=impl, bits=bits:
+                          _ops.pack_fields(f, bits, impl=impl))
+            f_u = jax.jit(lambda w, impl=impl, bits=bits:
+                          _ops.unpack_fields(w, k, bits, impl=impl))
+            us_p = timeit(f_p, fields16)
+            us_u = timeit(f_u, words)
+            emit(f"kernel_wire_pack{bits}_{impl}", us_p,
+                 f"bit-pack {R}x{k} {bits}b fields")
+            emit(f"kernel_wire_unpack{bits}_{impl}", us_u,
+                 f"bit-unpack {R}x{k} {bits}b fields")
+            row[impl] = us_p + us_u
+        row["ratio_ref_over_fused"] = row["ref"] / max(row["pallas"], 1e-9)
+        out[f"wire_pack{bits}"] = row
+
     # ---- ref vs fused EF two-pass compression on paper layer shapes ----
     for si, (name, shape) in enumerate(EF_LAYER_SHAPES):
         m = jax.random.normal(key, shape)

@@ -1,0 +1,8 @@
+"""Compressed communication: the bit-packed wire format and the packed
+payload exchange that make ``wire_bytes`` the literal bytes on the mesh
+(DESIGN.md §8)."""
+from .exchange import check_payload, gather_packed
+from .wire import WireSpec, decode_rows, encode_rows
+
+__all__ = ["WireSpec", "encode_rows", "decode_rows", "check_payload",
+           "gather_packed"]

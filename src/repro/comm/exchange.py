@@ -1,0 +1,47 @@
+"""Packed payload exchange over the data-parallel mesh axes.
+
+The only collective the compressed path issues per leaf is an ``all_gather``
+of the fixed-size packed payload built by :mod:`repro.comm.wire` — W * L *
+``WireSpec.row_bytes`` bytes cross the mesh axis, nothing else.  The
+byte-accounting contract (``Compressor.wire_bytes`` == payload bytes) is
+enforced at trace time by :func:`check_payload`.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .wire import WireSpec
+
+AxisNames = Sequence[str] | str
+
+
+def check_payload(payload: jax.Array, spec: WireSpec, comp, d: int) -> None:
+    """Trace-time guarantee that the buffer about to cross the mesh axis is
+    exactly the bytes ``Compressor.wire_bytes`` accounts for.  Shapes and
+    dtypes are static, so a violation fails at trace/compile time, not at
+    runtime on some worker.  Raises (not assert): the contract must hold
+    under ``python -O`` too."""
+    if payload.dtype != jnp.uint32:
+        raise ValueError(f"payload must be uint32, got {payload.dtype}")
+    if payload.shape[-1] != spec.row_words:
+        raise ValueError(f"payload row is {payload.shape[-1]} words, "
+                         f"spec says {spec.row_words}")
+    accounted = comp.wire_bytes(d)
+    physical = spec.row_bytes
+    if physical != accounted:
+        raise ValueError(
+            f"wire accounting drift: payload row is {physical} B but "
+            f"Compressor.wire_bytes({d}) = {accounted} B")
+
+
+def gather_packed(payload: jax.Array, dp_axes: AxisNames) -> jax.Array:
+    """All-gather one worker's (L, row_words) payload over the dp axes ->
+    (W, L, row_words) with the worker axis flattened across multi-axis
+    meshes (('pod','data') gathers as (pod, data, ...))."""
+    gathered = jax.lax.all_gather(payload, dp_axes)
+    if isinstance(dp_axes, (tuple, list)) and len(dp_axes) > 1:
+        gathered = gathered.reshape(-1, *payload.shape)
+    return gathered

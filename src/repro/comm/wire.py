@@ -1,0 +1,183 @@
+"""Bit-packed compressed-gradient wire format (DESIGN.md §8).
+
+This module makes ``Compressor.wire_bytes`` *physically real*: the sparse
+(values, indices) pairs that DCSGD exchanges per layer row are encoded into
+one contiguous ``uint32`` payload whose byte length IS the accounted wire
+cost, and that payload is what crosses the mesh axis in
+``dcsgd.worker_compress_aggregate``.
+
+Row layout (all sizes static given a :class:`WireSpec`)::
+
+    [ header | index section | value section ]        (uint32 words)
+
+* **header** — 1 word iff ``value_bits <= 8``: the f32 bits of the per-row
+  absmax quantization scale (``compression.quant_scale``).  16/32-bit
+  values are self-describing; no header.
+* **index section** — k fields of ``index_bits`` each, bit-packed
+  little-endian within words (kernels/ref.py layout), zero-padded to a
+  whole word.  ``block_topk`` rows store *block-local* 16-bit indices: the
+  wire ships exactly ``k_b`` entries per block in block order, so entry j
+  belongs to block ``j // k_b`` and only ``idx % block`` needs encoding.
+  Exact ``topk`` rows store flat indices (16-bit when d fits, else 32).
+* **value section** — k fields of ``value_bits`` each: raw f32 bits (32),
+  bfloat16 bits (16), or two's-complement absmax-scaled integers (8/4).
+
+Decoding is the exact inverse; for quantized values the dequantized floats
+equal ``Compressor.quantize_values`` bit-for-bit (shared scale formula), so
+the error-feedback residual taken against the decoded payload preserves the
+telescoping identity exactly — see tests/test_property.py.
+
+The field<->word conversion dispatches through ``kernels/ops.pack_fields``
+/ ``unpack_fields`` ({ref, pallas-interpret, pallas-tpu} per
+kernels/dispatch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+
+def _quant_helpers():
+    # repro.core.dcsgd imports this package, so the core import must stay
+    # function-local to keep `import repro.core` / `import repro.comm`
+    # both cycle-free.
+    from repro.core.compression import QMAX, quant_scale
+    return QMAX, quant_scale
+
+WORD_BYTES = 4
+VALUE_BITS = (4, 8, 16, 32)
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """Static description of one leaf row's packed payload."""
+
+    k: int             # wire entries per row
+    d: int             # dense row length the indices address
+    value_bits: int    # 4 | 8 | 16 | 32
+    index_bits: int    # 16 | 32
+    local: bool        # True: indices are block-local (block_topk rows)
+    block: int = 0     # block width when local
+    k_b: int = 0       # entries per block when local
+
+    def __post_init__(self):
+        if self.value_bits not in VALUE_BITS:
+            raise ValueError(f"unsupported value_bits {self.value_bits}")
+        if self.index_bits not in (16, 32):
+            raise ValueError(f"unsupported index_bits {self.index_bits}")
+        if self.local and self.block > (1 << 16):
+            raise ValueError("block-local 16-bit indices need block <= 2^16")
+
+    @classmethod
+    def for_row(cls, comp, d: int) -> "WireSpec | None":
+        """Spec for one layer row of size d under ``comp`` (a
+        :class:`~repro.core.compression.Compressor` or duck-type thereof).
+        None when the row ships dense (no packed payload)."""
+        k = comp.sparse_k(d)
+        if k >= d:
+            return None
+        if comp.method == "block_topk":
+            return cls(k=k, d=d, value_bits=comp.value_bits,
+                       index_bits=16 if comp.block <= (1 << 16) else 32,
+                       local=comp.block <= (1 << 16),
+                       block=comp.block, k_b=comp.block_k())
+        return cls(k=k, d=d, value_bits=comp.value_bits,
+                   index_bits=16 if d <= (1 << 16) else 32, local=False)
+
+    # ---- static layout ----------------------------------------------------
+    @property
+    def header_words(self) -> int:
+        return 1 if self.value_bits <= 8 else 0
+
+    @property
+    def index_words(self) -> int:
+        return -(-self.k * self.index_bits // 32)
+
+    @property
+    def value_words(self) -> int:
+        return -(-self.k * self.value_bits // 32)
+
+    @property
+    def row_words(self) -> int:
+        return self.header_words + self.index_words + self.value_words
+
+    @property
+    def row_bytes(self) -> int:
+        return self.row_words * WORD_BYTES
+
+    def _local_base(self) -> jax.Array:
+        """Flat-index base of each entry's block, (k,) int32."""
+        return (jnp.arange(self.k, dtype=jnp.int32) // self.k_b) * self.block
+
+
+def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
+                impl: str | None = None) -> jax.Array:
+    """Encode (R, k) f32 values + (R, k) int32 flat indices into the packed
+    (R, row_words) uint32 payload."""
+    R, k = vals.shape
+    assert k == spec.k, (k, spec.k)
+    vals = vals.astype(jnp.float32)
+    parts = []
+
+    # -- values (+ header) --------------------------------------------------
+    if spec.value_bits <= 8:
+        QMAX, quant_scale = _quant_helpers()
+        qmax = QMAX[spec.value_bits]
+        scale = quant_scale(vals, qmax)                       # (R, 1) f32
+        q = jnp.clip(jnp.round(vals / scale), -qmax, qmax).astype(jnp.int32)
+        vfields = q.astype(jnp.uint32)  # two's complement, masked on pack
+        parts.append(lax.bitcast_convert_type(scale, jnp.uint32))
+    elif spec.value_bits == 16:
+        vfields = lax.bitcast_convert_type(vals.astype(jnp.bfloat16),
+                                           jnp.uint16).astype(jnp.uint32)
+    else:
+        vfields = lax.bitcast_convert_type(vals, jnp.uint32)
+
+    # -- indices ------------------------------------------------------------
+    if spec.local:
+        ifields = (idx - spec._local_base()[None, :]).astype(jnp.uint32)
+    else:
+        ifields = idx.astype(jnp.uint32)
+
+    parts.append(ops.pack_fields(ifields, spec.index_bits, impl=impl))
+    parts.append(ops.pack_fields(vfields, spec.value_bits, impl=impl))
+    payload = jnp.concatenate(parts, axis=-1)
+    assert payload.shape == (R, spec.row_words), \
+        (payload.shape, spec.row_words)
+    return payload
+
+
+def decode_rows(payload: jax.Array, spec: WireSpec, *,
+                impl: str | None = None) -> tuple[jax.Array, jax.Array]:
+    """Decode a packed (R, row_words) uint32 payload back to
+    ((R, k) f32 dequantized values, (R, k) int32 flat indices)."""
+    R, words = payload.shape
+    assert words == spec.row_words, (words, spec.row_words)
+    off = spec.header_words
+    iw, vw = spec.index_words, spec.value_words
+    ifields = ops.unpack_fields(payload[:, off:off + iw], spec.k,
+                                spec.index_bits, impl=impl)
+    vfields = ops.unpack_fields(payload[:, off + iw:off + iw + vw], spec.k,
+                                spec.value_bits, impl=impl)
+
+    if spec.local:
+        idx = ifields.astype(jnp.int32) + spec._local_base()[None, :]
+    else:
+        idx = ifields.astype(jnp.int32)
+
+    if spec.value_bits <= 8:
+        scale = lax.bitcast_convert_type(payload[:, :1], jnp.float32)
+        q = vfields.astype(jnp.int32)
+        q = jnp.where(q >= (1 << (spec.value_bits - 1)),
+                      q - (1 << spec.value_bits), q)
+        vals = q.astype(jnp.float32) * scale
+    elif spec.value_bits == 16:
+        vals = lax.bitcast_convert_type(
+            vfields.astype(jnp.uint16), jnp.bfloat16).astype(jnp.float32)
+    else:
+        vals = lax.bitcast_convert_type(vfields, jnp.float32)
+    return vals, idx

@@ -33,6 +33,16 @@ PyTree = Any
 #: Leaves smaller than this are not compressed (paper §IV-A, following [8]).
 MIN_COMPRESS_SIZE = 1000
 
+#: Integer quantization range per sub-byte/byte value width (symmetric).
+QMAX = {8: 127.0, 4: 7.0}
+
+
+def quant_scale(vals: jax.Array, qmax: float) -> jax.Array:
+    """Per-row absmax quantization scale — THE scale formula, shared
+    bit-for-bit by :meth:`Compressor.quantize_values` and the packed wire
+    codec (repro/comm/wire.py) so dequantized values agree exactly."""
+    return jnp.max(jnp.abs(vals), axis=-1, keepdims=True) / qmax + 1e-30
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -144,12 +154,14 @@ def block_extract_sparse(x2d: jax.Array, comp: "Compressor"):
 class Compressor:
     """Per-leaf compression policy. ``gamma`` is the paper's k/d.
 
-    ``value_bits`` (32|16|8, beyond-paper): quantize the transmitted top-k
-    *values* on the wire (absmax-scaled); the error-feedback residual is
-    computed against the quantized values, so the EF telescoping identity
-    is preserved exactly and quantization error is recycled like any other
-    compression error.  At 8 bits the wire cost per entry drops from
-    4+4 B (f32 value + int32 index) to 1+4 B.
+    ``value_bits`` (32|16|8|4, beyond-paper): quantize the transmitted
+    top-k *values* on the wire (absmax-scaled); the error-feedback residual
+    is computed against the quantized values, so the EF telescoping
+    identity is preserved exactly and quantization error is recycled like
+    any other compression error.  Transmitted bytes follow the bit-packed
+    wire format (DESIGN.md §8, repro/comm/wire.py): per-row header +
+    bit-packed index and value sections, so at 8 bits an entry costs
+    1 B of value + 2 B of block-local index instead of 4+4 B.
 
     ``use_kernel``: route the ``block_topk`` hot path through the fused
     Pallas two-pass kernels (repro/kernels/ef_topk.py, dispatched by
@@ -186,18 +198,25 @@ class Compressor:
 
     def quantize_values(self, vals: jax.Array) -> jax.Array:
         """Simulate wire quantization (returns dequantized f32 values —
-        what the receivers reconstruct). Scale is per (leading dims) row."""
+        what the receivers reconstruct). Scale is per (leading dims) row.
+
+        Bit-for-bit identical to an encode->decode round trip through the
+        packed wire codec (repro/comm/wire.py), which shares this math.
+        """
         if self.value_bits >= 32:
             return vals
         if self.value_bits == 16:
             return vals.astype(jnp.bfloat16).astype(vals.dtype)
-        scale = jnp.max(jnp.abs(vals), axis=-1, keepdims=True) / 127.0 + 1e-30
-        q = jnp.clip(jnp.round(vals / scale), -127, 127)
+        qmax = QMAX[self.value_bits]
+        scale = quant_scale(vals, qmax)
+        q = jnp.clip(jnp.round(vals / scale), -qmax, qmax)
         return (q * scale).astype(vals.dtype)
 
     @property
     def value_bytes(self) -> int:
-        return {32: 4, 16: 2, 8: 1}[self.value_bits]
+        """Nominal per-entry value bytes, rounded up (4-bit packs two
+        entries per byte; exact accounting lives in :meth:`wire_bytes`)."""
+        return {32: 4, 16: 2, 8: 1, 4: 1}[self.value_bits]
 
     # -- dense-in dense-out (single-node semantics; update rule (6)) --------
     def compress_dense(self, x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -242,17 +261,22 @@ class Compressor:
         return topk_select(x, self.k_for(d))
 
     def wire_bytes(self, x_size: int, itemsize: int = 4) -> int:
-        """Bytes on the wire for one leaf (values + int32 indices).
+        """Bytes on the wire for one leaf row — the LITERAL byte length of
+        the ``uint32`` payload that ``worker_compress_aggregate`` builds and
+        all-gathers over the dp mesh axes (asserted there at trace time).
 
-        Matches the per-step accounting in ``worker_compress_aggregate``
-        exactly: transmitted values cost ``value_bytes`` each (wire
-        quantization), indices 4 B, and ``block_topk`` ships k_b pairs per
-        padded block.
+        Compressed rows follow the bit-packed wire format (DESIGN.md §8):
+        per-row header word (sub-byte value quantization only) + bit-packed
+        index section (16-bit block-local indices for ``block_topk``) +
+        bit-packed value section.  Uncompressed leaves ship dense.
         """
         k = self.sparse_k(x_size)
-        if k == x_size:          # uncompressed leaves ship dense, no indices
+        # uncompressed leaves ship dense — including rows where block
+        # padding pushes nb*k_b past d at large gamma (dcsgd pmean branch)
+        if k >= x_size:
             return x_size * itemsize
-        return k * (self.value_bytes + 4)
+        from repro.comm.wire import WireSpec  # local import: no cycle
+        return WireSpec.for_row(self, x_size).row_bytes
 
     def leaf_wire_bytes(self, shape: tuple[int, ...],
                         itemsize: int = 4) -> int:

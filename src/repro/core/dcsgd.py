@@ -7,11 +7,16 @@ data-parallel mesh axes (``('pod','data')`` or ``('data',)``) and auto over
   1. computes its local gradient (done by the caller),
   2. runs its own Armijo search on its local batch -> per-worker ``eta^(k)``,
   3. forms ``acc = m^(k) + eta^(k) * grad^(k)`` per leaf,
-  4. compresses ``acc`` to a (values, indices) pair,
-  5. **all-gathers the sparse pairs** over the dp axes (this replaces the
-     dense all-reduce; it is the paper's communication saving),
-  6. applies the dense mean of all workers' sparse contributions,
-  7. keeps ``m^(k) = acc - own_sparse`` locally (step 7 of Algorithm 3).
+  4. compresses ``acc`` to a (values, indices) pair and encodes it into a
+     bit-packed ``uint32`` payload (repro/comm/wire.py, DESIGN.md §8),
+  5. **all-gathers the packed payload** over the dp axes (this replaces the
+     dense all-reduce; the payload's byte length IS ``wire_bytes`` — the
+     paper's communication saving made physically real),
+  6. decodes every worker's payload and applies the dense mean of the
+     contributions,
+  7. keeps ``m^(k) = acc - decode(own payload)`` locally (step 7 of
+     Algorithm 3) — so wire quantization error and tie-dropped entries are
+     recycled through the error feedback.
 
 Leaves below the compression size threshold are aggregated densely
 (``pmean``), matching §IV-A ("layers with less than 1000 parameters are not
@@ -28,6 +33,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.comm import wire as wire_fmt
+from repro.comm.exchange import check_payload, gather_packed
 from repro.kernels import ops
 from .compression import Compressor, block_extract_sparse
 
@@ -37,6 +44,13 @@ AxisNames = Sequence[str] | str
 
 def _dp_size(dp_axes: AxisNames):
     return compat.axis_size(dp_axes)
+
+
+def _dp_index(dp_axes: AxisNames):
+    """This worker's row in the all-gathered leading axis (lax.axis_index
+    handles axis tuples row-major, matching all_gather's stacking order)."""
+    axes = dp_axes if isinstance(dp_axes, str) else tuple(dp_axes)
+    return jax.lax.axis_index(axes)
 
 
 def _per_layer_topk(acc2d: jax.Array, k: int):
@@ -109,7 +123,8 @@ def worker_compress_aggregate(
     for g, m, stacked in zip(flat_g, flat_m, flat_s):
         g2 = _leaf_2d(g, stacked)
         L, d = g2.shape
-        if comp.method == "none" or d < comp.min_compress_size:
+        if comp.method == "none" or d < comp.min_compress_size \
+                or comp.sparse_k(d) >= d:
             acc = m.astype(jnp.float32) + eta * g.astype(jnp.float32)
             upd = jax.lax.pmean(acc, dp_axes)
             updates.append(upd)
@@ -124,37 +139,46 @@ def worker_compress_aggregate(
             m2 = _leaf_2d(m, stacked).astype(jnp.float32)
             sent, resid, _ = ops.fused_ef_compress(
                 m2, g2.astype(jnp.float32), eta, comp.gamma, comp.block)
-            # the dense sent has <= k_b nonzeros per block, so per-block
-            # top-k_b of |sent| recovers exactly the kept wire entries
+            # per-block top-k_b of |sent| recovers the kept wire entries
+            # (>= k_b survive the threshold; ties beyond k_b are dropped
+            # from the wire and recycled into m' below)
             vals, idx = block_extract_sparse(sent, comp)
-            if comp.value_bits < 32:
-                # EF residual against the *quantized* wire values keeps
-                # the telescoping identity exact under quantization.
-                vals = comp.quantize_values(vals)
-                own_dense = _scatter_layers(vals, idx, L, d, jnp.float32)
-                resid = resid + (sent - own_dense)
-            new_mem.append(resid.reshape(m.shape).astype(m.dtype))
         else:
             acc2 = _leaf_2d(m, stacked).astype(jnp.float32) \
                 + eta * g2.astype(jnp.float32)
             vals, idx, (L, d) = compress_leaf(acc2, comp, stacked)
-            # beyond-paper: quantize transmitted values; EF residual is
-            # taken against the *quantized* values so the identity stays
-            # exact.
-            vals = comp.quantize_values(vals)
-            own_dense = _scatter_layers(vals, idx, L, d, jnp.float32)
-            new_mem.append((acc2 - own_dense).reshape(m.shape)
-                           .astype(m.dtype))
-        all_vals = jax.lax.all_gather(vals, dp_axes)   # (W, L, k)
-        all_idx = jax.lax.all_gather(idx, dp_axes)
-        if isinstance(dp_axes, (tuple, list)) and len(dp_axes) > 1:
-            all_vals = all_vals.reshape(-1, *vals.shape)
-            all_idx = all_idx.reshape(-1, *idx.shape)
-        mean_dense = _scatter_layers(all_vals, all_idx, L, d,
-                                     jnp.float32) / W
+
+        # ---- bit-packed wire (DESIGN.md §8): encode once, gather ONE
+        # uint32 payload per leaf — the payload's byte length is exactly
+        # Compressor.wire_bytes (checked at trace time below), and the EF
+        # residual is taken against what receivers actually decode, so
+        # quantization error AND tie-dropped entries are recycled.
+        spec = wire_fmt.WireSpec.for_row(comp, d)
+        payload = wire_fmt.encode_rows(vals, idx, spec)      # (L, words)
+        check_payload(payload, spec, comp, d)
+
+        all_pay = gather_packed(payload, dp_axes)        # (W, L, words)
+        g_vals, g_idx = wire_fmt.decode_rows(
+            all_pay.reshape(-1, spec.row_words), spec)
+        g_vals = g_vals.reshape(W, L, spec.k)
+        g_idx = g_idx.reshape(W, L, spec.k)
+        mean_dense = _scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
         updates.append(mean_dense.reshape(g.shape))
-        wire = wire + jnp.float32(vals.size * comp.value_bytes
-                                  + idx.size * 4)
+        wire = wire + jnp.float32(L * spec.row_bytes)
+
+        # EF residual against what receivers actually decoded — this
+        # worker's rows are already in the gathered decode, so slice them
+        # out instead of decoding the own payload a second time.
+        w_idx = _dp_index(dp_axes)
+        own_dense = _scatter_layers(
+            jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0, keepdims=False),
+            jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0, keepdims=False),
+            L, d, jnp.float32)
+        if use_fused:
+            resid = resid + (sent - own_dense)
+        else:
+            resid = acc2 - own_dense
+        new_mem.append(resid.reshape(m.shape).astype(m.dtype))
 
     return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire)
 

@@ -23,6 +23,8 @@ from .ef_topk import (block_stats, ef_apply, ef_block_stats as
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
 from .rwkv_wkv import wkv_forward
+from .wire_pack import pack_words as _pack_words_kernel, \
+    unpack_words as _unpack_words_kernel
 
 # --------------------------------------------------------------------------
 # registry — the single place that binds op names to implementations
@@ -58,6 +60,24 @@ dispatch.register_op(
                                        interpret=True),
     pallas_tpu=functools.partial(_threshold_split_kernel, interpret=False),
     default="pallas")
+
+# pack/unpack run per leaf per step with a rows/ROWS-sized grid, so the
+# interpret-mode cost is NOT one tile evaluation like the EF ops — policy
+# "backend" keeps CPU runs on the vectorized jnp ref and TPUs on the kernel
+# (parity is pinned across impls in tests/test_wire_format.py).
+dispatch.register_op(
+    "wire_pack",
+    ref=ref.pack_fields,
+    pallas_interpret=functools.partial(_pack_words_kernel, interpret=True),
+    pallas_tpu=functools.partial(_pack_words_kernel, interpret=False),
+    default="backend")
+
+dispatch.register_op(
+    "wire_unpack",
+    ref=ref.unpack_fields,
+    pallas_interpret=functools.partial(_unpack_words_kernel, interpret=True),
+    pallas_tpu=functools.partial(_unpack_words_kernel, interpret=False),
+    default="backend")
 
 dispatch.register_op(
     "attention",
@@ -172,6 +192,36 @@ def threshold_split_blocks(x, tau, block: int = 1024, *,
     x2, meta = _to_blocks(x, block)
     sent, res = dispatch.call("threshold_split", x2, tau, impl=impl)
     return _from_blocks(sent, meta), _from_blocks(res, meta)
+
+
+# --------------------------------------------------------------------------
+# wire pack/unpack (the packed payload codec's data-parallel core)
+# --------------------------------------------------------------------------
+
+def pack_fields(fields, bits: int, *, impl: str | None = None):
+    """Pack (R, n) uint32 bit-fields into (R, ceil(n*bits/32)) uint32 words.
+
+    ``bits`` in {4, 8, 16, 32}; n is zero-padded up to a whole word here, so
+    callers slice by field count on unpack.  Layout per kernels/ref.py:
+    little-endian fields within each word.
+    """
+    if bits >= 32:
+        return fields.astype(jnp.uint32)
+    F = 32 // bits
+    R, n = fields.shape
+    W = -(-n // F)
+    pad = W * F - n
+    if pad:
+        fields = jnp.pad(fields, ((0, 0), (0, pad)))
+    return dispatch.call("wire_pack", fields, bits, impl=impl)
+
+
+def unpack_fields(words, n: int, bits: int, *, impl: str | None = None):
+    """Inverse of :func:`pack_fields`: (R, W) words -> first ``n`` fields."""
+    if bits >= 32:
+        return words.astype(jnp.uint32)
+    out = dispatch.call("wire_unpack", words, bits, impl=impl)
+    return out[:, :n]
 
 
 # --------------------------------------------------------------------------

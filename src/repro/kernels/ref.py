@@ -77,6 +77,41 @@ def block_abs_topk_threshold(x: jax.Array, k_b: int, block: int) -> jax.Array:
     return vals[:, -1]
 
 
+# --------------------------- wire pack/unpack ------------------------------
+
+def pack_fields(fields: jax.Array, bits: int) -> jax.Array:
+    """Pack (R, n) uint32 bit-fields into (R, n*bits/32) uint32 words.
+
+    ``bits`` in {4, 8, 16, 32}; n must be a multiple of 32//bits (callers
+    zero-pad).  Field f of word w occupies bits [f*bits, (f+1)*bits) —
+    little-endian fields within the word, so packed payloads are
+    byte-order independent at the word level.  Fields are masked to
+    ``bits`` before packing; disjoint bit ranges make the or a sum.
+    """
+    fields = fields.astype(jnp.uint32)
+    if bits >= 32:
+        return fields
+    F = 32 // bits
+    R, n = fields.shape
+    mask = jnp.uint32((1 << bits) - 1)
+    w = (fields & mask).reshape(R, n // F, F)
+    shifts = (jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits))
+    return jnp.sum(w << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def unpack_fields(words: jax.Array, bits: int) -> jax.Array:
+    """Inverse of :func:`pack_fields`: (R, W) words -> (R, W*32/bits) fields."""
+    words = words.astype(jnp.uint32)
+    if bits >= 32:
+        return words
+    F = 32 // bits
+    R, W = words.shape
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = (jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits))
+    fields = (words[:, :, None] >> shifts[None, None, :]) & mask
+    return fields.reshape(R, W * F)
+
+
 # --------------------------- flash attention -------------------------------
 
 def mha_reference(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -1,0 +1,97 @@
+"""Pallas kernels for the bit-packed compressed-gradient wire format.
+
+The packed payload (DESIGN.md §8) stores each wire entry's index and
+quantized value as fixed-width bit-fields inside contiguous ``uint32``
+words.  The field<->word conversion is the only data-parallel part of the
+codec and the part worth a kernel: on TPU it is a pure VPU shift/or (pack)
+or shift/mask (unpack) streaming pass — one read + one write at the packed
+byte width, so packing k int8 values costs k bytes of HBM traffic, not 4k.
+
+Layout contract (shared with the ``kernels/ref.py`` oracles bit-for-bit):
+``F = 32 // bits`` fields per word, field ``f`` occupying bits
+``[f*bits, (f+1)*bits)`` — little-endian fields within each word.
+
+Tiles are (rows, chunk) with the word chunk VPU-lane aligned; the field
+side of each tile is ``F`` times wider than the word side, expressed as two
+BlockSpec widths over the same grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row/word tile geometry: the word side of a tile is (256, 512) uint32 =
+# 512 KiB; the field side is at most 8x wider (bits=4) = 4 MiB — both
+# VMEM-resident with double-buffering headroom, and payload row counts
+# (model layers) rarely exceed a few tiles.
+ROWS = 256
+WORD_CHUNK = 512
+
+
+def _pack_kernel(f_ref, out_ref, *, bits: int):
+    """(rows, W*F) uint32 fields -> (rows, W) uint32 words."""
+    F = 32 // bits
+    f = f_ref[...].astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    rows, n = f.shape
+    shifts = jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits)
+    w = f.reshape(rows, n // F, F) << shifts[None, None, :]
+    # disjoint bit ranges: or == sum, and sum lowers to a VPU reduction
+    out_ref[...] = jnp.sum(w, axis=-1, dtype=jnp.uint32)
+
+
+def _unpack_kernel(w_ref, out_ref, *, bits: int):
+    """(rows, W) uint32 words -> (rows, W*F) uint32 fields."""
+    F = 32 // bits
+    w = w_ref[...].astype(jnp.uint32)
+    rows, W = w.shape
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits)
+    fields = (w[:, :, None] >> shifts[None, None, :]) & mask
+    out_ref[...] = fields.reshape(rows, W * F)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def pack_words(fields: jax.Array, bits: int, *, interpret: bool = True):
+    """Pack (R, n) uint32 bit-fields into (R, n*bits/32) uint32 words.
+
+    n must be a multiple of 32//bits (``ops.pack_fields`` zero-pads).
+    """
+    if bits >= 32:
+        return fields.astype(jnp.uint32)
+    F = 32 // bits
+    R, n = fields.shape
+    W = n // F
+    rows = min(ROWS, R)
+    wc = min(WORD_CHUNK, W)
+    grid = (pl.cdiv(R, rows), pl.cdiv(W, wc))
+    return pl.pallas_call(
+        functools.partial(_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, wc * F), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((rows, wc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, W), jnp.uint32),
+        interpret=interpret,
+    )(fields.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def unpack_words(words: jax.Array, bits: int, *, interpret: bool = True):
+    """Inverse of :func:`pack_words`: (R, W) words -> (R, W*32/bits) fields."""
+    if bits >= 32:
+        return words.astype(jnp.uint32)
+    F = 32 // bits
+    R, W = words.shape
+    rows = min(ROWS, R)
+    wc = min(WORD_CHUNK, W)
+    grid = (pl.cdiv(R, rows), pl.cdiv(W, wc))
+    return pl.pallas_call(
+        functools.partial(_unpack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows, wc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((rows, wc * F), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, W * F), jnp.uint32),
+        interpret=interpret,
+    )(words.astype(jnp.uint32))

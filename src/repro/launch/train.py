@@ -68,7 +68,8 @@ def main() -> None:
     # local-steps extension.)
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--value-bits", type=int, default=32,
-                    choices=[32, 16, 8])
+                    choices=[32, 16, 8, 4],
+                    help="wire value width (DESIGN.md §8 packed format)")
     ap.add_argument("--ef-dtype", default="float32")
     ap.add_argument("--shard-local-topk", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)

@@ -237,10 +237,10 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         # ---- aggregate (compressed or dense) ----------------------------
         if opt.kind in ("csgd_asss", "nonadaptive"):
             smask = model.stacked_mask(params)
-            if opt.shard_local_topk:
+            if opt.shard_local_topk and compat.PARTIAL_AUTO_SAFE:
                 # per-(layer, model-shard) top_k: nested manual-'model'
                 # region so selection runs on the local gradient shard and
-                # the only collective stays the small dp sparse all-gather.
+                # the only collective stays the small dp packed all-gather.
                 pspecs = param_pspecs(params)
                 inner = compat.shard_map(
                     lambda g, m2, e: worker_compress_aggregate(
@@ -251,6 +251,13 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                     axis_names={"model"}, check_vma=False)
                 updates, new_mem, wire = inner(grads, mem, eta)
             else:
+                # covers shard_local_topk on 0.4.x too: there the training
+                # body is already manual over 'model' (compat.
+                # PARTIAL_AUTO_SAFE) with the model axis replicated, so
+                # grads ARE the per-shard local view — re-nesting a
+                # manual-'model' shard_map around it SIGFPEs 0.4.x XLA
+                # (tests/distributed/test_shard_local_topk.py) and
+                # shard-local selection degenerates to the direct call.
                 updates, new_mem, wire = worker_compress_aggregate(
                     grads, mem, eta, opt.compressor, dp, stacked_mask=smask)
             new_mem = jax.tree.map(lambda x: x[None], new_mem)

@@ -1,0 +1,47 @@
+"""tests/distributed — the repo's true multi-device tier.
+
+Every test in this directory runs IN-PROCESS against 8 forced host devices
+(no per-test subprocess round-trips like tests/test_distributed.py): the
+process must be started with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — use
+``python tests/distributed/harness.py`` (which relaunches pytest with the
+right environment and deterministic seeding) or the ``multidevice`` CI job.
+
+Collected under fewer devices (the plain tier-1 run), everything here is
+skipped so single-device runs stay fast.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def pytest_collection_modifyitems(config, items):
+    # NB: this hook sees the WHOLE session's items, not just this
+    # directory's — scope by path or the main suite gets skipped too.
+    n = jax.device_count()
+    skip = pytest.mark.skip(
+        reason=f"needs 8 virtual devices, have {n} "
+               "(run tests/distributed/harness.py)")
+    for item in items:
+        if not str(item.fspath).startswith(_HERE):
+            continue
+        item.add_marker(pytest.mark.multidevice)
+        if n < 8:
+            item.add_marker(skip)
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seed():
+    # harness.py pins PYTHONHASHSEED; this pins numpy's global stream so
+    # any test-local rng use is reproducible across the 8-device runs
+    np.random.seed(0)
+    yield
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

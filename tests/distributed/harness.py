@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Relaunch pytest under 8 forced host devices — the multi-device test tier.
+
+The main pytest process must keep its single-device view (smoke tests and
+benches depend on it), so the multi-device suite runs in a fresh
+interpreter whose XLA backend is forced to 8 host devices *before* jax
+initializes.  This runner sets that environment deterministically and execs
+pytest on tests/distributed:
+
+    python tests/distributed/harness.py [extra pytest args]
+
+CI runs the same thing as a dedicated job (see .github/workflows/ci.yml,
+job ``tier1-multidevice``).
+"""
+import os
+import subprocess
+import sys
+
+DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+
+
+def multidevice_env(repo: str) -> dict:
+    """Environment for an 8-virtual-device JAX process with deterministic
+    seeding (fixed PYTHONHASHSEED; tests use fixed PRNGKeys)."""
+    env = dict(os.environ)
+    xla = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in xla:
+        env["XLA_FLAGS"] = (xla + " " + DEVICE_FLAG).strip()
+    src = os.path.join(repo, "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    env.setdefault("PYTHONHASHSEED", "0")
+    return env
+
+
+def main(argv=None) -> int:
+    here = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(os.path.dirname(here))
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "multidevice", here]
+    cmd += list(sys.argv[1:] if argv is None else argv)
+    return subprocess.call(cmd, env=multidevice_env(repo), cwd=repo)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

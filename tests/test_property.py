@@ -9,10 +9,13 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro.comm import wire as wire_fmt
 from repro.core import (ArmijoConfig, Compressor, armijo_search,
                         topk_select, sparse_to_dense)
+from repro.core.compression import block_extract_sparse
 from repro.core.error_feedback import dequantize_ef, quantize_ef
 from repro.kernels import ref
+from repro.kernels import ops as kops
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -101,6 +104,88 @@ def test_attention_window_subset_of_causal(seed, wexp):
     full = ref.mha_reference(q, k, v, causal=True)
     win = ref.mha_reference(q, k, v, causal=True, window=S * wexp)
     np.testing.assert_allclose(np.asarray(win), np.asarray(full), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# packed wire format (DESIGN.md §8) — the property bodies are plain helpers
+# so they can also be driven without hypothesis
+# ---------------------------------------------------------------------------
+
+def check_pack_roundtrip(seed: int, n: int, bits: int):
+    """pack -> unpack is the identity on ``bits``-wide fields, for any
+    length (zero-padding to whole words must never leak)."""
+    hi = 1 << bits
+    fields = jnp.asarray(np.random.default_rng(seed).integers(
+        0, hi, (2, n), dtype=np.uint32))
+    words = kops.pack_fields(fields, bits)
+    back = kops.unpack_fields(words, n, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(fields))
+    # packed size is exactly the accounted ceil(n*bits/32) words
+    assert words.shape == (2, -(-n * bits // 32))
+
+
+def check_codec_roundtrip(seed: int, d: int, block: int, value_bits: int):
+    """encode -> decode recovers (quantize_values(vals), idx) EXACTLY for
+    odd row sizes d (padded last block) and every supported value width."""
+    comp = Compressor(gamma=0.05, method="block_topk", block=block,
+                      min_compress_size=1, value_bits=value_bits)
+    x = jnp.asarray(np.random.default_rng(seed)
+                    .standard_normal((2, d)).astype(np.float32))
+    vals, idx = block_extract_sparse(x, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    payload = wire_fmt.encode_rows(vals, idx, spec)
+    assert payload.nbytes == 2 * comp.wire_bytes(d)
+    v2, i2 = wire_fmt.decode_rows(payload, spec)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(v2),
+                                  np.asarray(comp.quantize_values(vals)))
+
+
+def check_packed_ef_identity(seed: int, value_bits: int, log2_eta: int):
+    """Bit-level EF identity END-TO-END through the packed path:
+    decode(own payload) + m' == m + eta*g with strict float equality.
+
+    Exactness argument: at unkept positions m' carries acc untouched; at
+    kept positions the dequantized wire value v satisfies |acc - v| <=
+    |v| / 2 (absmax int quantization with q >= 1, or bf16 rounding), so
+    Sterbenz's lemma makes both acc - v and v + (acc - v) exact.  eta a
+    power of two keeps acc = m + eta*g reproducible in numpy.
+    """
+    rng = np.random.default_rng(seed)
+    d = 1280
+    m = rng.standard_normal(d).astype(np.float32)
+    g = rng.standard_normal(d).astype(np.float32)
+    eta = np.float32(2.0 ** log2_eta)
+    comp = Compressor(gamma=0.05, method="block_topk", block=256,
+                      min_compress_size=1, value_bits=value_bits)
+    acc = (jnp.asarray(m).reshape(1, -1).astype(jnp.float32)
+           + eta * jnp.asarray(g).reshape(1, -1).astype(jnp.float32))
+    vals, idx = block_extract_sparse(acc, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    v2, i2 = wire_fmt.decode_rows(
+        wire_fmt.encode_rows(vals, idx, spec), spec)
+    sent = jnp.zeros((d,), jnp.float32).at[i2.reshape(-1)].add(v2.reshape(-1))
+    m_new = acc.reshape(-1) - sent
+    np.testing.assert_array_equal(np.asarray(sent + m_new),
+                                  np.asarray(acc.reshape(-1)))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3000),
+       st.sampled_from([4, 8, 16, 32]))
+def test_pack_roundtrip_property(seed, n, bits):
+    check_pack_roundtrip(seed, n, bits)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(64, 2048),
+       st.sampled_from([64, 256, 1024]), st.sampled_from([4, 8, 16, 32]))
+def test_codec_roundtrip_property(seed, d, block, value_bits):
+    check_codec_roundtrip(seed, d, block, value_bits)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16, 32]),
+       st.integers(-3, 1))
+def test_packed_ef_identity_bitlevel_property(seed, value_bits, log2_eta):
+    check_packed_ef_identity(seed, value_bits, log2_eta)
 
 
 @given(st.integers(0, 10**6))

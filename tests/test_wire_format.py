@@ -1,0 +1,209 @@
+"""Unit tests for the bit-packed wire format (DESIGN.md §8): field<->word
+pack/unpack (ref vs Pallas), codec round-trips, payload byte accounting,
+and the tie-handling regression in the fused wire extraction."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import wire as wire_fmt
+from repro.core import Compressor
+from repro.core.compression import block_extract_sparse
+from repro.core.dcsgd import worker_compress_aggregate
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# field <-> word packing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8, 16, 32])
+@pytest.mark.parametrize("n", [1, 7, 64, 1000, 4097])
+def test_pack_unpack_fields_roundtrip(key, bits, n):
+    """pack -> unpack recovers every field exactly, for odd lengths that
+    exercise the zero-padding to whole words."""
+    hi = np.uint32(1) << np.uint32(bits - 1)  # keep values within the field
+    fields = jnp.asarray(
+        np.random.default_rng(bits * 1000 + n).integers(
+            0, int(hi), (3, n), dtype=np.uint32))
+    words = ops.pack_fields(fields, bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (3, -(-n * bits // 32))
+    back = ops.unpack_fields(words, n, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(fields))
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_pack_fields_ref_pallas_parity(key, bits):
+    fields = jnp.asarray(np.random.default_rng(bits).integers(
+        0, 1 << bits, (5, 777), dtype=np.uint32))
+    w_ref = ops.pack_fields(fields, bits, impl="ref")
+    w_pal = ops.pack_fields(fields, bits, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_pal))
+    f_ref = ops.unpack_fields(w_ref, 777, bits, impl="ref")
+    f_pal = ops.unpack_fields(w_ref, 777, bits, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_pal))
+
+
+def test_pack_masks_out_of_range_fields():
+    """Fields wider than ``bits`` are masked, not smeared into neighbors."""
+    fields = jnp.full((1, 8), 0xFFFFFFFF, jnp.uint32)
+    words = ops.pack_fields(fields, 8)
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.full((1, 2), 0xFFFFFFFF, np.uint32))
+    back = ops.unpack_fields(words, 8, 8)
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.full((1, 8), 0xFF, np.uint32))
+
+
+def test_wire_ops_registered():
+    from repro.kernels import dispatch
+    reg = dispatch.registered()
+    for op in ("wire_pack", "wire_unpack"):
+        assert set(reg[op]) == {"ref", "pallas-interpret", "pallas-tpu"}, op
+        # backend policy: vectorized jnp ref on CPU, the kernel on TPU
+        assert dispatch._POLICY[op] == "backend"
+
+
+# ---------------------------------------------------------------------------
+# codec: WireSpec layout + encode/decode round-trips
+# ---------------------------------------------------------------------------
+
+def test_wirespec_layout_math():
+    comp = Compressor(gamma=0.05, method="block_topk", block=512,
+                      min_compress_size=64, value_bits=8)
+    spec = wire_fmt.WireSpec.for_row(comp, 2048)
+    k = 4 * comp.block_k()
+    assert spec.k == k and spec.local and spec.index_bits == 16
+    assert spec.header_words == 1
+    assert spec.index_words == -(-k * 16 // 32)
+    assert spec.value_words == -(-k * 8 // 32)
+    assert spec.row_bytes == 4 * (1 + spec.index_words + spec.value_words)
+    assert spec.row_bytes == comp.wire_bytes(2048)
+    # uncompressed rows have no packed payload
+    assert wire_fmt.WireSpec.for_row(Compressor(method="none"), 2048) is None
+    # block padding can push nb*k_b PAST d at large gamma: such rows ship
+    # dense (matching dcsgd's pmean branch), never a None spec deref
+    fat = Compressor(gamma=0.55, method="block_topk", block=1024,
+                     min_compress_size=64)
+    assert fat.sparse_k(1100) >= 1100
+    assert fat.wire_bytes(1100) == 1100 * 4
+    # flat 32-bit indices once d outgrows 16-bit addressing (topk)
+    big = wire_fmt.WireSpec.for_row(
+        Compressor(gamma=0.01, method="topk"), 100000)
+    assert big.index_bits == 32 and not big.local
+
+
+def test_wirespec_rejects_bad_widths():
+    with pytest.raises(ValueError):
+        wire_fmt.WireSpec(k=8, d=64, value_bits=12, index_bits=16,
+                          local=False)
+    with pytest.raises(ValueError):
+        wire_fmt.WireSpec(k=8, d=64, value_bits=8, index_bits=8, local=False)
+
+
+@pytest.mark.parametrize("value_bits", [4, 8, 16, 32])
+@pytest.mark.parametrize("d", [1300, 2048, 4097])
+def test_encode_decode_roundtrip(key, value_bits, d):
+    """decode(encode(vals, idx)) == (quantize_values(vals), idx) exactly,
+    including odd row sizes with padded last blocks."""
+    comp = Compressor(gamma=0.05, method="block_topk", block=256,
+                      min_compress_size=64, value_bits=value_bits)
+    x = jax.random.normal(key, (3, d))
+    vals, idx = block_extract_sparse(x, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    payload = wire_fmt.encode_rows(vals, idx, spec)
+    assert payload.dtype == jnp.uint32
+    assert payload.nbytes == 3 * comp.wire_bytes(d)
+    v2, i2 = wire_fmt.decode_rows(payload, spec)
+    np.testing.assert_array_equal(np.asarray(i2), np.asarray(idx))
+    np.testing.assert_array_equal(np.asarray(v2),
+                                  np.asarray(comp.quantize_values(vals)))
+
+
+def test_encode_decode_negative_values_sign_extension(key):
+    """Two's-complement sub-byte fields: all-negative rows survive."""
+    comp = Compressor(gamma=0.1, method="block_topk", block=256,
+                      min_compress_size=64, value_bits=4)
+    x = -jnp.abs(jax.random.normal(key, (1, 1024))) - 0.5
+    vals, idx = block_extract_sparse(x, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, 1024)
+    v2, _ = wire_fmt.decode_rows(wire_fmt.encode_rows(vals, idx, spec), spec)
+    assert np.all(np.asarray(v2) < 0)
+    np.testing.assert_array_equal(np.asarray(v2),
+                                  np.asarray(comp.quantize_values(vals)))
+
+
+# ---------------------------------------------------------------------------
+# tie handling in the fused wire extraction (ROADMAP open item)
+# ---------------------------------------------------------------------------
+
+def _run_worker(tree, comp, eta=1.0):
+    """worker_compress_aggregate under a 1-device shard_map (W == 1, so the
+    returned update IS this worker's decoded wire contribution)."""
+    from repro.compat import shard_map
+    mesh = jax.make_mesh((1,), ("data",))
+    mem = jax.tree.map(lambda x: jnp.zeros_like(x), tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+    f = shard_map(
+        functools.partial(worker_compress_aggregate, comp=comp,
+                          dp_axes=("data",)),
+        mesh=mesh, in_specs=(spec, spec, P()), out_specs=(spec, spec, P()),
+        axis_names={"data"})
+    return jax.jit(f)(tree, mem, jnp.float32(eta))
+
+
+@pytest.mark.parametrize("value_bits", [16, 8, 32])
+def test_tie_drop_correction_regression(value_bits):
+    """A block with MORE than k_b entries exactly at tau: the wire ships
+    exactly k_b of them (documented drop) and the dropped tied entries are
+    recycled into the EF memory by the decoded-payload correction, so
+    sent + m' == acc holds bit-exactly.  Historically the correction only
+    ran under value_bits<32; the packed wire applies it always (the
+    residual is taken against what receivers actually decode)."""
+    comp = Compressor(gamma=0.01, method="block_topk", block=512,
+                      min_compress_size=64, value_bits=value_bits)
+    k_b = comp.block_k()             # = 5
+    assert k_b == 5
+    d = 1024                         # two 512-wide blocks
+    rng = np.random.default_rng(0)
+    acc = rng.uniform(-1.0, 1.0, d).astype(np.float32)
+    # block 0: EIGHT entries tied exactly at |acc| == 3.0 (> k_b of them)
+    tied = np.array([3.0, -3.0, 3.0, 3.0, -3.0, 3.0, 3.0, -3.0], np.float32)
+    acc[:8] = tied
+    tree = {"x": jnp.asarray(acc)}
+
+    upd, mem, wire = _run_worker(tree, comp, eta=1.0)  # m=0, eta=1 -> acc
+    upd, mem = np.asarray(upd["x"]), np.asarray(mem["x"])
+
+    # drop semantics: exactly k_b entries per block survive on the wire
+    assert np.count_nonzero(upd[:512]) == k_b
+    assert np.count_nonzero(upd[512:]) == k_b
+    kept_ties = np.count_nonzero(upd[:8])
+    assert kept_ties == k_b          # all five winners come from the tie
+    # correction semantics: dropped tied entries live on in the EF memory
+    dropped = np.count_nonzero(mem[:8])
+    assert dropped == 8 - k_b
+    # and the EF identity is bit-exact through the packed wire
+    np.testing.assert_array_equal(upd + mem, acc)
+
+
+def test_tie_drop_matches_unfused_path():
+    """The fused-kernel tie semantics equal the pure-jnp escape hatch."""
+    comp_kwargs = dict(gamma=0.01, method="block_topk", block=512,
+                       min_compress_size=64, value_bits=8)
+    d = 1024
+    rng = np.random.default_rng(1)
+    acc = rng.uniform(-1.0, 1.0, d).astype(np.float32)
+    acc[:8] = 2.5
+    tree = {"x": jnp.asarray(acc)}
+    u_k, m_k, w_k = _run_worker(tree, Compressor(use_kernel=True,
+                                                 **comp_kwargs))
+    u_j, m_j, w_j = _run_worker(tree, Compressor(use_kernel=False,
+                                                 **comp_kwargs))
+    np.testing.assert_array_equal(np.asarray(u_k["x"]), np.asarray(u_j["x"]))
+    np.testing.assert_array_equal(np.asarray(m_k["x"]), np.asarray(m_j["x"]))
+    assert float(w_k) == float(w_j)

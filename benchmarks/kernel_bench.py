@@ -9,7 +9,16 @@ one vectorized tile per grid step, so their interpret timings are reported
 side-by-side with the ref path — on TPU the fused path is the default
 (kernels/dispatch.py) and saves one full accumulator round-trip through
 HBM (2 reads + 2 writes vs 3+ reads of a naive composition).
+
+Besides the CSV rows on stdout, a machine-readable ``BENCH_kernels.json``
+is written at the repo root — one record per (op, backend, shape) with the
+median per-call milliseconds — so the perf trajectory is diffable across
+PRs.  ``--smoke`` shrinks shapes/iterations to a seconds-scale run (the CI
+invocation); ``--out`` overrides the JSON path.
 """
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -25,87 +34,138 @@ EF_LAYER_SHAPES = [
     ("mlp_2.5kx6.9k", (2560, 6912)),
     ("moe_expert_8x1kx2k", (8, 1024 * 2048)),
 ]
+EF_LAYER_SHAPES_SMOKE = [
+    ("attn_qkv_256x256", (256, 256)),
+    ("mlp_256x688", (256, 688)),
+]
+
+_RECORDS: list[dict] = []
 
 
 def timeit(f, *args, n=20):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        f(*args).block_until_ready()
-    t0 = time.time()
+    """Median per-call microseconds over n timed calls (1 warm-up)."""
+    r = f(*args)
+    (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    times = []
     for _ in range(n):
+        t0 = time.time()
         r = f(*args)
         (r[0] if isinstance(r, tuple) else r).block_until_ready()
-    return (time.time() - t0) / n * 1e6
+        times.append(time.time() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
 
 
-def main() -> dict:
+def record(op: str, backend: str, shape, us: float, note: str = ""):
+    """One BENCH_kernels.json record + the repo's CSV contract line."""
+    _RECORDS.append({"op": op, "backend": backend,
+                     "shape": list(shape) if not isinstance(shape, str)
+                     else shape,
+                     "median_ms": round(us / 1e3, 6)})
+    emit(f"kernel_{op}_{backend}", us, note or op)
+
+
+def main(smoke: bool = False, out_path: str | None = None) -> dict:
     key = jax.random.PRNGKey(0)
     out = {}
+    n_heavy = 3 if smoke else 10
+    n_light = 5 if smoke else 20
 
-    m = jax.random.normal(key, (1 << 20,))
-    g = jax.random.normal(jax.random.fold_in(key, 1), (1 << 20,))
+    ef_n = (1 << 14) if smoke else (1 << 20)
+    m = jax.random.normal(key, (ef_n,))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (ef_n,))
     f_ef = jax.jit(lambda m, g: ops.ef_threshold_update(m, g, 0.1, 0.3))
-    us = timeit(f_ef, m, g)
-    emit("kernel_ef_update_1M_ref", us, "fused EF accumulate+sparsify")
+    us = timeit(f_ef, m, g, n=n_light)
+    record("ef_update", "default", (ef_n,), us,
+           "fused EF accumulate+sparsify")
     out["ef"] = us
 
-    B, H, S, D = 1, 8, 1024, 128
+    B, H, S, D = (1, 2, 128, 64) if smoke else (1, 8, 1024, 128)
     q = jax.random.normal(key, (B, H, S, D)) * 0.1
     k = jax.random.normal(jax.random.fold_in(key, 2), (B, H, S, D)) * 0.1
     v = jax.random.normal(jax.random.fold_in(key, 3), (B, H, S, D))
     f_at = jax.jit(lambda q, k, v: ops.attention(q, k, v))
-    us = timeit(f_at, q, k, v, n=5)
-    emit("kernel_attention_1k_ref", us, "causal MHA 8hx1024x128")
+    us = timeit(f_at, q, k, v, n=n_heavy)
+    record("attention", "ref", (B, H, S, D), us,
+           f"causal MHA {H}hx{S}x{D}")
     out["attn"] = us
 
-    x = jax.random.normal(key, (4096, 2048))
+    R_rn = 256 if smoke else 4096
+    x = jax.random.normal(key, (R_rn, 2048))
     w = jnp.ones((2048,))
     f_rn = jax.jit(lambda x, w: ops.rms_norm(x, w))
-    us = timeit(f_rn, x, w)
-    emit("kernel_rmsnorm_4kx2k_ref", us, "fused rmsnorm")
+    us = timeit(f_rn, x, w, n=n_light)
+    record("rmsnorm", "ref", (R_rn, 2048), us, "fused rmsnorm")
     out["rmsnorm"] = us
 
     # ---- wire pack/unpack: ref vs pallas on a production payload shape ----
     # qwen1.5-4b MLP leaf at gamma=1%, value_bits=8: 2560 layer rows of
     # k=70 entries each -> 16-bit block-local indices + 8-bit values.
-    from repro.kernels import ops as _ops
-    R, k = 2560, 70
-    fields16 = jax.random.randint(key, (R, k), 0, 1 << 16).astype(jnp.uint32)
+    R, kk = (256, 70) if smoke else (2560, 70)
+    fields16 = jax.random.randint(key, (R, kk), 0, 1 << 16) \
+        .astype(jnp.uint32)
     for bits in (8, 16):
-        nwords = -(-k * bits // 32)
+        nwords = -(-kk * bits // 32)
         words = jax.random.randint(jax.random.fold_in(key, bits),
-                                   (R, nwords), 0, 1 << 30).astype(jnp.uint32)
+                                   (R, nwords), 0, 1 << 30) \
+            .astype(jnp.uint32)
         row = {}
         for impl in ("ref", "pallas"):
             f_p = jax.jit(lambda f, impl=impl, bits=bits:
-                          _ops.pack_fields(f, bits, impl=impl))
+                          ops.pack_fields(f, bits, impl=impl))
             f_u = jax.jit(lambda w, impl=impl, bits=bits:
-                          _ops.unpack_fields(w, k, bits, impl=impl))
-            us_p = timeit(f_p, fields16)
-            us_u = timeit(f_u, words)
-            emit(f"kernel_wire_pack{bits}_{impl}", us_p,
-                 f"bit-pack {R}x{k} {bits}b fields")
-            emit(f"kernel_wire_unpack{bits}_{impl}", us_u,
-                 f"bit-unpack {R}x{k} {bits}b fields")
+                          ops.unpack_fields(w, kk, bits, impl=impl))
+            us_p = timeit(f_p, fields16, n=n_light)
+            us_u = timeit(f_u, words, n=n_light)
+            record(f"wire_pack{bits}", impl, (R, kk), us_p,
+                   f"bit-pack {R}x{kk} {bits}b fields")
+            record(f"wire_unpack{bits}", impl, (R, nwords), us_u,
+                   f"bit-unpack {R}x{kk} {bits}b fields")
             row[impl] = us_p + us_u
         row["ratio_ref_over_fused"] = row["ref"] / max(row["pallas"], 1e-9)
         out[f"wire_pack{bits}"] = row
 
+    # ragged variant: counts-aware pack (valid-count masking on the same
+    # streaming pass, DESIGN.md §9) vs the plain kernel
+    counts = jax.random.randint(jax.random.fold_in(key, 77), (R,), 1, kk) \
+        .astype(jnp.int32)
+    for impl in ("ref", "pallas"):
+        f_r = jax.jit(lambda f, c, impl=impl: ops.pack_fields(
+            f, 8, counts=c, period=kk, impl=impl))
+        us_r = timeit(f_r, fields16, counts, n=n_light)
+        record("wire_pack8_ragged", impl, (R, kk), us_r,
+               f"counts-masked bit-pack {R}x{kk} 8b fields")
+
     # ---- ref vs fused EF two-pass compression on paper layer shapes ----
-    for si, (name, shape) in enumerate(EF_LAYER_SHAPES):
+    shapes = EF_LAYER_SHAPES_SMOKE if smoke else EF_LAYER_SHAPES
+    for si, (name, shape) in enumerate(shapes):
         m = jax.random.normal(key, shape)
         g = jax.random.normal(jax.random.fold_in(key, 100 + si), shape)
         row = {}
         for impl in ("ref", "pallas"):
             f = jax.jit(lambda m, g, impl=impl: ops.fused_ef_compress(
                 m, g, 0.1, gamma=0.01, impl=impl))
-            us = timeit(f, m, g, n=10)
-            emit(f"kernel_ef2pass_{name}_{impl}", us,
-                 f"fused two-pass EF, {m.size} elems")
+            us = timeit(f, m, g, n=n_heavy)
+            record(f"ef2pass_{name}", impl, shape, us,
+                   f"fused two-pass EF, {m.size} elems")
             row[impl] = us
         row["ratio_ref_over_fused"] = row["ref"] / max(row["pallas"], 1e-9)
         out[f"ef2pass_{name}"] = row
+
+    path = out_path or os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_kernels.json")
+    with open(path, "w") as fh:
+        json.dump({"backend": jax.default_backend(), "smoke": smoke,
+                   "records": _RECORDS}, fh, indent=1)
+    print(f"wrote {len(_RECORDS)} records -> {path}")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale shapes/iterations (CI)")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    a = ap.parse_args()
+    main(smoke=a.smoke, out_path=a.out)

@@ -38,14 +38,15 @@ def save(directory: str, step: int, tree: PyTree,
     os.makedirs(tmp, exist_ok=True)
 
     leaves, treedef = jax.tree.flatten(tree)
-    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    arrays = {f"leaf_{i}": np.asarray(leaf)
+              for i, leaf in enumerate(leaves)}
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     manifest = {
         "step": step,
         "n_leaves": len(leaves),
         "treedef": _treedef_repr(tree),
-        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "dtypes": [str(np.asarray(leaf).dtype) for leaf in leaves],
+        "shapes": [list(np.asarray(leaf).shape) for leaf in leaves],
         "metadata": metadata or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:

@@ -8,7 +8,7 @@ enforced at trace time by :func:`check_payload`.
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +35,21 @@ def check_payload(payload: jax.Array, spec: WireSpec, comp, d: int) -> None:
         raise ValueError(
             f"wire accounting drift: payload row is {physical} B but "
             f"Compressor.wire_bytes({d}) = {accounted} B")
+
+
+def effective_payload_bytes(payload: jax.Array, spec: WireSpec) -> jax.Array:
+    """Traced count of *useful* bytes in a gathered/encoded (… , row_words)
+    payload: for ragged specs, each row's valid-count header word prices
+    the row at what a truly ragged collective would ship
+    (``WireSpec.effective_row_bytes``); non-ragged payloads are fully
+    useful.  This is the runtime counterpart of the static
+    ``check_payload`` contract — the budget stays the trace-time bound,
+    this is the per-step metric under it."""
+    rows = payload.reshape(-1, payload.shape[-1])
+    if not spec.ragged:
+        return jnp.float32(rows.shape[0] * spec.row_bytes)
+    counts = rows[:, 0].astype(jnp.int32)
+    return jnp.sum(spec.effective_row_bytes(counts))
 
 
 def gather_packed(payload: jax.Array, dp_axes: AxisNames) -> jax.Array:

@@ -10,9 +10,14 @@ Row layout (all sizes static given a :class:`WireSpec`)::
 
     [ header | index section | value section ]        (uint32 words)
 
-* **header** — 1 word iff ``value_bits <= 8``: the f32 bits of the per-row
-  absmax quantization scale (``compression.quant_scale``).  16/32-bit
-  values are self-describing; no header.
+* **header** — up to two words.  Word 0 iff the spec is **ragged**
+  (adaptive compressors, DESIGN.md §9): the per-row valid count — the
+  per-block valid ``k_b_t`` for block-local rows, the row valid ``k_t``
+  for flat rows.  Decode honors the count regardless of what the invalid
+  tail fields contain, so the fixed ``k_max`` buffer is ragged-in-content.
+  Next word iff ``value_bits <= 8``: the f32 bits of the per-row absmax
+  quantization scale (``compression.quant_scale``).  16/32-bit values are
+  self-describing; no scale word.
 * **index section** — k fields of ``index_bits`` each, bit-packed
   little-endian within words (kernels/ref.py layout), zero-padded to a
   whole word.  ``block_topk`` rows store *block-local* 16-bit indices: the
@@ -56,13 +61,14 @@ VALUE_BITS = (4, 8, 16, 32)
 class WireSpec:
     """Static description of one leaf row's packed payload."""
 
-    k: int             # wire entries per row
+    k: int             # wire entries per row (k_max for ragged specs)
     d: int             # dense row length the indices address
     value_bits: int    # 4 | 8 | 16 | 32
     index_bits: int    # 16 | 32
     local: bool        # True: indices are block-local (block_topk rows)
     block: int = 0     # block width when local
     k_b: int = 0       # entries per block when local
+    ragged: bool = False  # True: count header word, decode honors it (§9)
 
     def __post_init__(self):
         if self.value_bits not in VALUE_BITS:
@@ -80,18 +86,60 @@ class WireSpec:
         k = comp.sparse_k(d)
         if k >= d:
             return None
+        ragged = bool(getattr(comp, "adaptive", False))
         if comp.method == "block_topk":
+            local = comp.block <= (1 << 16)
+            if ragged and not local:
+                # block_topk wire entries are per-block magnitude-sorted,
+                # so the ragged valid mask must be the per-block prefix
+                # (count_period = k_b) — only expressible for block-local
+                # rows.  A whole-row prefix over block-ordered entries
+                # would drop later blocks wholesale.
+                raise ValueError(
+                    "adaptive (max_gamma) block_topk needs block <= 2^16 "
+                    "(block-local indices carry the per-block count mask)")
             return cls(k=k, d=d, value_bits=comp.value_bits,
-                       index_bits=16 if comp.block <= (1 << 16) else 32,
-                       local=comp.block <= (1 << 16),
-                       block=comp.block, k_b=comp.block_k())
+                       index_bits=16 if local else 32, local=local,
+                       block=comp.block, k_b=comp.block_k(), ragged=ragged)
         return cls(k=k, d=d, value_bits=comp.value_bits,
-                   index_bits=16 if d <= (1 << 16) else 32, local=False)
+                   index_bits=16 if d <= (1 << 16) else 32, local=False,
+                   ragged=ragged)
 
     # ---- static layout ----------------------------------------------------
     @property
     def header_words(self) -> int:
-        return 1 if self.value_bits <= 8 else 0
+        return (1 if self.ragged else 0) + (1 if self.value_bits <= 8 else 0)
+
+    @property
+    def count_period(self) -> int:
+        """Field-index period of the valid mask: position j on the wire is
+        valid iff ``j % count_period < count`` — k_b for block-local rows
+        (per-block prefix), k for flat rows (row prefix)."""
+        return self.k_b if self.local else self.k
+
+    @property
+    def n_blocks(self) -> int:
+        """Blocks per row (1 for flat rows)."""
+        return self.k // self.k_b if self.local else 1
+
+    @property
+    def full_count(self) -> int:
+        """The count value that marks every entry valid."""
+        return self.k_b if self.local else self.k
+
+    def valid_entries(self, count) -> jax.Array:
+        """Total valid wire entries per row for a (traced) count."""
+        return jnp.asarray(count, jnp.int32) * self.n_blocks
+
+    def effective_row_bytes(self, count) -> jax.Array:
+        """Traced byte cost of one row if only the valid fields shipped
+        (header + bit-packed valid index/value fields, word-padded) — the
+        ragged collective this format is an upper-bound stand-in for."""
+        valid = self.valid_entries(count)
+        iw = (valid * self.index_bits + 31) // 32
+        vw = (valid * self.value_bits + 31) // 32
+        return ((self.header_words + iw + vw) * WORD_BYTES).astype(
+            jnp.float32)
 
     @property
     def index_words(self) -> int:
@@ -115,15 +163,38 @@ class WireSpec:
 
 
 def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
+                counts: jax.Array | None = None,
                 impl: str | None = None) -> jax.Array:
     """Encode (R, k) f32 values + (R, k) int32 flat indices into the packed
-    (R, row_words) uint32 payload."""
+    (R, row_words) uint32 payload.
+
+    ``counts`` (ragged specs): (R,) or scalar int32 per-row valid count —
+    per-block ``k_b_t`` for block-local rows, row ``k_t`` for flat rows
+    (:attr:`WireSpec.count_period` is the mask period either way).  Wire
+    entries are magnitude-sorted per period by construction, so masking a
+    suffix IS selecting the per-round top-k_t.  Values beyond the count
+    are zeroed *before* the quantization scale, and both field sections
+    are masked inside the pack kernels; omitted counts mean "all valid".
+    """
     R, k = vals.shape
     assert k == spec.k, (k, spec.k)
     vals = vals.astype(jnp.float32)
     parts = []
+    period = 0
+    if spec.ragged:
+        if counts is None:
+            counts = jnp.full((R,), spec.full_count, jnp.int32)
+        counts = jnp.broadcast_to(
+            jnp.asarray(counts, jnp.int32).reshape(-1), (R,))
+        period = spec.count_period
+        pos = jnp.arange(k, dtype=jnp.int32)
+        vals = jnp.where((pos % period)[None, :] < counts[:, None],
+                         vals, 0.0)
+        parts.append(counts.astype(jnp.uint32)[:, None])
+    else:
+        counts = None
 
-    # -- values (+ header) --------------------------------------------------
+    # -- values (+ scale header) --------------------------------------------
     if spec.value_bits <= 8:
         QMAX, quant_scale = _quant_helpers()
         qmax = QMAX[spec.value_bits]
@@ -143,8 +214,10 @@ def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
     else:
         ifields = idx.astype(jnp.uint32)
 
-    parts.append(ops.pack_fields(ifields, spec.index_bits, impl=impl))
-    parts.append(ops.pack_fields(vfields, spec.value_bits, impl=impl))
+    parts.append(ops.pack_fields(ifields, spec.index_bits, counts=counts,
+                                 period=period, impl=impl))
+    parts.append(ops.pack_fields(vfields, spec.value_bits, counts=counts,
+                                 period=period, impl=impl))
     payload = jnp.concatenate(parts, axis=-1)
     assert payload.shape == (R, spec.row_words), \
         (payload.shape, spec.row_words)
@@ -152,17 +225,32 @@ def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
 
 
 def decode_rows(payload: jax.Array, spec: WireSpec, *,
-                impl: str | None = None) -> tuple[jax.Array, jax.Array]:
+                impl: str | None = None, return_counts: bool = False):
     """Decode a packed (R, row_words) uint32 payload back to
-    ((R, k) f32 dequantized values, (R, k) int32 flat indices)."""
+    ((R, k) f32 dequantized values, (R, k) int32 flat indices).
+
+    Ragged specs: the valid count is read from each row's own header word
+    and honored on decode — fields beyond it come back as value 0 at a
+    clamped in-bounds index, whatever the payload tail contains (the
+    fixed-buffer / ragged-content contract, DESIGN.md §9).  Rows gathered
+    from different workers may carry different counts.  With
+    ``return_counts`` the (R,) counts are returned as a third element.
+    """
     R, words = payload.shape
     assert words == spec.row_words, (words, spec.row_words)
     off = spec.header_words
+    counts = None
+    period = 0
+    if spec.ragged:
+        counts = payload[:, 0].astype(jnp.int32)
+        period = spec.count_period
     iw, vw = spec.index_words, spec.value_words
     ifields = ops.unpack_fields(payload[:, off:off + iw], spec.k,
-                                spec.index_bits, impl=impl)
+                                spec.index_bits, counts=counts,
+                                period=period, impl=impl)
     vfields = ops.unpack_fields(payload[:, off + iw:off + iw + vw], spec.k,
-                                spec.value_bits, impl=impl)
+                                spec.value_bits, counts=counts,
+                                period=period, impl=impl)
 
     if spec.local:
         idx = ifields.astype(jnp.int32) + spec._local_base()[None, :]
@@ -170,7 +258,8 @@ def decode_rows(payload: jax.Array, spec: WireSpec, *,
         idx = ifields.astype(jnp.int32)
 
     if spec.value_bits <= 8:
-        scale = lax.bitcast_convert_type(payload[:, :1], jnp.float32)
+        scale = lax.bitcast_convert_type(
+            payload[:, off - 1:off], jnp.float32)
         q = vfields.astype(jnp.int32)
         q = jnp.where(q >= (1 << (spec.value_bits - 1)),
                       q - (1 << spec.value_bits), q)
@@ -180,4 +269,12 @@ def decode_rows(payload: jax.Array, spec: WireSpec, *,
             vfields.astype(jnp.uint16), jnp.bfloat16).astype(jnp.float32)
     else:
         vals = lax.bitcast_convert_type(vfields, jnp.float32)
+    if spec.ragged:
+        # belt-and-braces on top of the unpack mask: masked fields decode
+        # to exactly 0.0 already (zero bits are 0 in every value format)
+        pos = jnp.arange(spec.k, dtype=jnp.int32)
+        valid = (pos % period)[None, :] < counts[:, None]
+        vals = jnp.where(valid, vals, 0.0)
+    if return_counts:
+        return vals, idx, counts
     return vals, idx

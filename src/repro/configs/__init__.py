@@ -37,3 +37,7 @@ def get_config(name: str) -> ModelConfig:
 
 def get_smoke_config(name: str) -> ModelConfig:
     return smoke_variant(ARCH_CONFIGS[name])
+
+__all__ = ["ModelConfig", "OptimizerConfig", "RunConfig",
+           "ShapeConfig", "SHAPES", "smoke_variant", "ARCH_CONFIGS",
+           "get_config", "get_smoke_config"]

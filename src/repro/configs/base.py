@@ -7,10 +7,10 @@ composes model x shape x mesh x optimizer for the launcher/dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
+from repro.core.gamma import GammaControllerConfig
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,6 +164,10 @@ class OptimizerConfig:
     kind: str = "csgd_asss"       # csgd_asss | nonadaptive | sgd | sls | dense
     armijo: ArmijoConfig = ArmijoConfig()
     compressor: Compressor = Compressor()
+    # per-round compression-level controller (AdaCGD-style adaptive gamma;
+    # repro/core/gamma.py + DESIGN.md §9) — takes effect when
+    # ``compressor.max_gamma`` > 0 sizes the ragged wire budget
+    gamma_controller: GammaControllerConfig = GammaControllerConfig()
     eta: float = 0.1              # for non-adaptive baselines
     ef_dtype: str = "float32"
     ef_host_offload: bool = False  # beyond-paper: EF memory in host RAM

@@ -9,8 +9,10 @@ Public API:
 """
 from .compression import (Compressor, Sparse, topk_select, sparse_to_dense,
                           block_threshold, threshold_select, tree_wire_bytes,
-                          contraction_gamma, MIN_COMPRESS_SIZE)
+                          tree_effective_wire_bytes, contraction_gamma,
+                          MIN_COMPRESS_SIZE)
 from .armijo import ArmijoConfig, ArmijoResult, armijo_search, next_alpha_max, tree_sqnorm
+from .gamma import GammaControllerConfig, gamma_init, gamma_update
 from .csgd import CSGD, CSGDConfig, CSGDState, StepAux, csgd_asss
 from .baselines import NonAdaptiveCSGD, SGD, SLS
 from .dcsgd import worker_compress_aggregate, dense_aggregate
@@ -21,8 +23,10 @@ __all__ = [
     "Compressor", "Sparse", "topk_select", "sparse_to_dense",
     "block_threshold", "threshold_select", "tree_wire_bytes",
     "contraction_gamma", "MIN_COMPRESS_SIZE",
+    "tree_effective_wire_bytes",
     "ArmijoConfig", "ArmijoResult", "armijo_search", "next_alpha_max",
     "tree_sqnorm",
+    "GammaControllerConfig", "gamma_init", "gamma_update",
     "CSGD", "CSGDConfig", "CSGDState", "StepAux", "csgd_asss",
     "NonAdaptiveCSGD", "SGD", "SLS",
     "worker_compress_aggregate", "dense_aggregate",

@@ -6,11 +6,15 @@ Faithful semantics:
   first test (Algorithm 1 lines 4-6: ``repeat alpha <- alpha*rho ... until``);
 * stopping condition (2): ``f(x - alpha*grad) <= f(x) - sigma*alpha*||grad||^2``
   — evaluated with the *unscaled* alpha;
-* the descent step uses ``eta = a * alpha`` with scale ``a < 2*sigma``
-  (the paper's key contribution; default ``a = 3*sigma`` per §IV-A... note
-  3*sigma=0.3 < 2*sigma=0.2 is FALSE for sigma=0.1 — the paper uses a=3σ
-  empirically while theory needs a ≤ ζ−ε; we expose both, default to the
-  paper's empirical 3σ and validate convergence in benchmarks);
+* the descent step uses ``eta = a * alpha`` (the paper's key contribution).
+  NOTE the paper's own settings contradict its theory: §IV-A runs
+  ``a = 3*sigma = 0.3``, but Theorem 15 needs ``a < 2*sigma = 0.2`` and
+  the compressed-SGD bound is tighter still, ``a <= zeta(gamma) =
+  sigma*gamma/(2-gamma)``.  Both are exposed: ``a_scale`` defaults to the
+  paper's empirical ``3*sigma`` (validated in benchmarks), and
+  ``theory_safe=True`` clamps the effective scale to ``min(a_scale,
+  zeta(gamma))`` per round via :meth:`ArmijoConfig.scale_for` — with
+  adaptive compression the clamp tracks the *current* ``gamma_t``;
 * across iterations ``alpha_max_t = omega * alpha_{t-1}`` (Algorithm 2 step 3).
 
 Implemented as a ``jax.lax.while_loop`` so it lowers into the train_step HLO;
@@ -36,15 +40,29 @@ class ArmijoConfig:
     alpha0: float = 0.1         # initial alpha_max (paper §IV-A)
     max_backtracks: int = 40    # safety cap on the while loop
     alpha_min: float = 1e-8     # numerical floor
+    #: clamp the effective scale to the compressed-SGD theory bound
+    #: zeta(gamma) each round (off by default: the paper's empirical
+    #: a = 3*sigma violates its own a < 2*sigma — see module docstring)
+    theory_safe: bool = False
 
     @property
     def theory_a_bound(self) -> float:
         """Scaled-GD theory bound a < 2*sigma (Theorem 15)."""
         return 2.0 * self.sigma
 
-    def zeta(self, gamma: float) -> float:
-        """Compressed-SGD theory bound: a <= zeta = sigma*gamma/(2-gamma)."""
+    def zeta(self, gamma):
+        """Compressed-SGD theory bound: a <= zeta = sigma*gamma/(2-gamma).
+        Works on floats and on a traced per-round gamma_t alike."""
         return self.sigma * gamma / (2.0 - gamma)
+
+    def scale_for(self, gamma=None):
+        """Effective step scale a for this round: ``a_scale``, clamped to
+        ``zeta(gamma)`` when ``theory_safe`` — re-evaluated per round under
+        adaptive compression, where gamma is the traced gamma_t."""
+        if gamma is None or not self.theory_safe:
+            return self.a_scale
+        return jnp.minimum(jnp.float32(self.a_scale),
+                           jnp.asarray(self.zeta(gamma), jnp.float32))
 
 
 class ArmijoResult(NamedTuple):
@@ -61,8 +79,8 @@ def _tree_axpy(a: jax.Array, x: PyTree, y: PyTree) -> PyTree:
 
 
 def tree_sqnorm(t: PyTree) -> jax.Array:
-    return sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-               for l in jax.tree.leaves(t))
+    return sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+               for leaf in jax.tree.leaves(t))
 
 
 def armijo_search(
@@ -73,11 +91,14 @@ def armijo_search(
     cfg: ArmijoConfig,
     f0: jax.Array | None = None,
     grad_sqnorm: jax.Array | None = None,
+    gamma: jax.Array | None = None,
 ) -> ArmijoResult:
     """Run Algorithm 1 starting at ``alpha_max`` for loss ``loss_fn``.
 
     ``loss_fn`` must be the loss of the *sampled batch* ``f_{i_t}`` closed
     over the batch (paper line-searches the sampled function, not f).
+    ``gamma``: the round's compression level, used only to clamp the
+    returned ``eta`` under ``cfg.theory_safe`` (see ``scale_for``).
     """
     if f0 is None:
         f0 = loss_fn(params)
@@ -111,7 +132,7 @@ def armijo_search(
     init = (alpha_max, trial(alpha_max), jnp.int32(1))
     alpha, f_try, n = jax.lax.while_loop(cond, body, init)
     accepted = f_try <= f0 - cfg.sigma * alpha * grad_sqnorm
-    eta = cfg.a_scale * alpha
+    eta = cfg.scale_for(gamma) * alpha
     return ArmijoResult(alpha=alpha, eta=eta, f0=f0,
                         n_evals=n, accepted=accepted)
 

@@ -22,8 +22,7 @@ over the wire in the distributed algorithm, so communicated bytes are
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -167,6 +166,18 @@ class Compressor:
     Pallas two-pass kernels (repro/kernels/ef_topk.py, dispatched by
     repro/kernels/dispatch.py).  Escape hatch: False falls back to the
     pure-jnp composition.
+
+    ``max_gamma`` (adaptive compression, DESIGN.md §9): when > 0 the wire
+    geometry — payload buffers, WireSpec, ``wire_bytes`` — is sized for
+    ``max_gamma`` (the static *budget* ``k_max``), while the compression
+    level actually applied each round is a **traced** per-round ``gamma_t``
+    passed to :meth:`compress_dense` / ``dcsgd.worker_compress_aggregate``.
+    Entries ranked beyond the per-round ``k_t <= k_max`` are masked to zero
+    and their wire fields zeroed behind a valid-count header word, so the
+    payload is ragged-in-content inside a fixed buffer and the static
+    ``wire_bytes`` invariant survives as an upper bound; the runtime
+    ``effective_wire_bytes`` metric counts what a ragged collective would
+    ship.  ``gamma`` stays the *initial* (and non-adaptive) ratio.
     """
 
     gamma: float = 0.01
@@ -175,15 +186,40 @@ class Compressor:
     min_compress_size: int = MIN_COMPRESS_SIZE
     value_bits: int = 32
     use_kernel: bool = True
+    max_gamma: float = 0.0          # > 0: adaptive budget (DESIGN.md §9)
+
+    @property
+    def adaptive(self) -> bool:
+        """True when the wire carries per-round valid counts (ragged)."""
+        return self.max_gamma > 0.0
+
+    @property
+    def geometry_gamma(self) -> float:
+        """The gamma that sizes every static buffer/payload (the budget)."""
+        return self.max_gamma if self.adaptive else self.gamma
 
     def k_for(self, d: int) -> int:
         if self.method == "none" or d < self.min_compress_size:
             return d
-        return max(1, int(round(self.gamma * d)))
+        return max(1, int(round(self.geometry_gamma * d)))
 
     def block_k(self) -> int:
         """k_b: entries kept per ``block``-wide block (block_topk)."""
-        return max(1, int(round(self.gamma * self.block)))
+        return max(1, int(round(self.geometry_gamma * self.block)))
+
+    # -- per-round (traced) selection counts, clamped into the budget -------
+    def k_t_for(self, d: int, gamma_t: jax.Array) -> jax.Array:
+        """Traced per-round k_t for a flat row of size d: round(gamma_t*d)
+        clamped into [1, k_max] so the static buffer always fits."""
+        k_max = self.k_for(d)
+        return jnp.clip(jnp.round(jnp.asarray(gamma_t, jnp.float32) * d),
+                        1, k_max).astype(jnp.int32)
+
+    def block_k_t(self, gamma_t: jax.Array) -> jax.Array:
+        """Traced per-round per-block valid count, in [1, block_k()]."""
+        return jnp.clip(
+            jnp.round(jnp.asarray(gamma_t, jnp.float32) * self.block),
+            1, self.block_k()).astype(jnp.int32)
 
     def sparse_k(self, d: int) -> int:
         """Actual number of (value, index) pairs on the wire for a leaf
@@ -219,11 +255,20 @@ class Compressor:
         return {32: 4, 16: 2, 8: 1, 4: 1}[self.value_bits]
 
     # -- dense-in dense-out (single-node semantics; update rule (6)) --------
-    def compress_dense(self, x: jax.Array) -> tuple[jax.Array, jax.Array]:
-        """Returns (top_k(x) as dense, residual x - top_k(x))."""
+    def compress_dense(self, x: jax.Array,
+                       gamma_t: jax.Array | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+        """Returns (top_k(x) as dense, residual x - top_k(x)).
+
+        ``gamma_t`` (adaptive compressors only): traced per-round ratio;
+        selection runs at the static ``k_max`` budget and entries ranked
+        beyond ``k_t = round(gamma_t * d)`` are masked into the residual.
+        """
         d = x.size
         if self.method == "none" or d < self.min_compress_size:
             return x, jnp.zeros_like(x)
+        if gamma_t is not None and self.adaptive:
+            return self._compress_dense_ragged(x, gamma_t)
         if self.method == "topk":
             s = topk_select(x, self.k_for(d))
             if self.value_bits < 32:
@@ -244,6 +289,40 @@ class Compressor:
                 return dense.reshape(x.shape), resid.reshape(x.shape)
             tau = block_threshold(x, self.gamma, self.block)
             dense = threshold_select(x, tau)
+        else:
+            raise ValueError(f"unknown compression method {self.method!r}")
+        return dense, x - dense
+
+    def _compress_dense_ragged(self, x: jax.Array, gamma_t: jax.Array
+                               ) -> tuple[jax.Array, jax.Array]:
+        """Budget-shaped selection masked to the traced per-round count.
+
+        Both methods produce magnitude-sorted candidates (``lax.top_k``
+        sorts descending), so "the first k_t" IS exact top-k_t (flat rows)
+        / per-block top-k_b_t (block rows) — the mask only zeroes values,
+        never moves them, and masked entries fall into the residual.
+        """
+        d = x.size
+        if self.method == "topk":
+            # lax.top_k directly (not topk_select): its k == d early path
+            # returns UNSORTED values, and the prefix mask needs the
+            # magnitude-descending order.
+            flat = x.reshape(-1)
+            _, idx = jax.lax.top_k(jnp.abs(flat), self.k_for(d))
+            idx = idx.astype(jnp.int32)
+            k_t = self.k_t_for(d, gamma_t)
+            pos = jnp.arange(idx.shape[-1], dtype=jnp.int32)
+            vals = jnp.where(pos < k_t, flat[idx], 0.0)
+            if self.value_bits < 32:
+                vals = self.quantize_values(vals)       # scale sees valid only
+            dense = sparse_to_dense(Sparse(vals, idx, x.shape), x.dtype)
+        elif self.method == "block_topk":
+            vals, idx = block_extract_sparse(x.reshape(1, -1), self)
+            k_b = self.block_k()
+            pos = jnp.arange(vals.shape[-1], dtype=jnp.int32)
+            vals = jnp.where(pos % k_b < self.block_k_t(gamma_t), vals, 0.0)
+            dense = jnp.zeros((d,), jnp.float32).at[idx.reshape(-1)].add(
+                vals.reshape(-1)).astype(x.dtype).reshape(x.shape)
         else:
             raise ValueError(f"unknown compression method {self.method!r}")
         return dense, x - dense
@@ -284,19 +363,57 @@ class Compressor:
         exactly: leaves with ndim >= 2 are scan-stacked and compressed
         *per layer* (the dense/sparse cutoff and the block padding both
         apply to the per-layer size d, not the whole leaf)."""
-        if len(shape) >= 2:
-            L = shape[0]
-            d = 1
-            for n in shape[1:]:
-                d *= n
-        else:
-            L, d = 1, (shape[0] if shape else 1)
+        L, d = _leaf_geometry(shape)
         return L * self.wire_bytes(d, itemsize)
+
+
+def _leaf_geometry(shape: tuple[int, ...]) -> tuple[int, int]:
+    """(L, d) per-layer view of a leaf shape — THE stacked-leaf convention
+    of ``worker_compress_aggregate`` (ndim >= 2: leading axis = layers),
+    shared by the static and the effective byte accounting."""
+    if len(shape) >= 2:
+        L = shape[0]
+        d = 1
+        for n in shape[1:]:
+            d *= n
+        return L, d
+    return 1, (shape[0] if shape else 1)
 
 
 def tree_wire_bytes(tree: PyTree, comp: Compressor, itemsize: int = 4) -> int:
     """Total communicated bytes per worker per step for a gradient pytree."""
     return sum(comp.leaf_wire_bytes(leaf.shape, itemsize)
+               for leaf in jax.tree.leaves(tree))
+
+
+def leaf_effective_wire_bytes(comp: Compressor, shape: tuple[int, ...],
+                              gamma_t: jax.Array,
+                              itemsize: int = 4) -> jax.Array:
+    """Traced per-round *useful* wire bytes for one leaf at ``gamma_t`` —
+    what a truly ragged collective would ship: the header plus only the
+    ``k_t`` valid (index, value) fields, bit-packed (DESIGN.md §9).  For
+    non-adaptive compressors this equals :meth:`Compressor.leaf_wire_bytes`
+    exactly; dense-shipping leaves cost their dense bytes either way.
+    """
+    L, d = _leaf_geometry(shape)
+    if comp.sparse_k(d) >= d:
+        return jnp.float32(L * d * itemsize)
+    from repro.comm.wire import WireSpec  # local import: no cycle
+    spec = WireSpec.for_row(comp, d)
+    if not spec.ragged:
+        return jnp.float32(L * spec.row_bytes)
+    count = comp.block_k_t(gamma_t) if spec.local \
+        else comp.k_t_for(d, gamma_t)
+    return jnp.float32(L) * spec.effective_row_bytes(count)
+
+
+def tree_effective_wire_bytes(tree: PyTree, comp: Compressor,
+                              gamma_t: jax.Array,
+                              itemsize: int = 4) -> jax.Array:
+    """Traced per-round effective bytes for a gradient pytree (the runtime
+    counterpart of :func:`tree_wire_bytes`, which stays the static upper
+    bound the payload buffers are sized for)."""
+    return sum(leaf_effective_wire_bytes(comp, leaf.shape, gamma_t, itemsize)
                for leaf in jax.tree.leaves(tree))
 
 

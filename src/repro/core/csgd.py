@@ -18,8 +18,9 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .armijo import ArmijoConfig, ArmijoResult, armijo_search, next_alpha_max, tree_sqnorm
-from .compression import Compressor
+from .armijo import ArmijoConfig, armijo_search, next_alpha_max, tree_sqnorm
+from .compression import Compressor, tree_effective_wire_bytes, tree_wire_bytes
+from .gamma import GammaControllerConfig, gamma_init, gamma_update
 from . import error_feedback as ef
 
 PyTree = Any
@@ -27,14 +28,25 @@ PyTree = Any
 
 @dataclasses.dataclass(frozen=True)
 class CSGDConfig:
-    armijo: ArmijoConfig = ArmijoConfig()
+    #: None = no line search: the fixed-step compressed baseline (Aji &
+    #: Heafield) — ``eta`` below is the step size (cf. NonAdaptiveCSGD).
+    armijo: ArmijoConfig | None = ArmijoConfig()
     compressor: Compressor = Compressor()
+    #: per-round compression-level controller (AdaCGD-style; core/gamma.py)
+    gamma_ctrl: GammaControllerConfig = GammaControllerConfig()
+    eta: float = 0.1                # fixed step when armijo is None
     ef_dtype: str = "float32"       # float32 | bfloat16 | int8
     use_scaling: bool = True        # False reproduces the divergent variant
     # beyond-paper (paper §V lists momentum as future work): heavy-ball
     # velocity accumulated BEFORE compression — EF-SGDm style, the error
     # feedback recycles what compression drops from the momentum update.
     momentum: float = 0.0
+
+    def __post_init__(self):
+        if self.armijo is None and \
+                self.gamma_ctrl.schedule == "armijo-coupled":
+            raise ValueError("armijo-coupled gamma schedule needs the "
+                             "Armijo search (armijo=None)")
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
@@ -45,6 +57,7 @@ class CSGDState(NamedTuple):
     alpha_prev: jax.Array    # alpha_{t-1} (per-worker in DCSGD)
     memory: PyTree           # error-feedback m_t, shaped like params
     n_evals_ema: jax.Array   # running mean of Armijo fwd evals (telemetry)
+    gamma: jax.Array         # per-round compression level gamma_t
     velocity: PyTree = ()    # heavy-ball state (momentum > 0 only)
 
 
@@ -55,6 +68,9 @@ class StepAux(NamedTuple):
     n_evals: jax.Array
     grad_sqnorm: jax.Array
     accepted: jax.Array
+    gamma: jax.Array             # the gamma_t this round compressed at
+    wire_bytes: jax.Array        # static payload budget (notional, 1 node)
+    eff_wire_bytes: jax.Array    # ragged-content bytes at gamma_t
 
 
 def _ef_to_dense(memory, dtype=jnp.float32):
@@ -85,11 +101,14 @@ class CSGD:
             memory = ef.init_ef(params, jnp.dtype(self.cfg.ef_dtype))
         vel = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                             params) if self.cfg.momentum else ())
+        alpha0 = self.cfg.armijo.alpha0 if self.cfg.armijo is not None \
+            else self.cfg.eta
         return CSGDState(
             step=jnp.int32(0),
-            alpha_prev=jnp.float32(self.cfg.armijo.alpha0),
+            alpha_prev=jnp.float32(alpha0),
             memory=memory,
             n_evals_ema=jnp.float32(0.0),
+            gamma=gamma_init(self.cfg.gamma_ctrl, self.cfg.compressor),
             velocity=vel,
         )
 
@@ -101,14 +120,39 @@ class CSGD:
         state: CSGDState,
     ) -> tuple[PyTree, CSGDState, StepAux]:
         cfg = self.cfg
+        comp = cfg.compressor
         loss, grads = jax.value_and_grad(loss_fn)(params)
         gsq = tree_sqnorm(grads)
 
         # --- Armijo search with alpha_max = omega * alpha_{t-1} (step 3) ---
-        alpha_max = next_alpha_max(state.alpha_prev, cfg.armijo)
-        res = armijo_search(loss_fn, params, grads, alpha_max, cfg.armijo,
-                            f0=loss, grad_sqnorm=gsq)
-        eta = res.eta if cfg.use_scaling else res.alpha  # a=1 -> divergence
+        if cfg.armijo is not None:
+            alpha_max = next_alpha_max(state.alpha_prev, cfg.armijo)
+            res = armijo_search(loss_fn, params, grads, alpha_max,
+                                cfg.armijo, f0=loss, grad_sqnorm=gsq)
+            alpha, n_evals, accepted = res.alpha, res.n_evals, res.accepted
+        else:  # fixed-step baseline (armijo=None): eta is the step size
+            alpha = jnp.float32(cfg.eta)
+            n_evals = jnp.int32(0)
+            accepted = jnp.bool_(True)
+
+        # --- per-round compression level (controller round, step t) -------
+        if cfg.gamma_ctrl.schedule == "armijo-coupled":
+            gamma_t = gamma_update(
+                cfg.gamma_ctrl, comp, state.gamma, state.step,
+                alpha=alpha, alpha_prev=state.alpha_prev, n_evals=n_evals,
+                n_evals_ema=state.n_evals_ema)
+        else:
+            gamma_t = gamma_update(cfg.gamma_ctrl, comp, state.gamma,
+                                   state.step)
+
+        if cfg.armijo is None:
+            eta = alpha
+        elif cfg.use_scaling:
+            # a = scale_for(gamma_t): the paper's a_scale, re-clamped to
+            # zeta(gamma_t) each round under theory_safe
+            eta = cfg.armijo.scale_for(gamma_t) * alpha
+        else:
+            eta = alpha                              # a = 1 -> divergence
 
         # --- (optional) heavy-ball velocity, pre-compression --------------
         if cfg.momentum:
@@ -125,7 +169,8 @@ class CSGD:
 
         def leaf_update(m, g):
             acc = m + eta * g.astype(m.dtype)
-            sent, resid = cfg.compressor.compress_dense(acc)
+            sent, resid = comp.compress_dense(
+                acc, gamma_t=gamma_t if comp.adaptive else None)
             return sent, resid
 
         flat_m, treedef = jax.tree.flatten(mem)
@@ -137,17 +182,22 @@ class CSGD:
         new_params = jax.tree.map(
             lambda p, s: (p.astype(jnp.float32) - s).astype(p.dtype),
             params, sent)
+        wire = jnp.float32(tree_wire_bytes(params, comp))
+        eff = tree_effective_wire_bytes(params, comp, gamma_t) \
+            if comp.adaptive else wire
         new_state = CSGDState(
             step=state.step + 1,
-            alpha_prev=res.alpha,
+            alpha_prev=alpha,
             memory=_ef_from_dense(resid, cfg.ef_dtype),
             n_evals_ema=0.9 * state.n_evals_ema +
-            0.1 * res.n_evals.astype(jnp.float32),
+            0.1 * n_evals.astype(jnp.float32),
+            gamma=gamma_t,
             velocity=vel,
         )
-        aux = StepAux(loss=loss, alpha=res.alpha, eta=eta,
-                      n_evals=res.n_evals, grad_sqnorm=gsq,
-                      accepted=res.accepted)
+        aux = StepAux(loss=loss, alpha=alpha, eta=eta,
+                      n_evals=n_evals, grad_sqnorm=gsq,
+                      accepted=accepted, gamma=gamma_t,
+                      wire_bytes=wire, eff_wire_bytes=eff)
         return new_params, new_state, aux
 
 

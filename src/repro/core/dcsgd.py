@@ -102,12 +102,24 @@ def worker_compress_aggregate(
     comp: Compressor,
     dp_axes: AxisNames,
     stacked_mask: PyTree | None = None,
-) -> tuple[PyTree, PyTree, jax.Array]:
+    gamma_t: jax.Array | None = None,
+) -> tuple[PyTree, PyTree, jax.Array, jax.Array]:
     """Steps 3-7 of Algorithm 3 for a whole gradient pytree.
 
-    Returns ``(mean_update, new_memory, wire_bytes)`` where ``mean_update``
-    is the dense averaged compressed update (to subtract from params) and
-    ``wire_bytes`` counts this worker's transmitted bytes this step.
+    Returns ``(mean_update, new_memory, wire_bytes, effective_wire_bytes)``
+    where ``mean_update`` is the dense averaged compressed update (to
+    subtract from params) and ``wire_bytes`` counts this worker's
+    transmitted payload-buffer bytes this step (the static budget).
+
+    ``gamma_t`` (adaptive compressors, DESIGN.md §9): this worker's traced
+    per-round compression level.  Selection still runs at the static
+    ``k_max`` budget — the all-gathered buffer never changes shape — but
+    entries ranked beyond ``k_t`` are masked behind the payload's
+    valid-count header, receivers decode only the valid prefix (workers
+    may carry *different* k_t), the masked entries recycle through the EF
+    residual, and ``effective_wire_bytes`` reports what a ragged
+    collective would have shipped.  For non-adaptive compressors the two
+    byte counts coincide.
     """
     W = _dp_size(dp_axes)
     flat_g, treedef = jax.tree.flatten(grads)
@@ -117,9 +129,12 @@ def worker_compress_aggregate(
     else:
         flat_s = treedef.flatten_up_to(stacked_mask)
 
+    if comp.adaptive and gamma_t is None:
+        gamma_t = jnp.float32(comp.gamma)
     use_fused = comp.method == "block_topk" and comp.use_kernel
     updates, new_mem = [], []
     wire = jnp.float32(0.0)
+    eff_wire = jnp.float32(0.0)
     for g, m, stacked in zip(flat_g, flat_m, flat_s):
         g2 = _leaf_2d(g, stacked)
         L, d = g2.shape
@@ -130,6 +145,7 @@ def worker_compress_aggregate(
             updates.append(upd)
             new_mem.append(jnp.zeros_like(m))
             wire = wire + jnp.float32(acc.size * acc.dtype.itemsize)
+            eff_wire = eff_wire + jnp.float32(acc.size * acc.dtype.itemsize)
             continue
         if use_fused:
             # fused two-pass Pallas path (DESIGN.md §3): pass 1 streams
@@ -137,8 +153,13 @@ def worker_compress_aggregate(
             # pass 2 streams them again and writes (sent, m') — the
             # accumulator never round-trips through HBM.
             m2 = _leaf_2d(m, stacked).astype(jnp.float32)
+            # threshold at the BUDGET level (geometry_gamma == max_gamma
+            # for adaptive compressors): block_extract_sparse below pulls
+            # exactly block_k() budget entries per block, and any
+            # per-round k_t mask is applied at encode time
             sent, resid, _ = ops.fused_ef_compress(
-                m2, g2.astype(jnp.float32), eta, comp.gamma, comp.block)
+                m2, g2.astype(jnp.float32), eta, comp.geometry_gamma,
+                comp.block)
             # per-block top-k_b of |sent| recovers the kept wire entries
             # (>= k_b survive the threshold; ties beyond k_b are dropped
             # from the wire and recycled into m' below)
@@ -154,7 +175,15 @@ def worker_compress_aggregate(
         # residual is taken against what receivers actually decode, so
         # quantization error AND tie-dropped entries are recycled.
         spec = wire_fmt.WireSpec.for_row(comp, d)
-        payload = wire_fmt.encode_rows(vals, idx, spec)      # (L, words)
+        if spec.ragged:
+            # per-round valid count (DESIGN.md §9): entries past it are
+            # masked out of the payload behind the count header word
+            count = comp.block_k_t(gamma_t) if spec.local \
+                else comp.k_t_for(d, gamma_t)
+            counts = jnp.broadcast_to(count, (L,))
+        else:
+            count, counts = None, None
+        payload = wire_fmt.encode_rows(vals, idx, spec, counts=counts)
         check_payload(payload, spec, comp, d)
 
         all_pay = gather_packed(payload, dp_axes)        # (W, L, words)
@@ -165,6 +194,8 @@ def worker_compress_aggregate(
         mean_dense = _scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
         updates.append(mean_dense.reshape(g.shape))
         wire = wire + jnp.float32(L * spec.row_bytes)
+        eff_wire = eff_wire + (jnp.float32(L) * spec.effective_row_bytes(
+            count) if spec.ragged else jnp.float32(L * spec.row_bytes))
 
         # EF residual against what receivers actually decoded — this
         # worker's rows are already in the gathered decode, so slice them
@@ -174,13 +205,16 @@ def worker_compress_aggregate(
             jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0, keepdims=False),
             jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0, keepdims=False),
             L, d, jnp.float32)
+        # masked-beyond-k_t entries are absent from own_dense, so — like
+        # quantization error and tie drops — they land in the residual
         if use_fused:
             resid = resid + (sent - own_dense)
         else:
             resid = acc2 - own_dense
         new_mem.append(resid.reshape(m.shape).astype(m.dtype))
 
-    return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire)
+    return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
+            eff_wire)
 
 
 def dense_aggregate(grads: PyTree, eta: jax.Array,

@@ -1,0 +1,131 @@
+"""Per-round compression-level controller (AdaCGD-style adaptive gamma).
+
+The paper fixes the compression ratio ``gamma`` for the whole run and only
+adapts the *step size* to the trajectory; AdaCGD (Makarenko et al.,
+"Adaptive Compression for Communication-Efficient Distributed Training")
+shows the compression level itself should adapt per round.  The Armijo
+state already carries exactly the signals such a controller needs — the
+accepted ``alpha`` vs its predecessor, the running mean of
+stopping-condition evaluations, acceptance of the first trial — so the
+controller is a pure function of (previous gamma, this round's search
+telemetry) and lowers into the train step like everything else.
+
+Schedules (``GammaControllerConfig.schedule``):
+
+* ``fixed``          — gamma_t = gamma0 forever (the paper's setting).
+* ``linear``         — ramp gamma0 -> gamma_max over ``ramp_steps`` steps:
+                       coarse-to-fine, cheap wire early when gradients are
+                       large and any descent direction helps, full budget
+                       near convergence.
+* ``armijo-coupled`` — multiplicative feedback on the line search: grow
+                       gamma (send more) when the search struggles
+                       (``n_evals_ema`` above ``evals_hi`` or the accepted
+                       alpha collapsed vs the previous round), shrink when
+                       it accepts immediately (first trial accepted and the
+                       eval EMA below ``evals_lo``).  A struggling search
+                       means the compressed direction has drifted from the
+                       true gradient — spend wire; an instantly-accepting
+                       one means compression is not the binding constraint
+                       — save wire.
+
+Theory coupling is free: ``ArmijoConfig.zeta(gamma_t)`` is the per-round
+scaling bound ``a <= sigma*gamma/(2-gamma)``, and with
+``ArmijoConfig.theory_safe`` the step scale is re-clamped to the *current*
+gamma_t each round (see ``ArmijoConfig.scale_for``).
+
+Every returned gamma_t lives in ``[gamma_min, gamma_max]`` where gamma_max
+never exceeds the compressor's static wire budget
+(``Compressor.geometry_gamma``) — the payload buffer is sized once, at
+trace time, for the budget; gamma_t only changes the *valid* entry count
+inside it (the ragged packed payload, DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+SCHEDULES = ("fixed", "linear", "armijo-coupled")
+
+
+@dataclasses.dataclass(frozen=True)
+class GammaControllerConfig:
+    """Config for the per-round gamma controller.
+
+    Zeros mean "derive from the compressor": gamma0 defaults to
+    ``Compressor.gamma``, gamma_max to the compressor's static budget
+    (``geometry_gamma``), gamma_min to ``gamma0 / 8``.
+    """
+
+    schedule: str = "fixed"       # fixed | linear | armijo-coupled
+    gamma0: float = 0.0           # initial gamma_t (0 -> compressor.gamma)
+    gamma_min: float = 0.0        # floor (0 -> gamma0 / 8)
+    gamma_max: float = 0.0        # ceiling (0 -> compressor budget)
+    ramp_steps: int = 1000        # linear: steps from gamma0 to gamma_max
+    grow: float = 1.5             # armijo-coupled: multiplicative grow
+    shrink: float = 0.9           # armijo-coupled: multiplicative shrink
+    evals_hi: float = 3.0         # grow when n_evals_ema rises above this
+    evals_lo: float = 2.0         # shrink allowed only below this EMA
+    alpha_collapse: float = 0.5   # grow when alpha < collapse * alpha_prev
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown gamma schedule {self.schedule!r} "
+                             f"(want one of {SCHEDULES})")
+
+    def resolve(self, comp) -> tuple[float, float, float]:
+        """(gamma0, gamma_min, gamma_max) with compressor defaults filled
+        in; gamma_max is clipped to the compressor's static budget."""
+        budget = comp.geometry_gamma
+        g0 = self.gamma0 or comp.gamma
+        gmax = min(self.gamma_max or budget, budget)
+        gmin = self.gamma_min or g0 / 8.0
+        g0 = min(max(g0, gmin), gmax)
+        return g0, gmin, gmax
+
+
+def gamma_init(cfg: GammaControllerConfig, comp) -> jax.Array:
+    """Initial gamma_t for the optimizer state."""
+    g0, _, _ = cfg.resolve(comp)
+    return jnp.float32(g0)
+
+
+def gamma_update(
+    cfg: GammaControllerConfig,
+    comp,
+    gamma: jax.Array,
+    step: jax.Array,
+    *,
+    alpha: jax.Array | None = None,
+    alpha_prev: jax.Array | None = None,
+    n_evals: jax.Array | None = None,
+    n_evals_ema: jax.Array | None = None,
+) -> jax.Array:
+    """One controller round: gamma_{t} from gamma_{t-1} and the search
+    telemetry of the round that just finished.  Pure and traced — the
+    schedule string is static, everything else lowers to jnp.
+    """
+    g0, gmin, gmax = cfg.resolve(comp)
+    if cfg.schedule == "fixed":
+        return jnp.float32(g0) * jnp.ones_like(jnp.asarray(gamma))
+    if cfg.schedule == "linear":
+        frac = jnp.clip(step.astype(jnp.float32) / max(cfg.ramp_steps, 1),
+                        0.0, 1.0)
+        return jnp.clip(g0 + (gmax - g0) * frac, gmin, gmax)
+
+    # armijo-coupled
+    if alpha is None or alpha_prev is None or n_evals is None \
+            or n_evals_ema is None:
+        raise ValueError("armijo-coupled schedule needs alpha, alpha_prev, "
+                         "n_evals and n_evals_ema")
+    alpha = jnp.asarray(alpha, jnp.float32)
+    alpha_prev = jnp.asarray(alpha_prev, jnp.float32)
+    ema = jnp.asarray(n_evals_ema, jnp.float32)
+    nev = jnp.asarray(n_evals, jnp.float32)
+    struggling = jnp.logical_or(ema > cfg.evals_hi,
+                                alpha < cfg.alpha_collapse * alpha_prev)
+    instant = jnp.logical_and(nev <= 1.0, ema < cfg.evals_lo)
+    factor = jnp.where(struggling, cfg.grow,
+                       jnp.where(instant, cfg.shrink, 1.0))
+    return jnp.clip(jnp.asarray(gamma, jnp.float32) * factor, gmin, gmax)

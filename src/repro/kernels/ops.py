@@ -198,29 +198,50 @@ def threshold_split_blocks(x, tau, block: int = 1024, *,
 # wire pack/unpack (the packed payload codec's data-parallel core)
 # --------------------------------------------------------------------------
 
-def pack_fields(fields, bits: int, *, impl: str | None = None):
+def pack_fields(fields, bits: int, *, counts=None, period: int = 0,
+                impl: str | None = None):
     """Pack (R, n) uint32 bit-fields into (R, ceil(n*bits/32)) uint32 words.
 
     ``bits`` in {4, 8, 16, 32}; n is zero-padded up to a whole word here, so
     callers slice by field count on unpack.  Layout per kernels/ref.py:
     little-endian fields within each word.
+
+    ``counts`` + static ``period`` (ragged payloads, DESIGN.md §9): per-row
+    valid counts — field j is zeroed when ``j % period >= counts[row]``,
+    inside the ref/Pallas implementations' streaming pass.
     """
+    if counts is not None and period <= 0:
+        raise ValueError("ragged pack needs a positive period")
     if bits >= 32:
-        return fields.astype(jnp.uint32)
+        out = fields.astype(jnp.uint32)
+        if counts is not None:
+            out = jnp.where(ref._count_mask(*out.shape, counts, period),
+                            out, 0)
+        return out
     F = 32 // bits
     R, n = fields.shape
     W = -(-n // F)
     pad = W * F - n
     if pad:
         fields = jnp.pad(fields, ((0, 0), (0, pad)))
-    return dispatch.call("wire_pack", fields, bits, impl=impl)
+    return dispatch.call("wire_pack", fields, bits, counts, period,
+                         impl=impl)
 
 
-def unpack_fields(words, n: int, bits: int, *, impl: str | None = None):
-    """Inverse of :func:`pack_fields`: (R, W) words -> first ``n`` fields."""
+def unpack_fields(words, n: int, bits: int, *, counts=None, period: int = 0,
+                  impl: str | None = None):
+    """Inverse of :func:`pack_fields`: (R, W) words -> first ``n`` fields,
+    masked beyond the per-row valid ``counts`` when given."""
+    if counts is not None and period <= 0:
+        raise ValueError("ragged unpack needs a positive period")
     if bits >= 32:
-        return words.astype(jnp.uint32)
-    out = dispatch.call("wire_unpack", words, bits, impl=impl)
+        out = words.astype(jnp.uint32)
+        if counts is not None:
+            out = jnp.where(ref._count_mask(*out.shape, counts, period),
+                            out, 0)
+        return out
+    out = dispatch.call("wire_unpack", words, bits, counts, period,
+                        impl=impl)
     return out[:, :n]
 
 

@@ -79,7 +79,18 @@ def block_abs_topk_threshold(x: jax.Array, k_b: int, block: int) -> jax.Array:
 
 # --------------------------- wire pack/unpack ------------------------------
 
-def pack_fields(fields: jax.Array, bits: int) -> jax.Array:
+def _count_mask(R: int, n: int, counts: jax.Array, period: int) -> jax.Array:
+    """(R, n) validity mask: field j of a row is valid iff
+    ``j % period < count`` — the ragged-payload predicate (DESIGN.md §9):
+    a per-block prefix for block-local wire rows (period = k_b), a plain
+    row prefix for flat rows (period = k)."""
+    pos = jnp.arange(n, dtype=jnp.int32) % jnp.int32(period)
+    return pos[None, :] < jnp.asarray(counts, jnp.int32).reshape(-1, 1)
+
+
+def pack_fields(fields: jax.Array, bits: int,
+                counts: jax.Array | None = None,
+                period: int = 0) -> jax.Array:
     """Pack (R, n) uint32 bit-fields into (R, n*bits/32) uint32 words.
 
     ``bits`` in {4, 8, 16, 32}; n must be a multiple of 32//bits (callers
@@ -87,29 +98,46 @@ def pack_fields(fields: jax.Array, bits: int) -> jax.Array:
     little-endian fields within the word, so packed payloads are
     byte-order independent at the word level.  Fields are masked to
     ``bits`` before packing; disjoint bit ranges make the or a sum.
+
+    ``counts`` (+ static ``period``): per-row valid counts; fields with
+    ``j % period >= counts[row]`` are zeroed on the way into the words, so
+    ragged payloads never leak stale entries past their count header.
     """
     fields = fields.astype(jnp.uint32)
+    R, n = fields.shape
+    if counts is not None:
+        fields = jnp.where(_count_mask(R, n, counts, period), fields, 0)
     if bits >= 32:
         return fields
     F = 32 // bits
-    R, n = fields.shape
     mask = jnp.uint32((1 << bits) - 1)
     w = (fields & mask).reshape(R, n // F, F)
     shifts = (jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits))
     return jnp.sum(w << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
 
 
-def unpack_fields(words: jax.Array, bits: int) -> jax.Array:
-    """Inverse of :func:`pack_fields`: (R, W) words -> (R, W*32/bits) fields."""
+def unpack_fields(words: jax.Array, bits: int,
+                  counts: jax.Array | None = None,
+                  period: int = 0) -> jax.Array:
+    """Inverse of :func:`pack_fields`: (R, W) words -> (R, W*32/bits)
+    fields.  ``counts`` masks decoded fields beyond the per-row valid
+    count to 0 — decode-side enforcement of the ragged contract, robust
+    to arbitrary bytes in the invalid tail."""
     words = words.astype(jnp.uint32)
     if bits >= 32:
+        if counts is not None:
+            words = jnp.where(
+                _count_mask(*words.shape, counts, period), words, 0)
         return words
     F = 32 // bits
     R, W = words.shape
     mask = jnp.uint32((1 << bits) - 1)
     shifts = (jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits))
     fields = (words[:, :, None] >> shifts[None, None, :]) & mask
-    return fields.reshape(R, W * F)
+    fields = fields.reshape(R, W * F)
+    if counts is not None:
+        fields = jnp.where(_count_mask(R, W * F, counts, period), fields, 0)
+    return fields
 
 
 # --------------------------- flash attention -------------------------------
@@ -163,7 +191,6 @@ def wkv_reference(r, k, v, w, u, s0):
     r/k/v/w: (B, S, H, K|V); u: (H, K); s0: (B, H, K, V).
     Returns (y: (B, S, H, V), sT)."""
     B, S, H, K = r.shape
-    V = v.shape[-1]
     S_state = s0.astype(jnp.float32)
     ys = []
     for t in range(S):

@@ -31,6 +31,18 @@ ROWS = 256
 WORD_CHUNK = 512
 
 
+def _field_mask(c_ref, n: int, rows: int, period: int):
+    """(rows, n) validity mask for the current grid tile: GLOBAL field
+    index j (tile column offset + local column) is valid iff
+    ``j % period < count[row]`` — the ragged-payload predicate.  The
+    modulo makes it a per-block prefix for block-local wire rows and a
+    plain prefix for flat rows, with zero extra HBM traffic: counts ride
+    in as one (rows, 1) int32 column per tile."""
+    j = pl.program_id(1)
+    gidx = j * n + jax.lax.broadcasted_iota(jnp.int32, (rows, n), 1)
+    return (gidx % period) < c_ref[...]
+
+
 def _pack_kernel(f_ref, out_ref, *, bits: int):
     """(rows, W*F) uint32 fields -> (rows, W) uint32 words."""
     F = 32 // bits
@@ -39,6 +51,18 @@ def _pack_kernel(f_ref, out_ref, *, bits: int):
     shifts = jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits)
     w = f.reshape(rows, n // F, F) << shifts[None, None, :]
     # disjoint bit ranges: or == sum, and sum lowers to a VPU reduction
+    out_ref[...] = jnp.sum(w, axis=-1, dtype=jnp.uint32)
+
+
+def _pack_kernel_ragged(f_ref, c_ref, out_ref, *, bits: int, period: int):
+    """Ragged variant: zero fields beyond the per-row valid count on the
+    same streaming pass, then pack."""
+    F = 32 // bits
+    f = f_ref[...].astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    rows, n = f.shape
+    f = jnp.where(_field_mask(c_ref, n, rows, period), f, jnp.uint32(0))
+    shifts = jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits)
+    w = f.reshape(rows, n // F, F) << shifts[None, None, :]
     out_ref[...] = jnp.sum(w, axis=-1, dtype=jnp.uint32)
 
 
@@ -53,45 +77,100 @@ def _unpack_kernel(w_ref, out_ref, *, bits: int):
     out_ref[...] = fields.reshape(rows, W * F)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def pack_words(fields: jax.Array, bits: int, *, interpret: bool = True):
+def _unpack_kernel_ragged(w_ref, c_ref, out_ref, *, bits: int, period: int):
+    """Ragged variant: decoded fields beyond the valid count come out 0
+    regardless of the packed tail's bytes."""
+    F = 32 // bits
+    w = w_ref[...].astype(jnp.uint32)
+    rows, W = w.shape
+    mask = jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(F, dtype=jnp.uint32) * jnp.uint32(bits)
+    fields = (w[:, :, None] >> shifts[None, None, :]) & mask
+    fields = fields.reshape(rows, W * F)
+    out_ref[...] = jnp.where(_field_mask(c_ref, W * F, rows, period),
+                             fields, jnp.uint32(0))
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "period", "interpret"))
+def pack_words(fields: jax.Array, bits: int,
+               counts: jax.Array | None = None, period: int = 0, *,
+               interpret: bool = True):
     """Pack (R, n) uint32 bit-fields into (R, n*bits/32) uint32 words.
 
     n must be a multiple of 32//bits (``ops.pack_fields`` zero-pads).
+    ``counts``/``period``: ragged payloads — fields with
+    ``j % period >= counts[row]`` are zeroed inside the kernel before
+    packing (valid-count semantics, DESIGN.md §9).
     """
     if bits >= 32:
-        return fields.astype(jnp.uint32)
+        out = fields.astype(jnp.uint32)
+        if counts is not None:
+            from . import ref
+            out = jnp.where(ref._count_mask(*out.shape, counts, period),
+                            out, 0)
+        return out
     F = 32 // bits
     R, n = fields.shape
     W = n // F
     rows = min(ROWS, R)
     wc = min(WORD_CHUNK, W)
     grid = (pl.cdiv(R, rows), pl.cdiv(W, wc))
+    if counts is None:
+        return pl.pallas_call(
+            functools.partial(_pack_kernel, bits=bits),
+            grid=grid,
+            in_specs=[pl.BlockSpec((rows, wc * F), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((rows, wc), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((R, W), jnp.uint32),
+            interpret=interpret,
+        )(fields.astype(jnp.uint32))
+    c = jnp.asarray(counts, jnp.int32).reshape(-1, 1)
     return pl.pallas_call(
-        functools.partial(_pack_kernel, bits=bits),
+        functools.partial(_pack_kernel_ragged, bits=bits, period=period),
         grid=grid,
-        in_specs=[pl.BlockSpec((rows, wc * F), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec((rows, wc * F), lambda i, j: (i, j)),
+                  pl.BlockSpec((rows, 1), lambda i, j: (i, 0))],
         out_specs=pl.BlockSpec((rows, wc), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, W), jnp.uint32),
         interpret=interpret,
-    )(fields.astype(jnp.uint32))
+    )(fields.astype(jnp.uint32), c)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
-def unpack_words(words: jax.Array, bits: int, *, interpret: bool = True):
-    """Inverse of :func:`pack_words`: (R, W) words -> (R, W*32/bits) fields."""
+@functools.partial(jax.jit, static_argnames=("bits", "period", "interpret"))
+def unpack_words(words: jax.Array, bits: int,
+                 counts: jax.Array | None = None, period: int = 0, *,
+                 interpret: bool = True):
+    """Inverse of :func:`pack_words`: (R, W) words -> (R, W*32/bits)
+    fields, masked beyond the per-row valid count when ``counts`` is
+    given."""
     if bits >= 32:
-        return words.astype(jnp.uint32)
+        out = words.astype(jnp.uint32)
+        if counts is not None:
+            from . import ref
+            out = jnp.where(ref._count_mask(*out.shape, counts, period),
+                            out, 0)
+        return out
     F = 32 // bits
     R, W = words.shape
     rows = min(ROWS, R)
     wc = min(WORD_CHUNK, W)
     grid = (pl.cdiv(R, rows), pl.cdiv(W, wc))
+    if counts is None:
+        return pl.pallas_call(
+            functools.partial(_unpack_kernel, bits=bits),
+            grid=grid,
+            in_specs=[pl.BlockSpec((rows, wc), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((rows, wc * F), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((R, W * F), jnp.uint32),
+            interpret=interpret,
+        )(words.astype(jnp.uint32))
+    c = jnp.asarray(counts, jnp.int32).reshape(-1, 1)
     return pl.pallas_call(
-        functools.partial(_unpack_kernel, bits=bits),
+        functools.partial(_unpack_kernel_ragged, bits=bits, period=period),
         grid=grid,
-        in_specs=[pl.BlockSpec((rows, wc), lambda i, j: (i, j))],
+        in_specs=[pl.BlockSpec((rows, wc), lambda i, j: (i, j)),
+                  pl.BlockSpec((rows, 1), lambda i, j: (i, 0))],
         out_specs=pl.BlockSpec((rows, wc * F), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((R, W * F), jnp.uint32),
         interpret=interpret,
-    )(words.astype(jnp.uint32))
+    )(words.astype(jnp.uint32), c)

@@ -21,10 +21,9 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import RunConfig, ShapeConfig
-from repro.launch.train_step import build_decode_step, build_prefill_step
+from repro.configs.base import ShapeConfig
 from repro.models import build_model
-from repro.sharding import dp_axes_of, param_shardings
+from repro.sharding import dp_axes_of
 
 
 def parse_mesh(spec: str):
@@ -51,7 +50,6 @@ def main() -> None:
     dp = dp_axes_of(mesh)
     B, CTX, GEN = args.batch, args.ctx, args.gen
     shape = ShapeConfig("serve", CTX + GEN, B, "decode")
-    run = RunConfig(model=cfg, shape=shape)
 
     with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))

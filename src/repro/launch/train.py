@@ -20,14 +20,14 @@ import time
 import jax
 
 from repro.compat import set_mesh
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
-from repro.configs import ARCH_CONFIGS, get_config, get_smoke_config
+from repro.configs import get_config, get_smoke_config
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig)
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
+from repro.core.gamma import GammaControllerConfig
 from repro.data.synthetic import TokenPipeline
 from repro.launch.train_step import (build_train_step, init_opt_state,
                                      opt_state_shardings)
@@ -60,6 +60,20 @@ def main() -> None:
     ap.add_argument("--compress-method", default="topk",
                     choices=["topk", "block_topk", "none"],
                     help="block_topk = fused Pallas kernel path")
+    # ---- adaptive per-round compression (DESIGN.md §9) ----
+    ap.add_argument("--max-gamma", type=float, default=0.0,
+                    help="> 0: static ragged-wire budget; gamma becomes "
+                         "the per-round initial level")
+    ap.add_argument("--gamma-schedule", default="fixed",
+                    choices=["fixed", "linear", "armijo-coupled"],
+                    help="per-round gamma controller (core/gamma.py)")
+    ap.add_argument("--gamma-min", type=float, default=0.0,
+                    help="controller floor (0 = gamma/8)")
+    ap.add_argument("--gamma-ramp-steps", type=int, default=1000,
+                    help="linear schedule: steps from gamma to max-gamma")
+    ap.add_argument("--theory-safe", action="store_true",
+                    help="clamp the step scale to zeta(gamma_t) = "
+                         "sigma*gamma/(2-gamma) each round")
     ap.add_argument("--no-kernel", action="store_true",
                     help="block_topk via pure jnp (kernel escape hatch)")
     ap.add_argument("--eta", type=float, default=0.1)
@@ -88,11 +102,16 @@ def main() -> None:
     run = RunConfig(
         model=cfg, shape=shape,
         optimizer=OptimizerConfig(
-            kind=args.opt, armijo=ArmijoConfig(),
+            kind=args.opt, armijo=ArmijoConfig(theory_safe=args.theory_safe),
             compressor=Compressor(gamma=args.gamma,
                                   method=args.compress_method,
                                   value_bits=args.value_bits,
-                                  use_kernel=not args.no_kernel),
+                                  use_kernel=not args.no_kernel,
+                                  max_gamma=args.max_gamma),
+            gamma_controller=GammaControllerConfig(
+                schedule=args.gamma_schedule,
+                gamma_min=args.gamma_min,
+                ramp_steps=args.gamma_ramp_steps),
             eta=args.eta, ef_dtype=args.ef_dtype,
             shard_local_topk=args.shard_local_topk,
             local_steps=args.local_steps),
@@ -137,7 +156,9 @@ def main() -> None:
                 log.append(m)
                 print(f"step {step:5d} loss={m['loss']:.4f} "
                       f"alpha={m['alpha']:.4g} evals={m['n_evals']:.2f} "
-                      f"wire={m['wire_bytes']:.3e}B", flush=True)
+                      f"wire={m['wire_bytes']:.3e}B "
+                      f"eff={m.get('effective_wire_bytes', 0.0):.3e}B "
+                      f"gamma={m.get('gamma', args.gamma):.4g}", flush=True)
             if args.ckpt_dir and step and step % args.ckpt_every == 0:
                 ckpt.save(args.ckpt_dir, step, (params, opt_state),
                           metadata={"step": step})

@@ -20,9 +20,7 @@ partitioner; see models/attention.py).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -33,9 +31,9 @@ from repro import compat
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
 from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
+from repro.core.gamma import gamma_init, gamma_update
 from repro.models.registry import Model
 from repro.sharding import cache_pspecs, dp_axes_of, param_pspecs
-from repro.utils import DP, TP, hint
 
 PyTree = Any
 
@@ -45,6 +43,7 @@ class DistOptState(NamedTuple):
     alpha_prev: jax.Array    # (W,) per-worker carried step size
     memory: PyTree           # per-worker EF: leaves (W, *param_shape)
     n_evals_ema: jax.Array   # (W,)
+    gamma: jax.Array         # (W,) per-worker per-round compression level
 
 
 def _n_workers(mesh) -> int:
@@ -71,6 +70,10 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
                     jnp.full((n_workers,), opt.armijo.alpha0, jnp.float32)),
         memory=jax.tree.map(mem_leaf, params) if needs_mem else (),
         n_evals_ema=mk((n_workers,), jnp.float32),
+        gamma=(mk((n_workers,), jnp.float32) if abstract else
+               jnp.full((n_workers,),
+                        gamma_init(opt.gamma_controller, opt.compressor),
+                        jnp.float32)),
     )
 
 
@@ -100,6 +103,7 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
         memory=(jax.tree.map(mem_sh, pspecs)
                 if opt_state.memory != () else ()),
         n_evals_ema=vec,
+        gamma=vec,
     )
 
 
@@ -112,19 +116,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
 
     train_step(params, opt_state, batch) -> (params, opt_state, metrics).
     """
-    cfg = model.cfg
     opt = run_cfg.optimizer
+    if opt.gamma_controller.schedule == "armijo-coupled" and \
+            opt.kind not in ("csgd_asss", "sls"):
+        raise ValueError(
+            f"gamma schedule 'armijo-coupled' needs an Armijo-searching "
+            f"optimizer (csgd_asss | sls), got kind={opt.kind!r} — use "
+            f"'fixed' or 'linear'")
     dp = dp_axes_of(mesh)
     dp_spec = dp if len(dp) > 1 else dp[0]
     W = _n_workers(mesh)
     micro = run_cfg.microbatches
-    stacked = None  # computed lazily from params inside
 
     def local_loss(params, batch):
         loss, _ = model.loss(params, batch)
         return loss
 
-    def _local_steps_worker(params, opt_state, batch, mem, alpha_prev, ema):
+    def _local_steps_worker(params, opt_state, batch, mem, alpha_prev, ema,
+                            gamma_prev):
         """H local Armijo-SGD steps, then ONE EF-compressed exchange of the
         accumulated model delta (paper §V future work; Qsparse-local [8])."""
         H = run_cfg.optimizer.local_steps
@@ -150,14 +159,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         (p_end, amax_f, evals), (losses, alphas) = jax.lax.scan(
             one, (params, amax0, jnp.float32(0.0)), mbs)
 
+        # per-round gamma from the H-step aggregate search telemetry
+        if opt.gamma_controller.schedule == "armijo-coupled":
+            gamma_t = gamma_update(
+                opt.gamma_controller, opt.compressor, gamma_prev,
+                opt_state.step, alpha=alphas[-1], alpha_prev=alpha_prev,
+                n_evals=evals / H, n_evals_ema=ema)
+        else:
+            gamma_t = gamma_update(opt.gamma_controller, opt.compressor,
+                                   gamma_prev, opt_state.step)
+
         # accumulated local update (already eta-scaled) -> EF + exchange
         delta = jax.tree.map(
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
             params, p_end)
         smask = model.stacked_mask(params)
-        updates, new_mem, wire = worker_compress_aggregate(
+        updates, new_mem, wire, eff_wire = worker_compress_aggregate(
             delta, mem, jnp.float32(1.0), opt.compressor, dp,
-            stacked_mask=smask)
+            stacked_mask=smask, gamma_t=gamma_t)
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
@@ -167,12 +186,15 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             "alpha": jax.lax.pmean(alphas[-1], dp),
             "n_evals": jax.lax.pmean(evals / H, dp),
             "wire_bytes": jax.lax.pmean(wire, dp),
+            "effective_wire_bytes": jax.lax.pmean(eff_wire, dp),
+            "gamma": jax.lax.pmean(gamma_t, dp),
         }
         new_state = DistOptState(
             step=opt_state.step + 1,
             alpha_prev=(amax_f / opt.armijo.omega)[None],
             memory=jax.tree.map(lambda x: x[None], new_mem),
             n_evals_ema=(0.9 * ema + 0.1 * evals / H)[None],
+            gamma=gamma_t[None],
         )
         return new_params, new_state, metrics
 
@@ -182,12 +204,13 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             if opt_state.memory != () else ()
         alpha_prev = opt_state.alpha_prev[0]
         ema = opt_state.n_evals_ema[0]
+        gamma_prev = opt_state.gamma[0]
 
         # ---- local iterations (Qsparse-local-style, beyond-paper) -------
         if run_cfg.optimizer.local_steps > 1 and \
                 opt.kind in ("csgd_asss", "nonadaptive"):
             return _local_steps_worker(params, opt_state, batch, mem,
-                                       alpha_prev, ema)
+                                       alpha_prev, ema, gamma_prev)
 
         # ---- gradient over microbatches (accumulated) -------------------
         if micro > 1:
@@ -197,9 +220,9 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             probe = jax.tree.map(lambda x: x[0], mbs)
 
             def acc(carry, mb):
-                l, g = jax.value_and_grad(local_loss)(params, mb)
+                lo, g = jax.value_and_grad(local_loss)(params, mb)
                 cl, cg = carry
-                return (cl + l, jax.tree.map(jnp.add, cg, g)), None
+                return (cl + lo, jax.tree.map(jnp.add, cg, g)), None
 
             zero_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)
@@ -221,18 +244,36 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             res = armijo_search(lambda p: local_loss(p, probe), params,
                                 grads, amax, opt.armijo,
                                 grad_sqnorm=gsq)
-            eta = opt.armijo.a_scale * res.alpha
             new_alpha = res.alpha
             new_ema = 0.9 * ema + 0.1 * res.n_evals.astype(jnp.float32)
             metrics["alpha"] = jax.lax.pmean(res.alpha, dp)
             metrics["n_evals"] = jax.lax.pmean(
                 res.n_evals.astype(jnp.float32), dp)
         else:
-            eta = jnp.float32(opt.eta)
+            res = None
             new_alpha = alpha_prev
             new_ema = ema
-            metrics["alpha"] = eta
+            metrics["alpha"] = jnp.float32(opt.eta)
             metrics["n_evals"] = jnp.float32(0.0)
+
+        # ---- per-round compression level (gamma controller round) -------
+        if res is not None and \
+                opt.gamma_controller.schedule == "armijo-coupled":
+            gamma_t = gamma_update(
+                opt.gamma_controller, opt.compressor, gamma_prev,
+                opt_state.step, alpha=res.alpha, alpha_prev=alpha_prev,
+                n_evals=res.n_evals, n_evals_ema=ema)
+        else:
+            gamma_t = gamma_update(opt.gamma_controller, opt.compressor,
+                                   gamma_prev, opt_state.step)
+        metrics["gamma"] = jax.lax.pmean(gamma_t, dp)
+
+        if res is not None:
+            # a = scale_for(gamma_t): paper's a_scale, re-clamped to
+            # zeta(gamma_t) each round under armijo.theory_safe
+            eta = opt.armijo.scale_for(gamma_t) * res.alpha
+        else:
+            eta = jnp.float32(opt.eta)
 
         # ---- aggregate (compressed or dense) ----------------------------
         if opt.kind in ("csgd_asss", "nonadaptive"):
@@ -243,13 +284,15 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 # the only collective stays the small dp packed all-gather.
                 pspecs = param_pspecs(params)
                 inner = compat.shard_map(
-                    lambda g, m2, e: worker_compress_aggregate(
-                        g, m2, e, opt.compressor, dp, stacked_mask=smask),
+                    lambda g, m2, e, gt: worker_compress_aggregate(
+                        g, m2, e, opt.compressor, dp, stacked_mask=smask,
+                        gamma_t=gt),
                     mesh=None,  # nested: resolve from the trace context
-                    in_specs=(pspecs, pspecs, P()),
-                    out_specs=(pspecs, pspecs, P()),
+                    in_specs=(pspecs, pspecs, P(), P()),
+                    out_specs=(pspecs, pspecs, P(), P()),
                     axis_names={"model"}, check_vma=False)
-                updates, new_mem, wire = inner(grads, mem, eta)
+                updates, new_mem, wire, eff_wire = inner(grads, mem, eta,
+                                                         gamma_t)
             else:
                 # covers shard_local_topk on 0.4.x too: there the training
                 # body is already manual over 'model' (compat.
@@ -258,13 +301,16 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 # manual-'model' shard_map around it SIGFPEs 0.4.x XLA
                 # (tests/distributed/test_shard_local_topk.py) and
                 # shard-local selection degenerates to the direct call.
-                updates, new_mem, wire = worker_compress_aggregate(
-                    grads, mem, eta, opt.compressor, dp, stacked_mask=smask)
+                updates, new_mem, wire, eff_wire = worker_compress_aggregate(
+                    grads, mem, eta, opt.compressor, dp, stacked_mask=smask,
+                    gamma_t=gamma_t)
             new_mem = jax.tree.map(lambda x: x[None], new_mem)
         else:
             updates, wire = dense_aggregate(grads, eta, dp)
+            eff_wire = wire
             new_mem = opt_state.memory
         metrics["wire_bytes"] = jax.lax.pmean(wire, dp)
+        metrics["effective_wire_bytes"] = jax.lax.pmean(eff_wire, dp)
 
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
@@ -274,6 +320,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             alpha_prev=new_alpha[None],
             memory=new_mem,
             n_evals_ema=new_ema[None],
+            gamma=gamma_t[None],
         )
         return new_params, new_state, metrics
 
@@ -289,10 +336,10 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             step=rep, alpha_prev=lead,
             memory=(jax.tree.map(lambda _: lead, params_like)
                     if opt.kind in ("csgd_asss", "nonadaptive") else ()),
-            n_evals_ema=lead)
+            n_evals_ema=lead, gamma=lead)
         metrics_spec = {k: rep for k in
                         ("loss", "grad_sqnorm", "alpha", "n_evals",
-                         "wire_bytes")}
+                         "wire_bytes", "effective_wire_bytes", "gamma")}
         # Manual over dp, auto over 'model' (XLA partitions the TP math).
         # On 0.4.x partial-auto shard_map cannot contain a lax.scan
         # (compat.PARTIAL_AUTO_SAFE), so there the body is manual over
@@ -318,7 +365,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         bsh = jax.tree.map(
             lambda _: NamedSharding(mesh, P(dp_spec)), batch_like)
         msh = {k: NamedSharding(mesh, P()) for k in
-               ("loss", "grad_sqnorm", "alpha", "n_evals", "wire_bytes")}
+               ("loss", "grad_sqnorm", "alpha", "n_evals", "wire_bytes",
+                "effective_wire_bytes", "gamma")}
         # donation of pinned_host-backed state trips an XLA SPMD RET_CHECK
         # (side-effecting copy-to-host without sharding); skip it there.
         donate = () if opt.ef_host_offload else (0, 1)

@@ -11,13 +11,13 @@ and the decoder self-attention sliding-window — full quadratic attention at
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.utils import DP, TP, hint
+from repro.utils import DP, hint
 from . import attention as attn
 from .layers import (embed, init_embed, init_lm_head, init_mlp,
                      init_rms_norm, lm_head, mlp, rms_norm, softmax_xent)

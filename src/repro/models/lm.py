@@ -14,8 +14,6 @@ the parameters.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -27,8 +25,8 @@ from . import attention as attn
 from . import moe as moe_mod
 from . import rwkv as rwkv_mod
 from . import ssm as ssm_mod
-from .layers import (dense, embed, init_dense, init_embed, init_lm_head,
-                     init_mlp, init_rms_norm, lm_head, mlp, rms_norm,
+from .layers import (embed, init_embed, init_lm_head, init_mlp,
+                     init_rms_norm, lm_head, mlp, rms_norm,
                      softmax_xent)
 
 PyTree = Any

@@ -1,7 +1,7 @@
 """Small shared utilities: sharding hints, tree helpers, dtype handling."""
 from __future__ import annotations
 
-from typing import Any, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,6 @@
 benches must see 1 device (the dry-run sets its own flags in-process, and
 distributed tests spawn subprocesses with their own env)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -44,12 +44,12 @@ def _run_workers(gtree, mtree, comp, eta=0.1, mesh_shape=(W_WORKERS,),
     def worker(g, m):
         g = jax.tree.map(lambda x: x[0], g)
         m = jax.tree.map(lambda x: x[0], m)
-        upd, newm, wire = worker_compress_aggregate(
+        upd, newm, wire, eff = worker_compress_aggregate(
             g, m, jnp.float32(eta), comp, tuple(axes))
-        return upd, jax.tree.map(lambda x: x[None], newm), wire
+        return upd, jax.tree.map(lambda x: x[None], newm), wire, eff
 
     f = shard_map(worker, mesh=mesh, in_specs=(lead, lead),
-                  out_specs=(rep, lead, P()), axis_names=set(axes),
+                  out_specs=(rep, lead, P(), P()), axis_names=set(axes),
                   check_vma=False)
     return jax.jit(f)(gtree, mtree)
 
@@ -102,7 +102,7 @@ def test_packed_exchange_matches_simulation(key, method, value_bits):
     mtree = jax.tree.map(
         lambda x: jax.random.normal(jax.random.fold_in(key, x.size),
                                     x.shape) * 0.1, gtree)
-    upd, newm, wire = _run_workers(gtree, mtree, comp)
+    upd, newm, wire, _ = _run_workers(gtree, mtree, comp)
     upd_ref, mem_ref = _simulate(gtree, mtree, comp, 0.1)
 
     squeezed = jax.tree.map(lambda x: x[0], gtree)
@@ -125,7 +125,7 @@ def test_ef_identity_through_packed_exchange(key):
     gtree = _worker_tree(key)
     mtree = jax.tree.map(lambda x: jnp.zeros_like(x), gtree)
     eta = 0.1
-    upd, newm, _ = _run_workers(gtree, mtree, comp, eta=eta)
+    upd, newm, _, _ = _run_workers(gtree, mtree, comp, eta=eta)
     for name in gtree:
         acc = eta * np.asarray(gtree[name], np.float32)   # m == 0
         own = acc - np.asarray(newm[name], np.float32)    # EF identity
@@ -140,7 +140,7 @@ def test_packed_exchange_two_axis_mesh(key):
                       min_compress_size=64, value_bits=8)
     gtree = _worker_tree(key)
     mtree = jax.tree.map(lambda x: jnp.zeros_like(x), gtree)
-    upd, newm, wire = _run_workers(gtree, mtree, comp, mesh_shape=(4, 2),
+    upd, newm, wire, _ = _run_workers(gtree, mtree, comp, mesh_shape=(4, 2),
                                    axes=("pod", "data"))
     upd_ref, mem_ref = _simulate(gtree, mtree, comp, 0.1)
     squeezed = jax.tree.map(lambda x: x[0], gtree)
@@ -169,7 +169,7 @@ def test_gathered_buffer_is_the_accounted_bytes(key):
                                          ("data",))
 
     f = shard_map(worker, mesh=mesh, in_specs=(P(), P()),
-                  out_specs=(P(), P(), P()), axis_names={"data"},
+                  out_specs=(P(), P(), P(), P()), axis_names={"data"},
                   check_vma=False)
     jaxpr = jax.make_jaxpr(f)(g, m)
     # the all_gather sits inside the shard_map sub-jaxpr, so check the

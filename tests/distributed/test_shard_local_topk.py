@@ -11,7 +11,6 @@ reference), through the packed wire exchange.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.compat import set_mesh
 from repro.configs import get_smoke_config

@@ -1,7 +1,6 @@
 """Armijo step-size search with scaling (Algorithm 1 + Theorem 15)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import ArmijoConfig, armijo_search, next_alpha_max
@@ -113,3 +112,42 @@ def test_max_backtracks_cap():
     res = armijo_search(bad_loss, w, g, jnp.float32(1.0), cfg)
     assert int(res.n_evals) <= cfg.max_backtracks + 1
     assert not bool(res.accepted)
+
+
+def test_theory_safe_clamps_scale_to_zeta():
+    """The a_scale doc/theory contradiction (paper §IV-A: a = 3*sigma, but
+    theory needs a <= zeta(gamma) = sigma*gamma/(2-gamma) < 2*sigma):
+    theory_safe=True clamps the effective scale per round; the default
+    preserves the paper's empirical setting exactly."""
+    cfg = ArmijoConfig(sigma=0.1, a_scale=0.3)
+    # default off: the paper's empirical 3*sigma, even though it violates
+    # the bound (0.3 > 2*sigma = 0.2 > zeta for every gamma <= 1)
+    assert cfg.scale_for(0.01) == 0.3
+    assert cfg.a_scale > cfg.theory_a_bound
+
+    safe = ArmijoConfig(sigma=0.1, a_scale=0.3, theory_safe=True)
+    for gamma in (0.01, 0.04, 0.5, 1.0):
+        zeta = safe.zeta(gamma)
+        assert zeta == pytest.approx(0.1 * gamma / (2.0 - gamma))
+        got = float(safe.scale_for(gamma))
+        assert got == pytest.approx(min(0.3, zeta))
+        assert got <= safe.theory_a_bound + 1e-9
+    # traced gamma_t (adaptive compression re-clamps each round)
+    got = float(safe.scale_for(jnp.float32(0.04)))
+    assert got == pytest.approx(safe.zeta(0.04), rel=1e-6)
+    # no gamma -> no clamp (nothing to couple to)
+    assert safe.scale_for(None) == 0.3
+
+    # and the clamp flows through the search's returned eta
+    def f(w):
+        return jnp.sum(w ** 2)
+
+    w = jnp.ones((8,))
+    g = jax.grad(f)(w)
+    res_paper = armijo_search(f, w, g, jnp.float32(0.5), cfg, gamma=0.04)
+    res_safe = armijo_search(f, w, g, jnp.float32(0.5), safe, gamma=0.04)
+    assert float(res_paper.alpha) == float(res_safe.alpha)
+    assert float(res_paper.eta) == pytest.approx(0.3 * float(res_paper.alpha))
+    assert float(res_safe.eta) == pytest.approx(
+        safe.zeta(0.04) * float(res_safe.alpha), rel=1e-6)
+    assert float(res_safe.eta) < float(res_paper.eta)

@@ -5,8 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import (Compressor, block_threshold, contraction_gamma,
-                        sparse_to_dense, threshold_select, topk_select,
-                        tree_wire_bytes)
+                        sparse_to_dense, topk_select, tree_wire_bytes)
 
 
 def test_topk_selects_largest_magnitudes(key):
@@ -99,7 +98,8 @@ def _run_worker(tree, comp, eta=0.1):
     spec = jax.tree.map(lambda _: P(), tree)
     f = shard_map(
         partial(worker_compress_aggregate, comp=comp, dp_axes=("data",)),
-        mesh=mesh, in_specs=(spec, spec, P()), out_specs=(spec, spec, P()),
+        mesh=mesh, in_specs=(spec, spec, P()),
+        out_specs=(spec, spec, P(), P()),
         axis_names={"data"})
     return jax.jit(f)(tree, mem, jnp.float32(eta))
 
@@ -118,7 +118,7 @@ def test_wire_bytes_matches_worker_accounting(key, method, value_bits):
             # and a per-layer size below the dense cutoff
             "s": jax.random.normal(jax.random.fold_in(key, 3), (4, 1300)),
             "t": jax.random.normal(jax.random.fold_in(key, 4), (4, 60))}
-    _, _, wire = _run_worker(tree, comp)
+    _, _, wire, eff = _run_worker(tree, comp)
     assert int(wire) == tree_wire_bytes(tree, comp)
 
 
@@ -127,11 +127,11 @@ def test_worker_aggregate_kernel_parity(key):
     escape hatch) on the same inputs: identical updates, EF memory, wire."""
     tree = {"w": jax.random.normal(key, (2, 2048)),   # stacked (L=2)
             "v": jax.random.normal(jax.random.fold_in(key, 1), (3000,))}
-    mk = lambda use_kernel: Compressor(gamma=0.05, method="block_topk",
-                                       block=512, min_compress_size=64,
-                                       use_kernel=use_kernel)
-    up_k, mem_k, wire_k = _run_worker(tree, mk(True))
-    up_j, mem_j, wire_j = _run_worker(tree, mk(False))
+    def mk(use_kernel):
+        return Compressor(gamma=0.05, method="block_topk", block=512,
+                          min_compress_size=64, use_kernel=use_kernel)
+    up_k, mem_k, wire_k, _ = _run_worker(tree, mk(True))
+    up_j, mem_j, wire_j, _ = _run_worker(tree, mk(False))
     for a, b in zip(jax.tree.leaves(up_k), jax.tree.leaves(up_j)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
     for a, b in zip(jax.tree.leaves(mem_k), jax.tree.leaves(mem_j)):

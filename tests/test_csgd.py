@@ -3,11 +3,10 @@ baseline comparisons — the paper's core claims at unit scale."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (ArmijoConfig, Compressor, CSGDConfig, NonAdaptiveCSGD,
                         SGD, SLS, csgd_asss)
-from repro.data.synthetic import interpolated_regression, regression_batch
+from repro.data.synthetic import interpolated_regression
 
 
 def make_problem(n=512, d=256, std=1.0, seed=0):
@@ -86,7 +85,10 @@ def test_ef_memory_identity_lemma6():
     rng = np.random.default_rng(0)
     for t in range(25):
         idx = jnp.asarray(rng.integers(0, 512, 16))
-        loss_fn = lambda ww: bl(ww, idx)
+
+        def loss_fn(ww, idx=idx):
+            return bl(ww, idx)
+
         g = jax.grad(loss_fn)(w)
         w_new, st, aux = opt.step(loss_fn, w, st)
         xhat = xhat - aux.eta * g

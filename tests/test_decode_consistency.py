@@ -3,7 +3,6 @@ forward logits at position S — for every architecture family, over multiple
 consecutive decode steps."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, get_smoke_config

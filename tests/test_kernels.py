@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 
 @pytest.mark.parametrize("n", [1024, 3000, 8192, 65536])

@@ -3,7 +3,6 @@ variant (2 layers, d_model<=512, <=4 experts) — one forward/train step on
 CPU asserting output shapes + no NaNs, plus prefill/decode paths."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config

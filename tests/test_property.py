@@ -199,3 +199,57 @@ def test_blockwise_gamma_at_least_half(seed):
     sent, resid = comp.compress_dense(x)
     kept = int(jnp.sum(sent != 0))
     assert kept >= int(0.5 * 0.1 * 4096)
+
+
+def check_ragged_roundtrip(seed: int, d: int, block: int, value_bits: int):
+    """Ragged codec (DESIGN.md §9): for random per-row valid counts in
+    [1, k_max-per-period], decode returns exactly the masked quantized
+    values, the count survives the header word, and the payload buffer
+    stays the static budget size."""
+    comp = Compressor(gamma=0.05, max_gamma=0.05, method="block_topk",
+                      block=block, min_compress_size=1,
+                      value_bits=value_bits)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, d)).astype(np.float32))
+    vals, idx = block_extract_sparse(x, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    assert spec.ragged
+    counts = jnp.asarray(rng.integers(1, spec.full_count + 1, 3), jnp.int32)
+    payload = wire_fmt.encode_rows(vals, idx, spec, counts=counts)
+    assert payload.nbytes == 3 * comp.wire_bytes(d)   # fixed budget buffer
+    v2, i2, c2 = wire_fmt.decode_rows(payload, spec, return_counts=True)
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(counts))
+    pos = np.arange(spec.k) % spec.count_period
+    valid = pos[None, :] < np.asarray(counts)[:, None]
+    expect = comp.quantize_values(jnp.where(jnp.asarray(valid), vals, 0.0))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(expect))
+    assert np.all(np.asarray(v2)[~valid] == 0.0)
+    # effective bytes are monotone in the count and bounded by the budget
+    eff = np.asarray(spec.effective_row_bytes(counts))
+    assert np.all(eff <= spec.row_bytes)
+    assert np.all(np.asarray(spec.effective_row_bytes(spec.full_count))
+                  == spec.row_bytes)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(64, 2048),
+       st.sampled_from([64, 256, 1024]), st.sampled_from([4, 8, 16, 32]))
+def test_ragged_roundtrip_property(seed, d, block, value_bits):
+    check_ragged_roundtrip(seed, d, block, value_bits)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3000),
+       st.sampled_from([4, 8, 16, 32]), st.integers(1, 64))
+def test_pack_roundtrip_with_counts_property(seed, n, bits, period):
+    """Counts-aware pack -> unpack == identity on the valid mask, zeros on
+    the invalid positions, for arbitrary period/count combinations."""
+    rng = np.random.default_rng(seed)
+    fields = jnp.asarray(rng.integers(0, 1 << bits, (2, n),
+                                      dtype=np.uint32))
+    counts = jnp.asarray(rng.integers(1, period + 1, 2), jnp.int32)
+    words = kops.pack_fields(fields, bits, counts=counts, period=period)
+    back = kops.unpack_fields(words, n, bits, counts=counts, period=period)
+    pos = np.arange(n) % period
+    valid = pos[None, :] < np.asarray(counts)[:, None]
+    np.testing.assert_array_equal(np.asarray(back)[valid],
+                                  np.asarray(fields)[valid])
+    assert np.all(np.asarray(back)[~valid] == 0)

@@ -1,6 +1,5 @@
 """Partition-rule unit tests: param pspecs, 2D widening, cache pspecs."""
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_smoke_config

@@ -1,9 +1,7 @@
 """End-to-end behaviour tests: the paper's headline claims at CPU scale,
 exercised through the public API (build_model + csgd_asss + data pipeline)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.configs.paper_models import MLP_CONFIG, init_net, net_loss

@@ -1,0 +1,158 @@
+"""BENCH_kernels.json trajectory diffing (ROADMAP item; ISSUE 4 satellite).
+
+Compares a fresh ``--smoke`` kernel-bench run against the committed
+baseline per (op, backend, shape) and fails the build when an op's
+median_ms regressed by more than ``--factor`` (default 1.5x) — the perf
+trajectory is no longer write-only.
+
+Two rule sets:
+
+* **cross-run** — every (op, backend, shape) present in BOTH files:
+  ``fresh <= factor * baseline`` on the burst-resistant ``min_ms``
+  statistic.  Ops that appear only on one side are reported but never
+  fail (new ops join the baseline when it is refreshed; this also keeps
+  the diff robust to shape-set changes).  ``--cross-run warn`` demotes
+  violations to warnings: measured on shared 2-vCPU runners, per-op
+  window minima of even ~10 ms interpret-mode ops swing 2-4x between
+  process invocations, so a hard cross-run gate against a
+  committed-elsewhere baseline flakes — CI runs the failing variant as a
+  separate non-blocking step and hard-gates only the within-run rule
+  below.
+* **within-run fusion claims** — the ``ef2pass_tel_ratio_*`` records
+  (telemetry-fused EF pass-1 vs the plain fused op, DESIGN.md §10) carry
+  a PAIRED wall-time ratio measured by ``kernel_bench.paired_ratio`` in
+  the fresh run itself (dimensionless, stored in the ``median_ms``
+  field); it must sit under ``--tel-factor`` (default 1.10x).  Pairing
+  adjacent calls cancels machine drift, so this certifies the
+  "telemetry costs no extra HBM sweep" claim without cross-machine (or
+  even cross-second) noise.
+
+Usage (the CI invocation)::
+
+    python -m benchmarks.kernel_bench --smoke --out BENCH_fresh.json
+    python -m benchmarks.bench_diff BENCH_kernels.json BENCH_fresh.json
+
+Cross-run absolute timings only compare cleanly on comparable machines;
+CI runners are assumed homogeneous enough for the 1.5x guard.  Tune with
+``--factor`` / the BENCH_DIFF_FACTOR env var when they are not.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TEL_RATIO_PREFIX = "ef2pass_tel_ratio_"
+
+
+def _key(rec: dict) -> tuple:
+    shape = rec["shape"]
+    shape = tuple(shape) if isinstance(shape, list) else (shape,)
+    return (rec["op"], rec["backend"], shape)
+
+
+def _load(path: str) -> dict[tuple, float]:
+    """(op, backend, shape) -> milliseconds.  Prefers ``min_ms`` (see
+    kernel_bench.timeit: the window minimum survives load bursts that
+    inflate a whole median window) and falls back to ``median_ms`` for
+    pre-ISSUE-4 baselines."""
+    with open(path) as fh:
+        data = json.load(fh)
+    return {_key(r): float(r.get("min_ms", r["median_ms"]))
+            for r in data["records"]}
+
+
+def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
+         factor: float, tel_factor: float, min_ms: float = 0.25,
+         cross_run_fail: bool = True) -> list[str]:
+    """Returns the list of failure messages (empty = pass).
+
+    ``min_ms``: noise floor for the cross-run rule — keys where both
+    sides sit under it are reported but cannot fail (sub-millisecond
+    CPU timings flap well past 1.5x run-to-run; a real regression in a
+    hot op crosses the floor).  ``cross_run_fail=False``: cross-run
+    violations are printed but not returned as failures.
+    """
+    failures = []
+
+    def is_ratio(k):
+        return k[0].startswith(TEL_RATIO_PREFIX)
+
+    shared = sorted(k for k in set(baseline) & set(fresh) if not is_ratio(k))
+    for k in shared:
+        base, cur = baseline[k], fresh[k]
+        ratio = cur / max(base, 1e-9)
+        tiny = max(base, cur) < min_ms
+        flag = ("noise-floor" if tiny and ratio > factor else
+                "REGRESSION" if ratio > factor else "ok")
+        print(f"  {k[0]:28s} {k[1]:16s} {str(k[2]):18s} "
+              f"{base:10.4f} -> {cur:10.4f} ms  ({ratio:5.2f}x) {flag}")
+        if ratio > factor and not tiny and cross_run_fail:
+            failures.append(
+                f"{k}: {base:.4f} -> {cur:.4f} ms ({ratio:.2f}x > "
+                f"{factor}x)")
+    for k in sorted(set(fresh) - set(baseline)):
+        print(f"  {k[0]:28s} {k[1]:16s} {str(k[2]):18s} "
+              f"{'new':>10s} -> {fresh[k]:10.4f} ms")
+    for k in sorted(set(baseline) - set(fresh)):
+        print(f"  {k[0]:28s} {k[1]:16s} {str(k[2]):18s} "
+              f"{baseline[k]:10.4f} -> {'gone':>10s}")
+
+    # within-run: the paired telemetry/plain ratio records of the fresh run
+    n_ratio = 0
+    for (op, backend, shape), ratio in sorted(fresh.items()):
+        if not op.startswith(TEL_RATIO_PREFIX):
+            continue
+        n_ratio += 1
+        flag = "FUSION BROKEN" if ratio > tel_factor else "ok"
+        print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
+              f"(limit {tel_factor}x) {flag}")
+        if ratio > tel_factor:
+            failures.append(
+                f"{op}{shape}: telemetry pass costs {ratio:.3f}x the plain "
+                f"fused op (> {tel_factor}x) — the fused-reduction claim "
+                f"(DESIGN.md §10) no longer holds")
+    if n_ratio == 0:
+        failures.append(
+            f"no {TEL_RATIO_PREFIX}* records in the fresh run — the "
+            f"fused-telemetry claim went unmeasured")
+    if not shared:
+        print("  (no shared (op, backend, shape) keys — cross-run diff "
+              "was vacuous; refresh the committed baseline)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_kernels.json")
+    ap.add_argument("fresh", help="freshly produced bench JSON")
+    ap.add_argument("--factor", type=float,
+                    default=float(os.environ.get("BENCH_DIFF_FACTOR", 1.5)),
+                    help="cross-run median_ms regression threshold")
+    ap.add_argument("--tel-factor", type=float, default=1.10,
+                    help="within-run telemetry-vs-plain EF threshold")
+    ap.add_argument("--min-ms", type=float, default=0.25,
+                    help="cross-run noise floor (see diff())")
+    ap.add_argument("--cross-run", choices=["fail", "warn"], default="fail",
+                    help="whether >factor cross-run regressions fail the "
+                         "run (default) or only warn — see module "
+                         "docstring for when warn is the right call")
+    args = ap.parse_args()
+    print(f"bench diff: {args.baseline} -> {args.fresh} "
+          f"(factor {args.factor}x, tel {args.tel_factor}x, "
+          f"floor {args.min_ms} ms, cross-run={args.cross_run})")
+    failures = diff(_load(args.baseline), _load(args.fresh),
+                    args.factor, args.tel_factor, min_ms=args.min_ms,
+                    cross_run_fail=args.cross_run == "fail")
+    if failures:
+        print("\nFAIL:")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("bench diff: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,7 +43,12 @@ _RECORDS: list[dict] = []
 
 
 def timeit(f, *args, n=20):
-    """Median per-call microseconds over n timed calls (1 warm-up)."""
+    """(median, min) per-call microseconds over n timed calls (1 warm-up).
+
+    Both statistics of the SAME window travel together into ``record`` —
+    bench_diff compares min_ms across runs because load bursts on shared
+    runners inflate a whole median window but rarely every single call.
+    """
     r = f(*args)
     (r[0] if isinstance(r, tuple) else r).block_until_ready()
     times = []
@@ -53,23 +58,61 @@ def timeit(f, *args, n=20):
         (r[0] if isinstance(r, tuple) else r).block_until_ready()
         times.append(time.time() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return times[len(times) // 2] * 1e6, times[0] * 1e6
 
 
-def record(op: str, backend: str, shape, us: float, note: str = ""):
-    """One BENCH_kernels.json record + the repo's CSV contract line."""
+def record(op: str, backend: str, shape, us, note: str = "",
+           min_us: float | None = None):
+    """One BENCH_kernels.json record + the repo's CSV contract line.
+    ``us`` is a (median, min) pair from :func:`timeit`, or a bare median
+    with an explicit ``min_us`` (see timeit for why bench_diff keys off
+    the window minimum)."""
+    if isinstance(us, tuple):
+        us, min_us = us
+    if min_us is None:
+        raise ValueError(f"record({op!r}): need a (median, min) timeit "
+                         f"pair or an explicit min_us")
     _RECORDS.append({"op": op, "backend": backend,
                      "shape": list(shape) if not isinstance(shape, str)
                      else shape,
-                     "median_ms": round(us / 1e3, 6)})
+                     "median_ms": round(us / 1e3, 6),
+                     "min_ms": round(min_us / 1e3, 6)})
     emit(f"kernel_{op}_{backend}", us, note or op)
+
+
+def paired_ratio(f_num, f_den, args, n_pairs=12, repeats=3):
+    """Robust wall-time ratio f_num/f_den: per-pair ratios of ADJACENT
+    single calls (machine drift hits both sides of a pair equally), median
+    per repeat, min over repeats (noise only inflates).  This is how the
+    telemetry-fused EF op's "same streaming pass" claim is certified — two
+    independently-timed medians are far too noisy on shared CI runners."""
+    for f in (f_den, f_num):
+        r = f(*args)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    meds = []
+    for _ in range(repeats):
+        ratios = []
+        for _ in range(n_pairs):
+            t0 = time.perf_counter()
+            r = f_den(*args)
+            (r[0] if isinstance(r, tuple) else r).block_until_ready()
+            td = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            r = f_num(*args)
+            (r[0] if isinstance(r, tuple) else r).block_until_ready()
+            ratios.append((time.perf_counter() - t0) / max(td, 1e-9))
+        ratios.sort()
+        meds.append(ratios[len(ratios) // 2])
+    return min(meds)
 
 
 def main(smoke: bool = False, out_path: str | None = None) -> dict:
     key = jax.random.PRNGKey(0)
     out = {}
-    n_heavy = 3 if smoke else 10
-    n_light = 5 if smoke else 20
+    # smoke shapes are tiny, so more reps cost little and the medians are
+    # stable enough for the bench-diff CI gate (benchmarks/bench_diff.py)
+    n_heavy = 7 if smoke else 10
+    n_light = 15 if smoke else 20
 
     ef_n = (1 << 14) if smoke else (1 << 20)
     m = jax.random.normal(key, (ef_n,))
@@ -78,7 +121,7 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
     us = timeit(f_ef, m, g, n=n_light)
     record("ef_update", "default", (ef_n,), us,
            "fused EF accumulate+sparsify")
-    out["ef"] = us
+    out["ef"] = us[0]
 
     B, H, S, D = (1, 2, 128, 64) if smoke else (1, 8, 1024, 128)
     q = jax.random.normal(key, (B, H, S, D)) * 0.1
@@ -88,7 +131,7 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
     us = timeit(f_at, q, k, v, n=n_heavy)
     record("attention", "ref", (B, H, S, D), us,
            f"causal MHA {H}hx{S}x{D}")
-    out["attn"] = us
+    out["attn"] = us[0]
 
     R_rn = 256 if smoke else 4096
     x = jax.random.normal(key, (R_rn, 2048))
@@ -96,7 +139,7 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
     f_rn = jax.jit(lambda x, w: ops.rms_norm(x, w))
     us = timeit(f_rn, x, w, n=n_light)
     record("rmsnorm", "ref", (R_rn, 2048), us, "fused rmsnorm")
-    out["rmsnorm"] = us
+    out["rmsnorm"] = us[0]
 
     # ---- wire pack/unpack: ref vs pallas on a production payload shape ----
     # qwen1.5-4b MLP leaf at gamma=1%, value_bits=8: 2560 layer rows of
@@ -121,7 +164,7 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
                    f"bit-pack {R}x{kk} {bits}b fields")
             record(f"wire_unpack{bits}", impl, (R, nwords), us_u,
                    f"bit-unpack {R}x{kk} {bits}b fields")
-            row[impl] = us_p + us_u
+            row[impl] = us_p[0] + us_u[0]
         row["ratio_ref_over_fused"] = row["ref"] / max(row["pallas"], 1e-9)
         out[f"wire_pack{bits}"] = row
 
@@ -148,9 +191,29 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
             us = timeit(f, m, g, n=n_heavy)
             record(f"ef2pass_{name}", impl, shape, us,
                    f"fused two-pass EF, {m.size} elems")
-            row[impl] = us
+            row[impl] = us[0]
         row["ratio_ref_over_fused"] = row["ref"] / max(row["pallas"], 1e-9)
         out[f"ef2pass_{name}"] = row
+
+        # telemetry-enabled pass 1 (DESIGN.md §10): the moments ride the
+        # same streamed tile, so this op must track ef2pass_* within the
+        # "fused telemetry" budget.  The certificate is the PAIRED ratio
+        # record (ef2pass_tel_ratio_*, dimensionless, stored in the
+        # median_ms field) — bench_diff gates it at <= 1.10x; the tel
+        # median itself is recorded for the cross-run trajectory.
+        f_t = jax.jit(lambda m, g: ops.fused_ef_compress(
+            m, g, 0.1, gamma=0.01, telemetry=True, impl="pallas"))
+        f_p = jax.jit(lambda m, g: ops.fused_ef_compress(
+            m, g, 0.1, gamma=0.01, impl="pallas"))
+        us_t = timeit(f_t, m, g, n=n_heavy)
+        record(f"ef2pass_tel_{name}", "pallas", shape, us_t,
+               f"fused two-pass EF + telemetry moments, {m.size} elems")
+        ratio = paired_ratio(f_t, f_p, (m, g))
+        record(f"ef2pass_tel_ratio_{name}", "pallas", shape, ratio * 1e3,
+               "paired tel/plain wall-time ratio (x1000, dimensionless)",
+               min_us=ratio * 1e3)
+        out[f"ef2pass_tel_{name}"] = {
+            "pallas": us_t[0], "ratio_tel_over_plain": ratio}
 
     path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

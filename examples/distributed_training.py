@@ -2,10 +2,28 @@
 
 Each data-parallel worker line-searches on ITS OWN batch, compresses its
 gradient with error feedback, and only the sparse (values, indices) pairs
-cross the wire — watch the wire-bytes column vs the dense baseline.
+cross the wire — watch the wire-bytes column vs the dense baseline.  Each
+step also logs the worker-mean compression telemetry (DESIGN.md §10): the
+EF backlog ratio ``||m'||/||g||`` and the decode/gradient cosine — the
+signal the ``ef-coupled`` gamma controller closes the loop on.
 
     PYTHONPATH=src python examples/distributed_training.py
 (the script re-execs itself with XLA_FLAGS for 8 host devices)
+
+The same machinery from the training CLI (repro/launch/train.py)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \\
+        --mesh 4x2 --gamma 0.005 --max-gamma 0.05 \\
+        --gamma-schedule ef-coupled --ef-target 0.15 --ef-band 0.08
+
+``--gamma-schedule ef-coupled`` adapts the per-round compression level
+from the EF backlog (grow when backlog leaves the hysteresis band above
+``--ef-target + --ef-band`` — over-compressed; shrink below ``--ef-target
+- --ef-band`` while the decode cosine is healthy); ``--max-gamma`` sizes
+the static ragged wire budget the controller moves inside.  Unlike
+``armijo-coupled`` it senses over-compression directly, so a too-small
+``--gamma`` start recovers instead of stalling at ``--gamma-min``
+(tests/test_golden_convergence.py pins that pairing).
 """
 import os
 import sys
@@ -59,7 +77,9 @@ def run(kind: str, steps=15, gamma=0.02):
             if i % 5 == 0 or i == steps - 1:
                 print(f"  [{kind:9s}] step {i:3d} loss={float(m['loss']):.4f}"
                       f" alpha={float(m['alpha']):.4f}"
-                      f" wire_bytes/worker={float(m['wire_bytes']):.3e}")
+                      f" wire_bytes/worker={float(m['wire_bytes']):.3e}"
+                      f" backlog={float(m['ef_backlog']):.3f}"
+                      f" cos={float(m['ef_cosine']):.3f}")
     return float(m["wire_bytes"])
 
 

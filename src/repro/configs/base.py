@@ -165,8 +165,11 @@ class OptimizerConfig:
     armijo: ArmijoConfig = ArmijoConfig()
     compressor: Compressor = Compressor()
     # per-round compression-level controller (AdaCGD-style adaptive gamma;
-    # repro/core/gamma.py + DESIGN.md §9) — takes effect when
-    # ``compressor.max_gamma`` > 0 sizes the ragged wire budget
+    # repro/core/gamma.py + DESIGN.md §9/§10) — takes effect when
+    # ``compressor.max_gamma`` > 0 sizes the ragged wire budget.  The
+    # ``ef-coupled`` schedule closes the armijo-coupled observability gap
+    # by coupling to the per-worker CompressionTelemetry (EF backlog /
+    # decode cosine) that the train step threads through DistOptState.
     gamma_controller: GammaControllerConfig = GammaControllerConfig()
     eta: float = 0.1              # for non-adaptive baselines
     ef_dtype: str = "float32"

@@ -12,6 +12,8 @@ from .compression import (Compressor, Sparse, topk_select, sparse_to_dense,
                           tree_effective_wire_bytes, contraction_gamma,
                           MIN_COMPRESS_SIZE)
 from .armijo import ArmijoConfig, ArmijoResult, armijo_search, next_alpha_max, tree_sqnorm
+from .telemetry import (CompressionTelemetry, SearchTelemetry, TelemetrySums,
+                        sparse_own_sums)
 from .gamma import GammaControllerConfig, gamma_init, gamma_update
 from .csgd import CSGD, CSGDConfig, CSGDState, StepAux, csgd_asss
 from .baselines import NonAdaptiveCSGD, SGD, SLS
@@ -26,6 +28,8 @@ __all__ = [
     "tree_effective_wire_bytes",
     "ArmijoConfig", "ArmijoResult", "armijo_search", "next_alpha_max",
     "tree_sqnorm",
+    "CompressionTelemetry", "SearchTelemetry", "TelemetrySums",
+    "sparse_own_sums",
     "GammaControllerConfig", "gamma_init", "gamma_update",
     "CSGD", "CSGDConfig", "CSGDState", "StepAux", "csgd_asss",
     "NonAdaptiveCSGD", "SGD", "SLS",

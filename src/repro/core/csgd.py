@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from .armijo import ArmijoConfig, armijo_search, next_alpha_max, tree_sqnorm
 from .compression import Compressor, tree_effective_wire_bytes, tree_wire_bytes
 from .gamma import GammaControllerConfig, gamma_init, gamma_update
+from .telemetry import CompressionTelemetry, SearchTelemetry, TelemetrySums
 from . import error_feedback as ef
 
 PyTree = Any
@@ -58,6 +59,8 @@ class CSGDState(NamedTuple):
     memory: PyTree           # error-feedback m_t, shaped like params
     n_evals_ema: jax.Array   # running mean of Armijo fwd evals (telemetry)
     gamma: jax.Array         # per-round compression level gamma_t
+    telemetry: CompressionTelemetry  # last round's compression health
+    cum_eff_bytes: jax.Array         # cumulative effective wire bytes
     velocity: PyTree = ()    # heavy-ball state (momentum > 0 only)
 
 
@@ -71,6 +74,8 @@ class StepAux(NamedTuple):
     gamma: jax.Array             # the gamma_t this round compressed at
     wire_bytes: jax.Array        # static payload budget (notional, 1 node)
     eff_wire_bytes: jax.Array    # ragged-content bytes at gamma_t
+    telemetry: CompressionTelemetry  # this round's compression health
+    cum_eff_bytes: jax.Array         # run total incl. this step
 
 
 def _ef_to_dense(memory, dtype=jnp.float32):
@@ -109,6 +114,8 @@ class CSGD:
             memory=memory,
             n_evals_ema=jnp.float32(0.0),
             gamma=gamma_init(self.cfg.gamma_ctrl, self.cfg.compressor),
+            telemetry=CompressionTelemetry.init(),
+            cum_eff_bytes=jnp.float32(0.0),
             velocity=vel,
         )
 
@@ -136,14 +143,12 @@ class CSGD:
             accepted = jnp.bool_(True)
 
         # --- per-round compression level (controller round, step t) -------
-        if cfg.gamma_ctrl.schedule == "armijo-coupled":
-            gamma_t = gamma_update(
-                cfg.gamma_ctrl, comp, state.gamma, state.step,
-                alpha=alpha, alpha_prev=state.alpha_prev, n_evals=n_evals,
-                n_evals_ema=state.n_evals_ema)
-        else:
-            gamma_t = gamma_update(cfg.gamma_ctrl, comp, state.gamma,
-                                   state.step)
+        gamma_t = gamma_update(
+            cfg.gamma_ctrl, comp, state.gamma, state.step,
+            search=SearchTelemetry(alpha=alpha, alpha_prev=state.alpha_prev,
+                                   n_evals=n_evals,
+                                   n_evals_ema=state.n_evals_ema),
+            compression=state.telemetry)
 
         if cfg.armijo is None:
             eta = alpha
@@ -166,18 +171,30 @@ class CSGD:
 
         # --- compressed descent with error feedback (steps 6-8) -----------
         mem = _ef_to_dense(state.memory)
+        sums = TelemetrySums.zero()
 
-        def leaf_update(m, g):
-            acc = m + eta * g.astype(m.dtype)
+        def leaf_update(m, g, sums):
+            gf = g.astype(m.dtype)
+            acc = m + eta * gf
             sent, resid = comp.compress_dense(
                 acc, gamma_t=gamma_t if comp.adaptive else None)
-            return sent, resid
+            # single-node semantics: decode(own) IS the dense `sent`
+            sums = sums.add(g_sq=jnp.sum(gf * gf),
+                            acc_sq=jnp.sum(acc * acc),
+                            resid_sq=jnp.sum(resid * resid),
+                            own_sq=jnp.sum(sent * sent),
+                            own_dot_g=jnp.sum(sent * gf))
+            return sent, resid, sums
 
         flat_m, treedef = jax.tree.flatten(mem)
         flat_g = treedef.flatten_up_to(descent)
-        pairs = [leaf_update(m, g) for m, g in zip(flat_m, flat_g)]
+        pairs = []
+        for m, g in zip(flat_m, flat_g):
+            s, r, sums = leaf_update(m, g, sums)
+            pairs.append((s, r))
         sent = treedef.unflatten([p[0] for p in pairs])
         resid = treedef.unflatten([p[1] for p in pairs])
+        telemetry = sums.finalize()
 
         new_params = jax.tree.map(
             lambda p, s: (p.astype(jnp.float32) - s).astype(p.dtype),
@@ -185,6 +202,7 @@ class CSGD:
         wire = jnp.float32(tree_wire_bytes(params, comp))
         eff = tree_effective_wire_bytes(params, comp, gamma_t) \
             if comp.adaptive else wire
+        cum_eff = state.cum_eff_bytes + eff
         new_state = CSGDState(
             step=state.step + 1,
             alpha_prev=alpha,
@@ -192,12 +210,15 @@ class CSGD:
             n_evals_ema=0.9 * state.n_evals_ema +
             0.1 * n_evals.astype(jnp.float32),
             gamma=gamma_t,
+            telemetry=telemetry,
+            cum_eff_bytes=cum_eff,
             velocity=vel,
         )
         aux = StepAux(loss=loss, alpha=alpha, eta=eta,
                       n_evals=n_evals, grad_sqnorm=gsq,
                       accepted=accepted, gamma=gamma_t,
-                      wire_bytes=wire, eff_wire_bytes=eff)
+                      wire_bytes=wire, eff_wire_bytes=eff,
+                      telemetry=telemetry, cum_eff_bytes=cum_eff)
         return new_params, new_state, aux
 
 

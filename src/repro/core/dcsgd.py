@@ -37,6 +37,7 @@ from repro.comm import wire as wire_fmt
 from repro.comm.exchange import check_payload, gather_packed
 from repro.kernels import ops
 from .compression import Compressor, block_extract_sparse
+from .telemetry import CompressionTelemetry, TelemetrySums, sparse_own_sums
 
 PyTree = Any
 AxisNames = Sequence[str] | str
@@ -103,13 +104,26 @@ def worker_compress_aggregate(
     dp_axes: AxisNames,
     stacked_mask: PyTree | None = None,
     gamma_t: jax.Array | None = None,
-) -> tuple[PyTree, PyTree, jax.Array, jax.Array]:
+    telemetry_axes: AxisNames | None = None,
+) -> tuple[PyTree, PyTree, jax.Array, jax.Array, CompressionTelemetry]:
     """Steps 3-7 of Algorithm 3 for a whole gradient pytree.
 
-    Returns ``(mean_update, new_memory, wire_bytes, effective_wire_bytes)``
-    where ``mean_update`` is the dense averaged compressed update (to
-    subtract from params) and ``wire_bytes`` counts this worker's
-    transmitted payload-buffer bytes this step (the static budget).
+    Returns ``(mean_update, new_memory, wire_bytes, effective_wire_bytes,
+    telemetry)`` where ``mean_update`` is the dense averaged compressed
+    update (to subtract from params), ``wire_bytes`` counts this worker's
+    transmitted payload-buffer bytes this step (the static budget), and
+    ``telemetry`` is this worker's :class:`CompressionTelemetry` for the
+    round (EF backlog, decode cosine, relative decode error, empirical
+    contraction — DESIGN.md §10).  Its dense reductions are fused into the
+    Pallas EF block-stats pass on the kernel path; the decoded-side sums
+    touch only the k wire entries.
+
+    ``telemetry_axes``: extra manual mesh axes this call's inputs are
+    sharded over WITHOUT being separate dp workers (the nested
+    shard-local-topk 'model' region): the telemetry sums are psum'd over
+    them before the ratios form, so the returned telemetry describes the
+    worker's whole gradient, not one shard's slice.  The updates/memory/
+    byte outputs are unaffected (selection stays shard-local by design).
 
     ``gamma_t`` (adaptive compressors, DESIGN.md §9): this worker's traced
     per-round compression level.  Selection still runs at the static
@@ -135,6 +149,7 @@ def worker_compress_aggregate(
     updates, new_mem = [], []
     wire = jnp.float32(0.0)
     eff_wire = jnp.float32(0.0)
+    sums = TelemetrySums.zero()
     for g, m, stacked in zip(flat_g, flat_m, flat_s):
         g2 = _leaf_2d(g, stacked)
         L, d = g2.shape
@@ -146,27 +161,33 @@ def worker_compress_aggregate(
             new_mem.append(jnp.zeros_like(m))
             wire = wire + jnp.float32(acc.size * acc.dtype.itemsize)
             eff_wire = eff_wire + jnp.float32(acc.size * acc.dtype.itemsize)
+            sums = sums.add_dense(acc, g)
             continue
+        g2f = g2.astype(jnp.float32)
         if use_fused:
             # fused two-pass Pallas path (DESIGN.md §3): pass 1 streams
-            # (m, g) once for the per-block k_b-th |m + eta*g| statistic;
-            # pass 2 streams them again and writes (sent, m') — the
-            # accumulator never round-trips through HBM.
+            # (m, g) once for the per-block k_b-th |m + eta*g| statistic
+            # AND the dense telemetry moments (sum g^2, sum acc^2) on the
+            # same resident tile; pass 2 streams them again and writes
+            # (sent, m') — the accumulator never round-trips through HBM.
             m2 = _leaf_2d(m, stacked).astype(jnp.float32)
             # threshold at the BUDGET level (geometry_gamma == max_gamma
             # for adaptive compressors): block_extract_sparse below pulls
             # exactly block_k() budget entries per block, and any
             # per-round k_t mask is applied at encode time
-            sent, resid, _ = ops.fused_ef_compress(
-                m2, g2.astype(jnp.float32), eta, comp.geometry_gamma,
-                comp.block)
+            sent, resid, _, moments = ops.fused_ef_compress(
+                m2, g2f, eta, comp.geometry_gamma, comp.block,
+                telemetry=True)
+            leaf_g_sq = jnp.sum(moments[:, 0])
+            leaf_acc_sq = jnp.sum(moments[:, 1])
             # per-block top-k_b of |sent| recovers the kept wire entries
             # (>= k_b survive the threshold; ties beyond k_b are dropped
             # from the wire and recycled into m' below)
             vals, idx = block_extract_sparse(sent, comp)
         else:
-            acc2 = _leaf_2d(m, stacked).astype(jnp.float32) \
-                + eta * g2.astype(jnp.float32)
+            acc2 = _leaf_2d(m, stacked).astype(jnp.float32) + eta * g2f
+            leaf_g_sq = jnp.sum(g2f * g2f)
+            leaf_acc_sq = jnp.sum(acc2 * acc2)
             vals, idx, (L, d) = compress_leaf(acc2, comp, stacked)
 
         # ---- bit-packed wire (DESIGN.md §8): encode once, gather ONE
@@ -201,10 +222,11 @@ def worker_compress_aggregate(
         # worker's rows are already in the gathered decode, so slice them
         # out instead of decoding the own payload a second time.
         w_idx = _dp_index(dp_axes)
-        own_dense = _scatter_layers(
-            jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0, keepdims=False),
-            jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0, keepdims=False),
-            L, d, jnp.float32)
+        own_vals = jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0,
+                                                keepdims=False)
+        own_idx = jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0,
+                                               keepdims=False)
+        own_dense = _scatter_layers(own_vals, own_idx, L, d, jnp.float32)
         # masked-beyond-k_t entries are absent from own_dense, so — like
         # quantization error and tie drops — they land in the residual
         if use_fused:
@@ -212,9 +234,18 @@ def worker_compress_aggregate(
         else:
             resid = acc2 - own_dense
         new_mem.append(resid.reshape(m.shape).astype(m.dtype))
+        # telemetry: the decoded-side sums touch only the k wire entries;
+        # sum m'^2 fuses into the residual's own materialization above
+        leaf_own_sq, leaf_dot = sparse_own_sums(own_vals, own_idx, g2f)
+        sums = sums.add(g_sq=leaf_g_sq, acc_sq=leaf_acc_sq,
+                        resid_sq=jnp.sum(resid * resid),
+                        own_sq=leaf_own_sq, own_dot_g=leaf_dot)
 
+    if telemetry_axes is not None:
+        # sums are additive; ratios are not — reduce BEFORE finalizing
+        sums = jax.tree.map(lambda x: jax.lax.psum(x, telemetry_axes), sums)
     return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
-            eff_wire)
+            eff_wire, sums.finalize())
 
 
 def dense_aggregate(grads: PyTree, eta: jax.Array,

@@ -3,12 +3,10 @@
 The paper fixes the compression ratio ``gamma`` for the whole run and only
 adapts the *step size* to the trajectory; AdaCGD (Makarenko et al.,
 "Adaptive Compression for Communication-Efficient Distributed Training")
-shows the compression level itself should adapt per round.  The Armijo
-state already carries exactly the signals such a controller needs — the
-accepted ``alpha`` vs its predecessor, the running mean of
-stopping-condition evaluations, acceptance of the first trial — so the
-controller is a pure function of (previous gamma, this round's search
-telemetry) and lowers into the train step like everything else.
+shows the compression level itself should adapt per round.  Controllers
+here are pure functions of (previous gamma, typed telemetry structs from
+the round that just finished — ``core/telemetry.py``) and lower into the
+train step like everything else.
 
 Schedules (``GammaControllerConfig.schedule``):
 
@@ -17,16 +15,28 @@ Schedules (``GammaControllerConfig.schedule``):
                        coarse-to-fine, cheap wire early when gradients are
                        large and any descent direction helps, full budget
                        near convergence.
-* ``armijo-coupled`` — multiplicative feedback on the line search: grow
-                       gamma (send more) when the search struggles
+* ``armijo-coupled`` — multiplicative feedback on the line search
+                       (:class:`~repro.core.telemetry.SearchTelemetry`):
+                       grow gamma (send more) when the search struggles
                        (``n_evals_ema`` above ``evals_hi`` or the accepted
                        alpha collapsed vs the previous round), shrink when
-                       it accepts immediately (first trial accepted and the
-                       eval EMA below ``evals_lo``).  A struggling search
-                       means the compressed direction has drifted from the
-                       true gradient — spend wire; an instantly-accepting
-                       one means compression is not the binding constraint
-                       — save wire.
+                       it accepts immediately.  CAVEAT (DESIGN.md §9/§10):
+                       the search runs on the *uncompressed* gradient, so
+                       this controller cannot sense over-compression —
+                       ``gamma_min`` is its only safety rail.
+* ``ef-coupled``     — multiplicative feedback on the compressor's own
+                       distortion (:class:`~repro.core.telemetry.
+                       CompressionTelemetry`), the signal Armijo cannot
+                       see.  The EF backlog ratio ``||m'||/||g||`` is held
+                       inside a hysteresis band around ``ef_target``:
+                       above ``ef_target + ef_band`` the error feedback is
+                       accumulating mass faster than it drains —
+                       over-compressed, grow gamma; below ``ef_target -
+                       ef_band`` with a healthy decode cosine
+                       (>= ``cos_floor``) the wire budget is slack —
+                       shrink gamma; inside the band, hold.  A
+                       non-finite backlog (diverging EF memory) always
+                       grows.
 
 Theory coupling is free: ``ArmijoConfig.zeta(gamma_t)`` is the per-round
 scaling bound ``a <= sigma*gamma/(2-gamma)``, and with
@@ -46,7 +56,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-SCHEDULES = ("fixed", "linear", "armijo-coupled")
+from .telemetry import CompressionTelemetry, SearchTelemetry
+
+SCHEDULES = ("fixed", "linear", "armijo-coupled", "ef-coupled")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,21 +70,34 @@ class GammaControllerConfig:
     (``geometry_gamma``), gamma_min to ``gamma0 / 8``.
     """
 
-    schedule: str = "fixed"       # fixed | linear | armijo-coupled
+    schedule: str = "fixed"       # fixed | linear | armijo- | ef-coupled
     gamma0: float = 0.0           # initial gamma_t (0 -> compressor.gamma)
     gamma_min: float = 0.0        # floor (0 -> gamma0 / 8)
     gamma_max: float = 0.0        # ceiling (0 -> compressor budget)
     ramp_steps: int = 1000        # linear: steps from gamma0 to gamma_max
-    grow: float = 1.5             # armijo-coupled: multiplicative grow
-    shrink: float = 0.9           # armijo-coupled: multiplicative shrink
-    evals_hi: float = 3.0         # grow when n_evals_ema rises above this
-    evals_lo: float = 2.0         # shrink allowed only below this EMA
-    alpha_collapse: float = 0.5   # grow when alpha < collapse * alpha_prev
+    grow: float = 1.5             # coupled: multiplicative grow
+    shrink: float = 0.9           # coupled: multiplicative shrink
+    evals_hi: float = 3.0         # armijo: grow when n_evals_ema above
+    evals_lo: float = 2.0         # armijo: shrink allowed only below
+    alpha_collapse: float = 0.5   # armijo: grow when alpha < c*alpha_prev
+    # --- ef-coupled (DESIGN.md §10): hysteresis band on the EF backlog.
+    # Defaults calibrated on the golden interpolated quadratic (healthy
+    # steady-state backlog ~0.07, over-compressed ~0.25-0.35): grow above
+    # target+band = 0.23, shrink below target-band = 0.07.
+    ef_target: float = 0.15       # backlog ||m'||/||g|| the band centers on
+    ef_band: float = 0.08         # half-width: grow above target+band,
+                                  # shrink below target-band
+    cos_floor: float = 0.0        # shrink only while cos(decode, g) >= this
 
     def __post_init__(self):
         if self.schedule not in SCHEDULES:
             raise ValueError(f"unknown gamma schedule {self.schedule!r} "
                              f"(want one of {SCHEDULES})")
+        if self.schedule == "ef-coupled" and self.ef_band >= self.ef_target:
+            raise ValueError(
+                f"ef-coupled hysteresis band must sit above zero backlog: "
+                f"ef_band={self.ef_band} >= ef_target={self.ef_target} "
+                f"would make the shrink threshold non-positive")
 
     def resolve(self, comp) -> tuple[float, float, float]:
         """(gamma0, gamma_min, gamma_max) with compressor defaults filled
@@ -97,14 +122,15 @@ def gamma_update(
     gamma: jax.Array,
     step: jax.Array,
     *,
-    alpha: jax.Array | None = None,
-    alpha_prev: jax.Array | None = None,
-    n_evals: jax.Array | None = None,
-    n_evals_ema: jax.Array | None = None,
+    search: SearchTelemetry | None = None,
+    compression: CompressionTelemetry | None = None,
 ) -> jax.Array:
-    """One controller round: gamma_{t} from gamma_{t-1} and the search
+    """One controller round: gamma_{t} from gamma_{t-1} and the typed
     telemetry of the round that just finished.  Pure and traced — the
     schedule string is static, everything else lowers to jnp.
+
+    ``search`` feeds ``armijo-coupled``; ``compression`` feeds
+    ``ef-coupled``; ``fixed``/``linear`` need neither.
     """
     g0, gmin, gmax = cfg.resolve(comp)
     if cfg.schedule == "fixed":
@@ -114,15 +140,29 @@ def gamma_update(
                         0.0, 1.0)
         return jnp.clip(g0 + (gmax - g0) * frac, gmin, gmax)
 
+    if cfg.schedule == "ef-coupled":
+        if compression is None:
+            raise ValueError("ef-coupled schedule needs the round's "
+                             "CompressionTelemetry")
+        backlog = jnp.asarray(compression.ef_backlog, jnp.float32)
+        cosine = jnp.asarray(compression.cosine, jnp.float32)
+        over = jnp.logical_or(backlog > cfg.ef_target + cfg.ef_band,
+                              ~jnp.isfinite(backlog))
+        slack = jnp.logical_and(backlog < cfg.ef_target - cfg.ef_band,
+                                cosine >= cfg.cos_floor)
+        factor = jnp.where(over, cfg.grow,
+                           jnp.where(slack, cfg.shrink, 1.0))
+        return jnp.clip(jnp.asarray(gamma, jnp.float32) * factor,
+                        gmin, gmax)
+
     # armijo-coupled
-    if alpha is None or alpha_prev is None or n_evals is None \
-            or n_evals_ema is None:
-        raise ValueError("armijo-coupled schedule needs alpha, alpha_prev, "
-                         "n_evals and n_evals_ema")
-    alpha = jnp.asarray(alpha, jnp.float32)
-    alpha_prev = jnp.asarray(alpha_prev, jnp.float32)
-    ema = jnp.asarray(n_evals_ema, jnp.float32)
-    nev = jnp.asarray(n_evals, jnp.float32)
+    if search is None:
+        raise ValueError("armijo-coupled schedule needs the round's "
+                         "SearchTelemetry")
+    alpha = jnp.asarray(search.alpha, jnp.float32)
+    alpha_prev = jnp.asarray(search.alpha_prev, jnp.float32)
+    ema = jnp.asarray(search.n_evals_ema, jnp.float32)
+    nev = jnp.asarray(search.n_evals, jnp.float32)
     struggling = jnp.logical_or(ema > cfg.evals_hi,
                                 alpha < cfg.alpha_collapse * alpha_prev)
     instant = jnp.logical_and(nev <= 1.0, ema < cfg.evals_lo)

@@ -1,0 +1,158 @@
+"""Compression telemetry: the EF-aware signal the gamma controller couples to.
+
+DESIGN.md §9 documented the blind spot of the ``armijo-coupled`` controller:
+the Armijo search runs on the *uncompressed* gradient, so its telemetry is
+nearly flat in gamma and cannot sense over-compression — ``gamma_min`` was
+the only safety rail.  The right signal is the compressor's own distortion
+(AdaCGD adapts the compression level from the observed compression error;
+AdaGossip adapts step parameters from compressed-difference magnitudes).
+
+:class:`CompressionTelemetry` is that signal, one typed pytree per worker
+per round, computed inside ``dcsgd.worker_compress_aggregate`` from FOUR
+scalar reductions that ride existing passes (DESIGN.md §10):
+
+* ``ef_backlog``    — ``||m'|| / ||g||``: how much compressed-away mass the
+  error feedback is carrying relative to the fresh gradient.  Over-
+  compression makes the backlog grow without bound; a healthy gamma keeps
+  it at a problem-dependent steady state.
+* ``cosine``        — cos(decode(own payload), g): alignment of what this
+  worker actually put on the wire with its gradient.
+* ``decode_error``  — ``||acc - decode(own payload)|| / ||acc||``: relative
+  per-round distortion of the full EF accumulator ``acc = m + eta*g``.
+* ``eff_gamma``     — ``1 - decode_error**2``: the empirical Lemma-7
+  contraction coefficient of the whole encode->wire->decode pipeline (the
+  *effective* compression ratio actually delivered at this round's k_t).
+
+The five underlying sums (:class:`TelemetrySums`) are accumulated across
+leaves and turned into ratios once, so telemetry composes over a gradient
+pytree exactly like the byte accounting does.  The heavy reductions
+(``sum g^2``, ``sum acc^2``) are fused into the Pallas EF block-stats pass
+(``kernels/ef_topk.ef_stats_telemetry``) — the accumulator is formed on the
+fly and never costs an extra HBM sweep; the decoded-side sums touch only
+the k wire entries, and ``sum m'^2`` fuses into the residual's own write.
+
+Controllers are pure functions of these structs (plus
+:class:`SearchTelemetry` for the Armijo-side signals), not of ad-hoc
+keyword arguments — see ``core/gamma.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+#: Guard for the ratio denominators.  Small enough to vanish against any
+#: real gradient energy in f32 (adding it does not change the rounded
+#: value), so the telemetry invariants — backlog == 0 and cosine == 1
+#: bit-exactly for an identity compressor, bit-exact invariance under
+#: power-of-two gradient scaling — hold exactly (tests/test_property.py).
+_TINY = 1e-30
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CompressionTelemetry:
+    """Per-worker, per-round compression health (all f32, batchable)."""
+
+    ef_backlog: jax.Array    # ||m'|| / ||g||            (>= 0)
+    cosine: jax.Array        # cos(decode(own), g)       (in [-1, 1])
+    decode_error: jax.Array  # ||acc - decode(own)|| / ||acc||
+    eff_gamma: jax.Array     # 1 - decode_error^2 (empirical contraction)
+
+    @classmethod
+    def init(cls, batch_shape: tuple[int, ...] = (), abstract: bool = False):
+        """Neutral ("perfectly healthy") telemetry for state init: zero
+        backlog, perfect alignment, zero distortion, full contraction."""
+        def leaf(v):
+            if abstract:
+                return jax.ShapeDtypeStruct(batch_shape, jnp.float32)
+            return jnp.full(batch_shape, v, jnp.float32)
+        return cls(ef_backlog=leaf(0.0), cosine=leaf(1.0),
+                   decode_error=leaf(0.0), eff_gamma=leaf(1.0))
+
+    def pmean(self, axis_names) -> "CompressionTelemetry":
+        """Mean over the mesh axes — the permutation-invariant aggregate
+        view of a dp worker group (tests/distributed)."""
+        return jax.tree.map(lambda x: jax.lax.pmean(x, axis_names), self)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TelemetrySums:
+    """Additive accumulator behind :class:`CompressionTelemetry`.
+
+    One instance per worker; leaves contribute via :meth:`add` and the
+    ratios are formed once at :meth:`finalize`.  ``own`` means this
+    worker's decoded wire contribution (== ``acc`` for dense-shipped
+    leaves, == decode(own payload) for compressed ones).
+    """
+
+    g_sq: jax.Array       # sum ||g||^2        over leaves
+    acc_sq: jax.Array     # sum ||m + eta*g||^2
+    resid_sq: jax.Array   # sum ||m'||^2       (the new EF memory)
+    own_sq: jax.Array     # sum ||decode(own)||^2
+    own_dot_g: jax.Array  # sum <decode(own), g>
+
+    @classmethod
+    def zero(cls) -> "TelemetrySums":
+        z = jnp.float32(0.0)
+        return cls(g_sq=z, acc_sq=z, resid_sq=z, own_sq=z, own_dot_g=z)
+
+    def add(self, *, g_sq, acc_sq, resid_sq, own_sq,
+            own_dot_g) -> "TelemetrySums":
+        return TelemetrySums(
+            g_sq=self.g_sq + g_sq,
+            acc_sq=self.acc_sq + acc_sq,
+            resid_sq=self.resid_sq + resid_sq,
+            own_sq=self.own_sq + own_sq,
+            own_dot_g=self.own_dot_g + own_dot_g)
+
+    def add_dense(self, acc: jax.Array, g: jax.Array) -> "TelemetrySums":
+        """Contribution of an uncompressed (dense-shipped) leaf: decode ==
+        acc exactly and the residual is identically zero — contributed as a
+        literal 0 so the zero-backlog invariant is bit-exact."""
+        gf = g.astype(jnp.float32)
+        accf = acc.astype(jnp.float32)
+        g_sq = jnp.sum(gf * gf)
+        acc_sq = jnp.sum(accf * accf)
+        return self.add(g_sq=g_sq, acc_sq=acc_sq, resid_sq=jnp.float32(0.0),
+                        own_sq=acc_sq, own_dot_g=jnp.sum(accf * gf))
+
+    def finalize(self) -> CompressionTelemetry:
+        resid_sq = self.resid_sq
+        backlog = jnp.sqrt(resid_sq / (self.g_sq + _TINY))
+        decode_err = jnp.sqrt(resid_sq / (self.acc_sq + _TINY))
+        cosine = self.own_dot_g / jnp.sqrt(self.own_sq * self.g_sq + _TINY)
+        return CompressionTelemetry(
+            ef_backlog=backlog,
+            cosine=cosine,
+            decode_error=decode_err,
+            eff_gamma=1.0 - resid_sq / (self.acc_sq + _TINY),
+        )
+
+
+def sparse_own_sums(own_vals: jax.Array, own_idx: jax.Array,
+                    g2: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(sum ||decode(own)||^2, sum <decode(own), g>) from the k decoded
+    wire entries alone — no dense sweep.  ``own_vals``/``own_idx``:
+    (L, k) decoded values and flat indices; ``g2``: the (L, d) f32 layer
+    view of the gradient.  Padding entries carry value 0 at a clamped
+    in-bounds index, so they contribute nothing to either sum.
+    """
+    d = g2.shape[-1]
+    vals = own_vals.astype(jnp.float32)
+    g_at = jnp.take_along_axis(g2, jnp.minimum(own_idx, d - 1), axis=-1)
+    return jnp.sum(vals * vals), jnp.sum(vals * g_at)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SearchTelemetry:
+    """Armijo line-search signals of the round that just finished — the
+    typed replacement for the controller's old ad-hoc keyword arguments."""
+
+    alpha: jax.Array         # accepted step of round t
+    alpha_prev: jax.Array    # accepted step of round t-1
+    n_evals: jax.Array       # stopping-condition evaluations of round t
+    n_evals_ema: jax.Array   # running mean of n_evals

@@ -13,8 +13,10 @@ override (:func:`set_default` / :func:`using`) > the op's registered default
 policy, resolved against the active backend:
 
 * policy ``"pallas"``  — always take the kernel path (interpret off-TPU);
-  used for the EF-compression ops, which are the paper's hot loop and whose
-  interpret-mode cost is one vectorized tile evaluation per grid step;
+  used for the EF-compression ops — including the telemetry-fused pass-1
+  ``ef_stats_telemetry`` (DESIGN.md §10) — which are the paper's hot loop
+  and whose interpret-mode cost is one vectorized tile evaluation per
+  grid step;
 * policy ``"backend"`` — kernel on TPU, ``ref`` elsewhere; used for the
   model-side ops (attention, rmsnorm, wkv) where the jnp oracle is what the
   CPU dry-run is expected to lower.

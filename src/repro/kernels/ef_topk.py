@@ -147,6 +147,24 @@ def _ef_block_stats_kernel(m_ref, g_ref, eta_ref, out_ref, *, k_b: int):
     out_ref[...] = _kth_largest(jnp.abs(acc), k_b)
 
 
+def _ef_stats_telemetry_kernel(m_ref, g_ref, eta_ref, tau_ref, mom_ref, *,
+                               k_b: int):
+    """Fused pass 1 + telemetry moments (DESIGN.md §10): the same streaming
+    pass that ranks |acc| also reduces the two dense telemetry moments —
+    ``sum g^2`` and ``sum acc^2`` per block row — while the operands sit in
+    VMEM, so the compression-telemetry signal costs no extra HBM sweep.
+
+    mom_ref: (rows, 2) per block row: [sum g^2, sum acc^2].
+    """
+    eta = eta_ref[0]
+    gf = g_ref[...].astype(jnp.float32)
+    acc = m_ref[...].astype(jnp.float32) + eta * gf
+    tau_ref[...] = _kth_largest(jnp.abs(acc), k_b)
+    mom_ref[...] = jnp.concatenate(
+        [jnp.sum(gf * gf, axis=-1, keepdims=True),
+         jnp.sum(acc * acc, axis=-1, keepdims=True)], axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("k_b", "interpret"))
 def ef_block_stats(m: jax.Array, g: jax.Array, eta: jax.Array, k_b: int,
                    *, interpret: bool = True):
@@ -161,6 +179,31 @@ def ef_block_stats(m: jax.Array, g: jax.Array, eta: jax.Array, k_b: int,
         in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
         out_specs=pl.BlockSpec((rows, 1), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        interpret=interpret,
+    )(m, g, eta.reshape(1))
+
+
+@functools.partial(jax.jit, static_argnames=("k_b", "interpret"))
+def ef_stats_telemetry(m: jax.Array, g: jax.Array, eta: jax.Array, k_b: int,
+                       *, interpret: bool = True):
+    """Fused pass 1 with telemetry moments.  m, g: (nb, C).
+
+    Returns (tau: (nb, 1) f32, moments: (nb, 2) f32 = [sum g^2, sum acc^2]
+    per block row).
+    """
+    nb, C = m.shape
+    rows = min(ROWS, nb)
+    grid = (pl.cdiv(nb, rows),)
+    spec = pl.BlockSpec((rows, C), lambda i: (i, 0))
+    out_shape = (jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+                 jax.ShapeDtypeStruct((nb, 2), jnp.float32))
+    return pl.pallas_call(
+        functools.partial(_ef_stats_telemetry_kernel, k_b=k_b),
+        grid=grid,
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=(pl.BlockSpec((rows, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((rows, 2), lambda i: (i, 0))),
+        out_shape=out_shape,
         interpret=interpret,
     )(m, g, eta.reshape(1))
 

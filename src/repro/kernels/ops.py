@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from . import dispatch, ref
 from .ef_topk import (block_stats, ef_apply, ef_block_stats as
-                      _ef_block_stats_kernel, threshold_split as
+                      _ef_block_stats_kernel, ef_stats_telemetry as
+                      _ef_stats_telemetry_kernel, threshold_split as
                       _threshold_split_kernel)
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
@@ -51,6 +52,15 @@ dispatch.register_op(
     pallas_interpret=functools.partial(_ef_block_stats_kernel,
                                        interpret=True),
     pallas_tpu=functools.partial(_ef_block_stats_kernel, interpret=False),
+    default="pallas")
+
+dispatch.register_op(
+    "ef_stats_telemetry",
+    ref=ref.ef_block_stats_telemetry,
+    pallas_interpret=functools.partial(_ef_stats_telemetry_kernel,
+                                       interpret=True),
+    pallas_tpu=functools.partial(_ef_stats_telemetry_kernel,
+                                 interpret=False),
     default="pallas")
 
 dispatch.register_op(
@@ -164,7 +174,7 @@ def ef_block_stats(m, g, eta, k_b: int, block: int = 1024, *,
 
 
 def fused_ef_compress(m, g, eta, gamma: float, block: int = 1024, *,
-                      impl: str | None = None):
+                      telemetry: bool = False, impl: str | None = None):
     """The full two-pass fused EF compression (DESIGN.md §3).
 
     Per 1024-wide block b of ``acc = m + eta*g`` (blocks never span the
@@ -172,13 +182,25 @@ def fused_ef_compress(m, g, eta, gamma: float, block: int = 1024, *,
     k_b = round(gamma*block); sent keeps entries with |acc| >= tau_b and
     m' carries the rest.  Returns (sent, m', tau) where sent/m' have m's
     shape and ``sent + m' == m + eta*g`` holds exactly; tau is (L*nb, 1).
+
+    ``telemetry`` (DESIGN.md §10): pass 1 additionally reduces the dense
+    telemetry moments [sum g^2, sum acc^2] per block row on the same
+    streamed operands — no extra HBM sweep — and a fourth element
+    ``moments`` ((L*nb, 2) f32) is returned.
     """
     k_b = max(1, int(round(gamma * block)))
     m2, meta = _to_blocks(m, block)
     g2, _ = _to_blocks(g, block)
     eta = jnp.asarray(eta, jnp.float32)
-    tau = dispatch.call("ef_stats", m2, g2, eta, k_b, impl=impl)
+    if telemetry:
+        tau, moments = dispatch.call("ef_stats_telemetry", m2, g2, eta, k_b,
+                                     impl=impl)
+    else:
+        tau = dispatch.call("ef_stats", m2, g2, eta, k_b, impl=impl)
     sent, mnew = dispatch.call("ef_update", m2, g2, eta, tau, impl=impl)
+    if telemetry:
+        return _from_blocks(sent, meta), _from_blocks(mnew, meta), tau, \
+            moments
     return _from_blocks(sent, meta), _from_blocks(mnew, meta), tau
 
 

@@ -56,6 +56,21 @@ def ef_block_stats(m: jax.Array, g: jax.Array, eta: jax.Array,
     return vals[:, -1:]
 
 
+def ef_block_stats_telemetry(m: jax.Array, g: jax.Array, eta: jax.Array,
+                             k_b: int) -> tuple[jax.Array, jax.Array]:
+    """Fused pass 1 + telemetry moments (DESIGN.md §10): per-block-row
+    k_b-th largest |m + eta*g| AND the dense telemetry moments of the same
+    streamed operands.  (R, C) -> (tau (R, 1), moments (R, 2) f32 with
+    columns [sum g^2, sum acc^2])."""
+    gf = g.astype(jnp.float32)
+    acc = m.astype(jnp.float32) + eta.astype(jnp.float32) * gf
+    vals, _ = jax.lax.top_k(jnp.abs(acc), k_b)
+    moments = jnp.concatenate(
+        [jnp.sum(gf * gf, axis=-1, keepdims=True),
+         jnp.sum(acc * acc, axis=-1, keepdims=True)], axis=-1)
+    return vals[:, -1:], moments
+
+
 def threshold_split(x: jax.Array, tau: jax.Array) -> tuple[jax.Array,
                                                            jax.Array]:
     """Per-block-row dense split: (sent, residual). x: (R, C); tau: (R, 1)."""

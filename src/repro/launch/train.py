@@ -65,12 +65,25 @@ def main() -> None:
                     help="> 0: static ragged-wire budget; gamma becomes "
                          "the per-round initial level")
     ap.add_argument("--gamma-schedule", default="fixed",
-                    choices=["fixed", "linear", "armijo-coupled"],
-                    help="per-round gamma controller (core/gamma.py)")
+                    choices=["fixed", "linear", "armijo-coupled",
+                             "ef-coupled"],
+                    help="per-round gamma controller (core/gamma.py); "
+                         "ef-coupled couples to the EF backlog telemetry "
+                         "(DESIGN.md §10)")
     ap.add_argument("--gamma-min", type=float, default=0.0,
                     help="controller floor (0 = gamma/8)")
     ap.add_argument("--gamma-ramp-steps", type=int, default=1000,
                     help="linear schedule: steps from gamma to max-gamma")
+    # defaults come from the dataclass so the CLI can never drift from
+    # the calibrated controller defaults (core/gamma.py)
+    ap.add_argument("--ef-target", type=float,
+                    default=GammaControllerConfig.ef_target,
+                    help="ef-coupled: backlog ratio ||m'||/||g|| the "
+                         "hysteresis band centers on")
+    ap.add_argument("--ef-band", type=float,
+                    default=GammaControllerConfig.ef_band,
+                    help="ef-coupled: band half-width (grow above "
+                         "target+band, shrink below target-band)")
     ap.add_argument("--theory-safe", action="store_true",
                     help="clamp the step scale to zeta(gamma_t) = "
                          "sigma*gamma/(2-gamma) each round")
@@ -111,7 +124,9 @@ def main() -> None:
             gamma_controller=GammaControllerConfig(
                 schedule=args.gamma_schedule,
                 gamma_min=args.gamma_min,
-                ramp_steps=args.gamma_ramp_steps),
+                ramp_steps=args.gamma_ramp_steps,
+                ef_target=args.ef_target,
+                ef_band=args.ef_band),
             eta=args.eta, ef_dtype=args.ef_dtype,
             shard_local_topk=args.shard_local_topk,
             local_steps=args.local_steps),
@@ -158,7 +173,10 @@ def main() -> None:
                       f"alpha={m['alpha']:.4g} evals={m['n_evals']:.2f} "
                       f"wire={m['wire_bytes']:.3e}B "
                       f"eff={m.get('effective_wire_bytes', 0.0):.3e}B "
-                      f"gamma={m.get('gamma', args.gamma):.4g}", flush=True)
+                      f"cum={m.get('cum_effective_wire_bytes', 0.0):.3e}B "
+                      f"gamma={m.get('gamma', args.gamma):.4g} "
+                      f"backlog={m.get('ef_backlog', 0.0):.3g} "
+                      f"cos={m.get('ef_cosine', 1.0):.3f}", flush=True)
             if args.ckpt_dir and step and step % args.ckpt_every == 0:
                 ckpt.save(args.ckpt_dir, step, (params, opt_state),
                           metadata={"step": step})

@@ -32,6 +32,7 @@ from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
 from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
 from repro.core.gamma import gamma_init, gamma_update
+from repro.core.telemetry import CompressionTelemetry, SearchTelemetry
 from repro.models.registry import Model
 from repro.sharding import cache_pspecs, dp_axes_of, param_pspecs
 
@@ -44,6 +45,8 @@ class DistOptState(NamedTuple):
     memory: PyTree           # per-worker EF: leaves (W, *param_shape)
     n_evals_ema: jax.Array   # (W,)
     gamma: jax.Array         # (W,) per-worker per-round compression level
+    telemetry: CompressionTelemetry  # (W,) per-worker compression health
+    cum_eff_bytes: jax.Array         # () cumulative worker-mean eff bytes
 
 
 def _n_workers(mesh) -> int:
@@ -74,6 +77,8 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
                jnp.full((n_workers,),
                         gamma_init(opt.gamma_controller, opt.compressor),
                         jnp.float32)),
+        telemetry=CompressionTelemetry.init((n_workers,), abstract=abstract),
+        cum_eff_bytes=mk((), jnp.float32),
     )
 
 
@@ -104,6 +109,8 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
                 if opt_state.memory != () else ()),
         n_evals_ema=vec,
         gamma=vec,
+        telemetry=jax.tree.map(lambda _: vec, opt_state.telemetry),
+        cum_eff_bytes=rep,
     )
 
 
@@ -123,6 +130,12 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             f"gamma schedule 'armijo-coupled' needs an Armijo-searching "
             f"optimizer (csgd_asss | sls), got kind={opt.kind!r} — use "
             f"'fixed' or 'linear'")
+    if opt.gamma_controller.schedule == "ef-coupled" and \
+            opt.kind not in ("csgd_asss", "nonadaptive"):
+        raise ValueError(
+            f"gamma schedule 'ef-coupled' needs a compressing optimizer "
+            f"(csgd_asss | nonadaptive) — only those produce the "
+            f"CompressionTelemetry it couples to, got kind={opt.kind!r}")
     dp = dp_axes_of(mesh)
     dp_spec = dp if len(dp) > 1 else dp[0]
     W = _n_workers(mesh)
@@ -133,7 +146,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         return loss
 
     def _local_steps_worker(params, opt_state, batch, mem, alpha_prev, ema,
-                            gamma_prev):
+                            gamma_prev, tel_prev):
         """H local Armijo-SGD steps, then ONE EF-compressed exchange of the
         accumulated model delta (paper §V future work; Qsparse-local [8])."""
         H = run_cfg.optimizer.local_steps
@@ -159,27 +172,27 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         (p_end, amax_f, evals), (losses, alphas) = jax.lax.scan(
             one, (params, amax0, jnp.float32(0.0)), mbs)
 
-        # per-round gamma from the H-step aggregate search telemetry
-        if opt.gamma_controller.schedule == "armijo-coupled":
-            gamma_t = gamma_update(
-                opt.gamma_controller, opt.compressor, gamma_prev,
-                opt_state.step, alpha=alphas[-1], alpha_prev=alpha_prev,
-                n_evals=evals / H, n_evals_ema=ema)
-        else:
-            gamma_t = gamma_update(opt.gamma_controller, opt.compressor,
-                                   gamma_prev, opt_state.step)
+        # per-round gamma from the H-step aggregate search telemetry (or
+        # last round's compression telemetry for the ef-coupled schedule)
+        gamma_t = gamma_update(
+            opt.gamma_controller, opt.compressor, gamma_prev,
+            opt_state.step,
+            search=SearchTelemetry(alpha=alphas[-1], alpha_prev=alpha_prev,
+                                   n_evals=evals / H, n_evals_ema=ema),
+            compression=tel_prev)
 
         # accumulated local update (already eta-scaled) -> EF + exchange
         delta = jax.tree.map(
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
             params, p_end)
         smask = model.stacked_mask(params)
-        updates, new_mem, wire, eff_wire = worker_compress_aggregate(
+        updates, new_mem, wire, eff_wire, tel = worker_compress_aggregate(
             delta, mem, jnp.float32(1.0), opt.compressor, dp,
             stacked_mask=smask, gamma_t=gamma_t)
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
+        cum_eff = opt_state.cum_eff_bytes + jax.lax.pmean(eff_wire, dp)
         metrics = {
             "loss": jax.lax.pmean(jnp.mean(losses), dp),
             "grad_sqnorm": jnp.float32(0.0),
@@ -187,7 +200,10 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             "n_evals": jax.lax.pmean(evals / H, dp),
             "wire_bytes": jax.lax.pmean(wire, dp),
             "effective_wire_bytes": jax.lax.pmean(eff_wire, dp),
+            "cum_effective_wire_bytes": cum_eff,
             "gamma": jax.lax.pmean(gamma_t, dp),
+            "ef_backlog": jax.lax.pmean(tel.ef_backlog, dp),
+            "ef_cosine": jax.lax.pmean(tel.cosine, dp),
         }
         new_state = DistOptState(
             step=opt_state.step + 1,
@@ -195,6 +211,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             memory=jax.tree.map(lambda x: x[None], new_mem),
             n_evals_ema=(0.9 * ema + 0.1 * evals / H)[None],
             gamma=gamma_t[None],
+            telemetry=jax.tree.map(lambda x: x[None], tel),
+            cum_eff_bytes=cum_eff,
         )
         return new_params, new_state, metrics
 
@@ -205,12 +223,14 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         alpha_prev = opt_state.alpha_prev[0]
         ema = opt_state.n_evals_ema[0]
         gamma_prev = opt_state.gamma[0]
+        tel_prev = jax.tree.map(lambda x: x[0], opt_state.telemetry)
 
         # ---- local iterations (Qsparse-local-style, beyond-paper) -------
         if run_cfg.optimizer.local_steps > 1 and \
                 opt.kind in ("csgd_asss", "nonadaptive"):
             return _local_steps_worker(params, opt_state, batch, mem,
-                                       alpha_prev, ema, gamma_prev)
+                                       alpha_prev, ema, gamma_prev,
+                                       tel_prev)
 
         # ---- gradient over microbatches (accumulated) -------------------
         if micro > 1:
@@ -257,15 +277,12 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             metrics["n_evals"] = jnp.float32(0.0)
 
         # ---- per-round compression level (gamma controller round) -------
-        if res is not None and \
-                opt.gamma_controller.schedule == "armijo-coupled":
-            gamma_t = gamma_update(
-                opt.gamma_controller, opt.compressor, gamma_prev,
-                opt_state.step, alpha=res.alpha, alpha_prev=alpha_prev,
-                n_evals=res.n_evals, n_evals_ema=ema)
-        else:
-            gamma_t = gamma_update(opt.gamma_controller, opt.compressor,
-                                   gamma_prev, opt_state.step)
+        search_tel = SearchTelemetry(
+            alpha=res.alpha, alpha_prev=alpha_prev, n_evals=res.n_evals,
+            n_evals_ema=ema) if res is not None else None
+        gamma_t = gamma_update(opt.gamma_controller, opt.compressor,
+                               gamma_prev, opt_state.step,
+                               search=search_tel, compression=tel_prev)
         metrics["gamma"] = jax.lax.pmean(gamma_t, dp)
 
         if res is not None:
@@ -283,16 +300,20 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 # region so selection runs on the local gradient shard and
                 # the only collective stays the small dp packed all-gather.
                 pspecs = param_pspecs(params)
+                # telemetry_axes: the model shards are ONE worker, so the
+                # telemetry sums psum over 'model' before the ratios form
+                # (the P() out_spec asserts them replicated; wire/eff are
+                # shape-derived and replicated without it)
                 inner = compat.shard_map(
                     lambda g, m2, e, gt: worker_compress_aggregate(
                         g, m2, e, opt.compressor, dp, stacked_mask=smask,
-                        gamma_t=gt),
+                        gamma_t=gt, telemetry_axes=("model",)),
                     mesh=None,  # nested: resolve from the trace context
                     in_specs=(pspecs, pspecs, P(), P()),
-                    out_specs=(pspecs, pspecs, P(), P()),
+                    out_specs=(pspecs, pspecs, P(), P(), P()),
                     axis_names={"model"}, check_vma=False)
-                updates, new_mem, wire, eff_wire = inner(grads, mem, eta,
-                                                         gamma_t)
+                updates, new_mem, wire, eff_wire, tel = inner(grads, mem,
+                                                              eta, gamma_t)
             else:
                 # covers shard_local_topk on 0.4.x too: there the training
                 # body is already manual over 'model' (compat.
@@ -301,16 +322,22 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 # manual-'model' shard_map around it SIGFPEs 0.4.x XLA
                 # (tests/distributed/test_shard_local_topk.py) and
                 # shard-local selection degenerates to the direct call.
-                updates, new_mem, wire, eff_wire = worker_compress_aggregate(
-                    grads, mem, eta, opt.compressor, dp, stacked_mask=smask,
-                    gamma_t=gamma_t)
+                updates, new_mem, wire, eff_wire, tel = \
+                    worker_compress_aggregate(
+                        grads, mem, eta, opt.compressor, dp,
+                        stacked_mask=smask, gamma_t=gamma_t)
             new_mem = jax.tree.map(lambda x: x[None], new_mem)
         else:
             updates, wire = dense_aggregate(grads, eta, dp)
             eff_wire = wire
             new_mem = opt_state.memory
+            tel = tel_prev              # no compression: health unchanged
+        cum_eff = opt_state.cum_eff_bytes + jax.lax.pmean(eff_wire, dp)
         metrics["wire_bytes"] = jax.lax.pmean(wire, dp)
         metrics["effective_wire_bytes"] = jax.lax.pmean(eff_wire, dp)
+        metrics["cum_effective_wire_bytes"] = cum_eff
+        metrics["ef_backlog"] = jax.lax.pmean(tel.ef_backlog, dp)
+        metrics["ef_cosine"] = jax.lax.pmean(tel.cosine, dp)
 
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
@@ -321,6 +348,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             memory=new_mem,
             n_evals_ema=new_ema[None],
             gamma=gamma_t[None],
+            telemetry=jax.tree.map(lambda x: x[None], tel),
+            cum_eff_bytes=cum_eff,
         )
         return new_params, new_state, metrics
 
@@ -332,14 +361,19 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         return jax.tree.map(lambda _: P(dp_spec), batch_tree)
 
     def make(params_like, batch_like):
+        tel_spec = jax.tree.map(lambda _: lead,
+                                CompressionTelemetry.init(abstract=True))
         state_in = DistOptState(
             step=rep, alpha_prev=lead,
             memory=(jax.tree.map(lambda _: lead, params_like)
                     if opt.kind in ("csgd_asss", "nonadaptive") else ()),
-            n_evals_ema=lead, gamma=lead)
+            n_evals_ema=lead, gamma=lead,
+            telemetry=tel_spec, cum_eff_bytes=rep)
         metrics_spec = {k: rep for k in
                         ("loss", "grad_sqnorm", "alpha", "n_evals",
-                         "wire_bytes", "effective_wire_bytes", "gamma")}
+                         "wire_bytes", "effective_wire_bytes",
+                         "cum_effective_wire_bytes", "ef_backlog",
+                         "ef_cosine", "gamma")}
         # Manual over dp, auto over 'model' (XLA partitions the TP math).
         # On 0.4.x partial-auto shard_map cannot contain a lax.scan
         # (compat.PARTIAL_AUTO_SAFE), so there the body is manual over
@@ -366,7 +400,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             lambda _: NamedSharding(mesh, P(dp_spec)), batch_like)
         msh = {k: NamedSharding(mesh, P()) for k in
                ("loss", "grad_sqnorm", "alpha", "n_evals", "wire_bytes",
-                "effective_wire_bytes", "gamma")}
+                "effective_wire_bytes", "cum_effective_wire_bytes",
+                "ef_backlog", "ef_cosine", "gamma")}
         # donation of pinned_host-backed state trips an XLA SPMD RET_CHECK
         # (side-effecting copy-to-host without sharding); skip it there.
         donate = () if opt.ef_host_offload else (0, 1)

@@ -44,7 +44,7 @@ def _run_workers(gtree, mtree, comp, eta=0.1, mesh_shape=(W_WORKERS,),
     def worker(g, m):
         g = jax.tree.map(lambda x: x[0], g)
         m = jax.tree.map(lambda x: x[0], m)
-        upd, newm, wire, eff = worker_compress_aggregate(
+        upd, newm, wire, eff, _ = worker_compress_aggregate(
             g, m, jnp.float32(eta), comp, tuple(axes))
         return upd, jax.tree.map(lambda x: x[None], newm), wire, eff
 
@@ -169,7 +169,7 @@ def test_gathered_buffer_is_the_accounted_bytes(key):
                                          ("data",))
 
     f = shard_map(worker, mesh=mesh, in_specs=(P(), P()),
-                  out_specs=(P(), P(), P(), P()), axis_names={"data"},
+                  out_specs=(P(), P(), P(), P(), P()), axis_names={"data"},
                   check_vma=False)
     jaxpr = jax.make_jaxpr(f)(g, m)
     # the all_gather sits inside the shard_map sub-jaxpr, so check the

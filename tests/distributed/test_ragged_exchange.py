@@ -49,7 +49,7 @@ def _run_workers(gtree, mtree, gammas, comp, eta=0.1):
     def worker(g, m, gam):
         g = jax.tree.map(lambda x: x[0], g)
         m = jax.tree.map(lambda x: x[0], m)
-        upd, newm, wire, eff = worker_compress_aggregate(
+        upd, newm, wire, eff, _ = worker_compress_aggregate(
             g, m, jnp.float32(eta), comp, ("data",), gamma_t=gam[0])
         return (upd, jax.tree.map(lambda x: x[None], newm), wire,
                 eff[None])

@@ -99,7 +99,7 @@ def _run_worker(tree, comp, eta=0.1):
     f = shard_map(
         partial(worker_compress_aggregate, comp=comp, dp_axes=("data",)),
         mesh=mesh, in_specs=(spec, spec, P()),
-        out_specs=(spec, spec, P(), P()),
+        out_specs=(spec, spec, P(), P(), P()),
         axis_names={"data"})
     return jax.jit(f)(tree, mem, jnp.float32(eta))
 
@@ -118,7 +118,7 @@ def test_wire_bytes_matches_worker_accounting(key, method, value_bits):
             # and a per-layer size below the dense cutoff
             "s": jax.random.normal(jax.random.fold_in(key, 3), (4, 1300)),
             "t": jax.random.normal(jax.random.fold_in(key, 4), (4, 60))}
-    _, _, wire, eff = _run_worker(tree, comp)
+    _, _, wire, eff, _ = _run_worker(tree, comp)
     assert int(wire) == tree_wire_bytes(tree, comp)
 
 
@@ -130,13 +130,16 @@ def test_worker_aggregate_kernel_parity(key):
     def mk(use_kernel):
         return Compressor(gamma=0.05, method="block_topk", block=512,
                           min_compress_size=64, use_kernel=use_kernel)
-    up_k, mem_k, wire_k, _ = _run_worker(tree, mk(True))
-    up_j, mem_j, wire_j, _ = _run_worker(tree, mk(False))
+    up_k, mem_k, wire_k, _, tel_k = _run_worker(tree, mk(True))
+    up_j, mem_j, wire_j, _, tel_j = _run_worker(tree, mk(False))
     for a, b in zip(jax.tree.leaves(up_k), jax.tree.leaves(up_j)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
     for a, b in zip(jax.tree.leaves(mem_k), jax.tree.leaves(mem_j)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
     assert float(wire_k) == float(wire_j)
+    # the fused-kernel telemetry moments equal the jnp path's reductions
+    for a, b in zip(jax.tree.leaves(tel_k), jax.tree.leaves(tel_j)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
 def test_compress_dense_block_topk_kernel_identity(key):

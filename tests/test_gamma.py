@@ -17,9 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ArmijoConfig, Compressor, CSGDConfig,
-                        GammaControllerConfig, csgd_asss, gamma_init,
-                        gamma_update)
+from repro.core import (ArmijoConfig, CompressionTelemetry, Compressor,
+                        CSGDConfig, GammaControllerConfig, SearchTelemetry,
+                        csgd_asss, gamma_init, gamma_update)
 from repro.data.synthetic import interpolated_regression
 
 # ---------------------------------------------------------------------------
@@ -75,8 +75,9 @@ def test_armijo_coupled_grow_shrink_and_clip():
     def upd(g, alpha, alpha_prev, nev, ema):
         return float(gamma_update(
             cfg, comp, jnp.float32(g), jnp.int32(7),
-            alpha=jnp.float32(alpha), alpha_prev=jnp.float32(alpha_prev),
-            n_evals=jnp.float32(nev), n_evals_ema=jnp.float32(ema)))
+            search=SearchTelemetry(
+                alpha=jnp.float32(alpha), alpha_prev=jnp.float32(alpha_prev),
+                n_evals=jnp.float32(nev), n_evals_ema=jnp.float32(ema))))
 
     # struggling search (eval EMA above threshold) -> grow
     assert upd(0.02, 0.1, 0.1, 4, 4.0) == pytest.approx(0.04)
@@ -103,6 +104,52 @@ def test_coupled_schedule_rejected_without_armijo():
         CSGDConfig(armijo=None,
                    gamma_ctrl=GammaControllerConfig(
                        schedule="armijo-coupled"))
+
+
+def _tel(backlog, cosine=1.0):
+    return CompressionTelemetry(ef_backlog=jnp.float32(backlog),
+                                cosine=jnp.float32(cosine),
+                                decode_error=jnp.float32(0.0),
+                                eff_gamma=jnp.float32(1.0))
+
+
+def test_ef_coupled_hysteresis_band():
+    """The ef-coupled state machine (DESIGN.md §10): grow above
+    target+band, shrink below target-band (cosine healthy), hold inside
+    the band, clip into [gamma_min, budget]."""
+    comp = Compressor(gamma=0.04, max_gamma=0.08)
+    cfg = GammaControllerConfig(schedule="ef-coupled", gamma_min=0.01,
+                                grow=2.0, shrink=0.5,
+                                ef_target=0.15, ef_band=0.05)
+
+    def upd(g, backlog, cosine=1.0):
+        return float(gamma_update(cfg, comp, jnp.float32(g), jnp.int32(3),
+                                  compression=_tel(backlog, cosine)))
+
+    assert upd(0.02, 0.30) == pytest.approx(0.04)      # over -> grow
+    assert upd(0.02, 0.05) == pytest.approx(0.01)      # slack -> shrink
+    assert upd(0.02, 0.15) == pytest.approx(0.02)      # in band -> hold
+    # hysteresis edges: strictly-inside-band values hold
+    assert upd(0.02, 0.199) == pytest.approx(0.02)
+    assert upd(0.02, 0.101) == pytest.approx(0.02)
+    # unhealthy cosine blocks the shrink even at low backlog
+    assert upd(0.02, 0.05, cosine=-0.5) == pytest.approx(0.02)
+    # diverging EF memory (non-finite backlog) always grows
+    assert upd(0.02, float("nan")) == pytest.approx(0.04)
+    assert upd(0.02, float("inf")) == pytest.approx(0.04)
+    # clipping into [gamma_min, budget]
+    assert upd(0.06, 0.40) == pytest.approx(0.08)
+    assert upd(0.015, 0.01) == pytest.approx(0.01)
+
+
+def test_ef_coupled_requires_telemetry_and_valid_band():
+    comp = Compressor(gamma=0.04, max_gamma=0.08)
+    with pytest.raises(ValueError):
+        gamma_update(GammaControllerConfig(schedule="ef-coupled"), comp,
+                     jnp.float32(0.04), jnp.int32(0))
+    with pytest.raises(ValueError, match="hysteresis"):
+        GammaControllerConfig(schedule="ef-coupled", ef_target=0.1,
+                              ef_band=0.2)
 
 
 # ---------------------------------------------------------------------------
@@ -137,18 +184,19 @@ def _run(cfg, steps=STEPS, tail=400):
         return opt.step(lambda ww: bl(ww, idx), w, s)
 
     rng = np.random.default_rng(SEED)
-    cum_eff = 0.0
     wbar = np.zeros(D)
     navg = 0
     gammas = []
     for t in range(steps):
         idx = jnp.asarray(rng.integers(0, N, BATCH))
         w, st, aux = step(w, st, idx)
-        cum_eff += float(aux.eff_wire_bytes)
         gammas.append(float(aux.gamma))
         if t >= steps - tail:           # Polyak tail average
             wbar += np.asarray(w)
             navg += 1
+    # the run total rides in the state/aux now (ISSUE 4 satellite): one
+    # number instead of re-summing the per-step metric
+    cum_eff = float(aux.cum_eff_bytes)
     return float(full_loss(jnp.asarray(wbar / navg))), cum_eff, gammas
 
 
@@ -182,6 +230,36 @@ def test_armijo_coupled_matches_fixed_loss_with_fewer_bytes():
     assert min(gam_c) >= 0.03 - 1e-6 and max(gam_c) <= GMAX + 1e-6
     assert min(gam_c) < GMAX - 1e-6
     assert all(abs(g - GMAX) < 1e-6 for g in gam_f)
+
+
+def test_ef_coupled_matches_fixed_loss_with_fewer_bytes():
+    """EF-coupled pairing at the SAME healthy starting gamma: couples to
+    the compressor's own backlog signal, reaches the fixed-gamma loss
+    (same 5% + noise-floor bound as the armijo pairing) while shipping
+    strictly fewer cumulative effective bytes — and, unlike armijo-coupled,
+    its shrink decisions are grounded in a signal that actually moves with
+    gamma (the observability pair in test_golden_convergence.py pins the
+    discriminating direction)."""
+    fixed = CSGDConfig(
+        armijo=ArmijoConfig(sigma=0.1, a_scale=0.3),
+        compressor=Compressor(gamma=GMAX, min_compress_size=1))
+    loss_f, eff_f, gam_f = _run(fixed)
+
+    coupled = CSGDConfig(
+        armijo=ArmijoConfig(sigma=0.1, a_scale=0.3),
+        compressor=Compressor(gamma=GMAX, max_gamma=GMAX,
+                              min_compress_size=1),
+        gamma_ctrl=GammaControllerConfig(schedule="ef-coupled",
+                                         gamma_min=0.01))
+    loss_c, eff_c, gam_c = _run(coupled)
+
+    assert np.isfinite(loss_f) and loss_f < 1e-3, loss_f
+    assert np.isfinite(loss_c) and loss_c < 1e-3, loss_c
+    assert loss_c <= 1.05 * loss_f + 5e-4, (loss_c, loss_f)
+    assert eff_c < eff_f, (eff_c, eff_f)
+    # the controller moved: it spent rounds strictly inside the budget
+    assert min(gam_c) < GMAX - 1e-6
+    assert max(gam_c) <= GMAX + 1e-6
 
 
 def test_linear_schedule_strictly_fewer_bytes_same_budget():

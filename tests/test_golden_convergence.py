@@ -6,12 +6,20 @@ Fixed seeds throughout — this is a golden test: the trajectories are
 deterministic and the bounds are loose enough to survive numerics churn
 but tight enough that a regression in the scaling logic, the compression
 operator, or the EF memory flips the verdict.
+
+The OBSERVABILITY pair at the bottom pins the DESIGN.md §9 caveat as a
+regression test: injected over-compression (gamma forced below this
+problem's divergence threshold) is invisible to the armijo-coupled
+controller — the line search runs on the uncompressed gradient, so it
+stalls at gamma_min — while the ef-coupled controller senses the EF
+backlog and recovers gamma, restoring convergence (ISSUE 4 acceptance).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ArmijoConfig, Compressor, CSGDConfig, csgd_asss
+from repro.core import (ArmijoConfig, Compressor, CSGDConfig,
+                        GammaControllerConfig, csgd_asss)
 from repro.data.synthetic import interpolated_regression
 
 SEED = 0
@@ -92,3 +100,92 @@ def test_scaling_necessity_is_the_discriminator():
         (loss_s, sup_s)
     assert (not np.isfinite(loss_u)) or loss_u > 10.0 * max(loss_s, 1e-6) \
         or sup_u > 20.0 * sup_s, (loss_u, sup_u)
+
+
+# ---------------------------------------------------------------------------
+# controller observability pair (ISSUE 4): injected over-compression
+# ---------------------------------------------------------------------------
+
+GMAX = 0.04        # healthy budget (k = 10 of d = 256)
+GLOW = 0.004       # injected level: k = 1, below the divergence threshold
+                   # for a_scale = 0.3 (gammas <= 0.01 stall at loss >= 1e2
+                   # on this seeded problem; 0.04 reaches ~3e-4)
+CTRL_STEPS = 900
+CTRL_TAIL = 400
+
+
+def _controller_trajectory(schedule: str):
+    """900 steps from an over-compressed start: gamma0 = gamma_min = GLOW
+    inside a GMAX ragged budget; the controller must climb out on its own
+    signal.  Returns (Polyak-tail loss, per-step gammas, cum eff bytes)."""
+    bl = _quadratic_problem()
+
+    @jax.jit
+    def full_loss(w):
+        A, b, _ = interpolated_regression(N, D, feature_std=1.0, seed=SEED)
+        return jnp.mean((A @ w - b) ** 2)
+
+    if schedule == "fixed-max":
+        compressor = Compressor(gamma=GMAX, min_compress_size=1)
+        ctrl = GammaControllerConfig()
+    else:
+        compressor = Compressor(gamma=GLOW, max_gamma=GMAX,
+                                min_compress_size=1)
+        ctrl = GammaControllerConfig(schedule=schedule, gamma_min=GLOW)
+    cfg = CSGDConfig(armijo=ArmijoConfig(sigma=0.1, a_scale=0.3),
+                     compressor=compressor, gamma_ctrl=ctrl)
+    opt = csgd_asss(cfg)
+    w = jnp.zeros(D)
+    st = opt.init(w)
+
+    @jax.jit
+    def step(w, s, idx):
+        return opt.step(lambda ww: bl(ww, idx), w, s)
+
+    rng = np.random.default_rng(SEED)
+    wbar = np.zeros(D)
+    navg = 0
+    gammas = []
+    for t in range(CTRL_STEPS):
+        idx = jnp.asarray(rng.integers(0, N, BATCH))
+        w, st, aux = step(w, st, idx)
+        gammas.append(float(aux.gamma))
+        if t >= CTRL_STEPS - CTRL_TAIL:
+            wbar += np.asarray(w)
+            navg += 1
+    return (float(full_loss(jnp.asarray(wbar / navg))), gammas,
+            float(aux.cum_eff_bytes))
+
+
+def test_ef_coupled_recovers_injected_over_compression():
+    """THE observability pair (DESIGN.md §9 caveat -> §10 fix, pinned):
+
+    * ``armijo-coupled`` cannot see the injected over-compression — its
+      telemetry comes from a line search on the *uncompressed* gradient —
+      so it stays pinned at gamma_min and the run stalls orders of
+      magnitude above the healthy floor;
+    * ``ef-coupled`` reads the EF backlog ``||m'||/||g||``, grows gamma
+      back into the budget, and restores convergence to within 5% (plus
+      the trajectory-noise floor, see tests/test_gamma.py) of the
+      fixed-gamma=GMAX baseline.
+    """
+    loss_fixed, _, _ = _controller_trajectory("fixed-max")
+    loss_ef, gam_ef, _ = _controller_trajectory("ef-coupled")
+    loss_arm, gam_arm, _ = _controller_trajectory("armijo-coupled")
+
+    # healthy baseline converged
+    assert np.isfinite(loss_fixed) and loss_fixed < 1e-3, loss_fixed
+    # ef-coupled restored convergence: within 5% + the noise floor
+    assert np.isfinite(loss_ef), loss_ef
+    assert loss_ef <= 1.05 * loss_fixed + 5e-4, (loss_ef, loss_fixed)
+    # ... by actually recovering gamma out of the injected hole
+    assert max(gam_ef) >= 0.5 * GMAX, max(gam_ef)
+    assert gam_ef[0] <= GLOW + 1e-6
+    # armijo-coupled provably did not: gamma never escaped the
+    # over-compressed regime (the divergence threshold is ~0.01) ...
+    assert max(gam_arm) <= 0.01, max(gam_arm)
+    assert gam_arm[-1] <= GLOW + 1e-6, gam_arm[-1]
+    # ... and the run stalled far above both the baseline and ef-coupled
+    assert (not np.isfinite(loss_arm)) or \
+        loss_arm > 100.0 * max(loss_fixed, loss_ef), \
+        (loss_arm, loss_fixed, loss_ef)

@@ -32,8 +32,8 @@ def test_dispatch_registry_and_resolution():
     process-wide override wins over policy."""
     from repro.kernels import dispatch
     reg = dispatch.registered()
-    for op in ("ef_update", "block_stats", "ef_stats", "threshold_split",
-               "attention", "rmsnorm", "wkv"):
+    for op in ("ef_update", "block_stats", "ef_stats", "ef_stats_telemetry",
+               "threshold_split", "attention", "rmsnorm", "wkv"):
         assert "ref" in reg[op], op
         assert "pallas-interpret" in reg[op], op
         assert "pallas-tpu" in reg[op], op
@@ -73,6 +73,34 @@ def test_fused_ef_identity_bitlevel(key, shape):
     np.testing.assert_array_equal(np.asarray(sent), np.asarray(sent_r))
     np.testing.assert_array_equal(np.asarray(mnew), np.asarray(mnew_r))
     np.testing.assert_array_equal(np.asarray(tau), np.asarray(tau_r))
+
+
+@pytest.mark.parametrize("shape", [(5000,), (3, 4096), (2, 2500)])
+def test_fused_ef_telemetry_parity(key, shape):
+    """The telemetry-fused pass 1 (DESIGN.md §10): tau equals the plain
+    ef_stats pass bit-for-bit (same selection math), the moments equal the
+    ref oracle across ref/pallas, and the moment totals reduce to the
+    dense sums they claim to be."""
+    eta = 0.5                       # power of two: acc exact in numpy too
+    m = jax.random.normal(key, shape, jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), shape, jnp.float32)
+    s_t, m_t, tau_t, mom_p = ops.fused_ef_compress(
+        m, g, eta, gamma=0.03, telemetry=True, impl="pallas")
+    s_p, m_p, tau_p = ops.fused_ef_compress(m, g, eta, gamma=0.03,
+                                            impl="pallas")
+    np.testing.assert_array_equal(np.asarray(tau_t), np.asarray(tau_p))
+    np.testing.assert_array_equal(np.asarray(s_t), np.asarray(s_p))
+    np.testing.assert_array_equal(np.asarray(m_t), np.asarray(m_p))
+    *_, mom_r = ops.fused_ef_compress(m, g, eta, gamma=0.03,
+                                      telemetry=True, impl="ref")
+    np.testing.assert_allclose(np.asarray(mom_p), np.asarray(mom_r),
+                               rtol=1e-6)
+    acc = np.asarray(m, np.float64) + eta * np.asarray(g, np.float64)
+    np.testing.assert_allclose(float(jnp.sum(mom_p[:, 0])),
+                               float(np.sum(np.asarray(g, np.float64)**2)),
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(jnp.sum(mom_p[:, 1])),
+                               float(np.sum(acc**2)), rtol=1e-5)
 
 
 def test_fused_ef_compress_block_budget(key):

@@ -237,6 +237,137 @@ def test_ragged_roundtrip_property(seed, d, block, value_bits):
     check_ragged_roundtrip(seed, d, block, value_bits)
 
 
+# ---------------------------------------------------------------------------
+# compression telemetry invariants (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+import functools  # noqa: E402
+
+_TEL_GAMMA = 0.05
+_TEL_DS = (320, 1024, 1300)     # odd/padded block geometries
+
+
+@functools.lru_cache(maxsize=None)
+def _telemetry_fn(method: str, value_bits: int, adaptive: bool,
+                  use_kernel: bool):
+    """Jitted 1-worker worker_compress_aggregate -> CompressionTelemetry,
+    cached per static config so hypothesis examples reuse compilations."""
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core.dcsgd import worker_compress_aggregate
+
+    comp = Compressor(gamma=_TEL_GAMMA,
+                      max_gamma=_TEL_GAMMA if adaptive else 0.0,
+                      method=method, block=256, min_compress_size=1,
+                      value_bits=value_bits, use_kernel=use_kernel)
+    mesh = jax.make_mesh((1,), ("data",))
+    f = shard_map(
+        lambda g, m, eta, gt: worker_compress_aggregate(
+            g, m, eta, comp, ("data",),
+            gamma_t=gt if adaptive else None)[4],
+        mesh=mesh, in_specs=(P(), P(), P(), P()), out_specs=P(),
+        axis_names={"data"})
+    return jax.jit(f)
+
+
+def _tel_inputs(seed: int, d: int):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    m = jnp.asarray(rng.standard_normal(d).astype(np.float32)) * 0.5
+    return g, m
+
+
+def check_telemetry_ranges(seed: int, d: int, method: str, value_bits: int,
+                           gfrac: float):
+    """For any shape, value width and per-round count: cosine in [-1, 1],
+    backlog >= 0, decode_error >= 0, eff_gamma <= 1, everything finite."""
+    g, m = _tel_inputs(seed, d)
+    tel = _telemetry_fn(method, value_bits, True, True)(
+        g, m, jnp.float32(0.25), jnp.float32(gfrac * _TEL_GAMMA))
+    for leaf in jax.tree.leaves(tel):
+        assert np.isfinite(float(leaf))
+    assert -1.0 - 1e-5 <= float(tel.cosine) <= 1.0 + 1e-5
+    assert float(tel.ef_backlog) >= 0.0
+    assert float(tel.decode_error) >= 0.0
+    assert float(tel.eff_gamma) <= 1.0 + 1e-5
+
+
+def check_telemetry_identity_compressor(seed: int, d: int, log2_eta: int):
+    """When compression is the identity (dense ship) and the EF memory is
+    empty: backlog == 0, decode_error == 0 and eff_gamma == 1 BIT-EXACTLY
+    (the residual is a literal zero — the one case where zero backlog is
+    even reachable), and cosine == 1 to within one f32 ulp.  The cosine
+    bound is one ulp rather than equality because XLA may emit FMA for
+    ``sum(acc*g)`` but plain mul+add for ``sum(g*g)``, splitting the two
+    otherwise-identical (power-of-two-scaled) reductions by one rounding.
+    """
+    g, _ = _tel_inputs(seed, d)
+    tel = _telemetry_fn("none", 32, False, True)(
+        g, jnp.zeros_like(g), jnp.float32(2.0 ** log2_eta), jnp.float32(0))
+    assert float(tel.ef_backlog) == 0.0
+    assert abs(float(tel.cosine) - 1.0) <= np.finfo(np.float32).eps
+    assert float(tel.decode_error) == 0.0
+    assert float(tel.eff_gamma) == 1.0
+
+
+def check_telemetry_full_budget_matches_nonadaptive(seed: int, d: int,
+                                                    method: str):
+    """gamma_t == geometry_gamma with value_bits = 32: the ragged mask is
+    a no-op and telemetry equals the non-adaptive compressor's bit-for-bit
+    (the adaptive machinery adds zero distortion at full count)."""
+    g, m = _tel_inputs(seed, d)
+    eta = jnp.float32(0.25)
+    t_ad = _telemetry_fn(method, 32, True, True)(
+        g, m, eta, jnp.float32(_TEL_GAMMA))
+    t_fx = _telemetry_fn(method, 32, False, True)(g, m, eta, jnp.float32(0))
+    for a, b in zip(jax.tree.leaves(t_ad), jax.tree.leaves(t_fx)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def check_telemetry_scale_invariance(seed: int, d: int, value_bits: int,
+                                     log2_c: int, gfrac: float):
+    """Telemetry is a pure shape descriptor: scaling (g, m) by a power of
+    two changes no field, bit-exactly, at every value width and per-round
+    count (selection, quantization scales and all five sums scale
+    exactly)."""
+    g, m = _tel_inputs(seed, d)
+    c = jnp.float32(2.0 ** log2_c)
+    fn = _telemetry_fn("block_topk", value_bits, True, True)
+    eta = jnp.float32(0.5)
+    gt = jnp.float32(gfrac * _TEL_GAMMA)
+    t1 = fn(g, m, eta, gt)
+    t2 = fn(c * g, c * m, eta, gt)
+    for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_TEL_DS),
+       st.sampled_from(["block_topk", "topk"]),
+       st.sampled_from([4, 8, 16, 32]), st.floats(0.05, 1.0))
+def test_telemetry_ranges_property(seed, d, method, value_bits, gfrac):
+    check_telemetry_ranges(seed, d, method, value_bits, gfrac)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_TEL_DS),
+       st.integers(-2, 2))
+def test_telemetry_identity_compressor_property(seed, d, log2_eta):
+    check_telemetry_identity_compressor(seed, d, log2_eta)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_TEL_DS),
+       st.sampled_from(["block_topk", "topk"]))
+def test_telemetry_full_budget_matches_nonadaptive_property(seed, d, method):
+    check_telemetry_full_budget_matches_nonadaptive(seed, d, method)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(_TEL_DS),
+       st.sampled_from([4, 8, 16, 32]), st.integers(-3, 3),
+       st.floats(0.05, 1.0))
+def test_telemetry_scale_invariance_property(seed, d, value_bits, log2_c,
+                                             gfrac):
+    check_telemetry_scale_invariance(seed, d, value_bits, log2_c, gfrac)
+
+
 @given(st.integers(0, 2**31 - 1), st.integers(1, 3000),
        st.sampled_from([4, 8, 16, 32]), st.integers(1, 64))
 def test_pack_roundtrip_with_counts_property(seed, n, bits, period):

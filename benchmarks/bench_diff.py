@@ -26,6 +26,13 @@ Two rule sets:
   adjacent calls cancels machine drift, so this certifies the
   "telemetry costs no extra HBM sweep" claim without cross-machine (or
   even cross-second) noise.
+* **within-run transport claim** — the ``bucketed_vs_perleaf_step_*``
+  records (bucketed vs per-leaf compressed exchange on a leaf-heavy
+  synthetic pytree, DESIGN.md §11) carry the same paired ratio and are
+  hard-gated at ``--bucket-factor`` (default 1.0x): the bucketed
+  transport must never be SLOWER than the per-leaf schedule it replaced
+  (measured ~0.87x on the gated workload, so the 1.0x gate has real
+  headroom while still being a genuine "not slower" claim).
 
 Usage (the CI invocation)::
 
@@ -44,6 +51,7 @@ import os
 import sys
 
 TEL_RATIO_PREFIX = "ef2pass_tel_ratio_"
+BUCKET_RATIO_PREFIX = "bucketed_vs_perleaf_step_"
 
 
 def _key(rec: dict) -> tuple:
@@ -65,7 +73,8 @@ def _load(path: str) -> dict[tuple, float]:
 
 def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
          factor: float, tel_factor: float, min_ms: float = 0.25,
-         cross_run_fail: bool = True) -> list[str]:
+         cross_run_fail: bool = True,
+         bucket_factor: float = 1.0) -> list[str]:
     """Returns the list of failure messages (empty = pass).
 
     ``min_ms``: noise floor for the cross-run rule — keys where both
@@ -77,7 +86,7 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
     failures = []
 
     def is_ratio(k):
-        return k[0].startswith(TEL_RATIO_PREFIX)
+        return k[0].startswith((TEL_RATIO_PREFIX, BUCKET_RATIO_PREFIX))
 
     shared = sorted(k for k in set(baseline) & set(fresh) if not is_ratio(k))
     for k in shared:
@@ -117,6 +126,26 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
         failures.append(
             f"no {TEL_RATIO_PREFIX}* records in the fresh run — the "
             f"fused-telemetry claim went unmeasured")
+
+    # within-run: bucketed-vs-perleaf transport ratio (DESIGN.md §11)
+    n_bucket = 0
+    for (op, backend, shape), ratio in sorted(fresh.items()):
+        if not op.startswith(BUCKET_RATIO_PREFIX):
+            continue
+        n_bucket += 1
+        flag = "BUCKETING SLOWER" if ratio > bucket_factor else "ok"
+        print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
+              f"(limit {bucket_factor}x) {flag}")
+        if ratio > bucket_factor:
+            failures.append(
+                f"{op}{shape}: bucketed transport costs {ratio:.3f}x the "
+                f"per-leaf schedule (> {bucket_factor}x) — the coalesced "
+                f"exchange (DESIGN.md §11) regressed below the path it "
+                f"replaced")
+    if n_bucket == 0:
+        failures.append(
+            f"no {BUCKET_RATIO_PREFIX}* records in the fresh run — the "
+            f"bucketed-transport claim went unmeasured")
     if not shared:
         print("  (no shared (op, backend, shape) keys — cross-run diff "
               "was vacuous; refresh the committed baseline)")
@@ -132,6 +161,9 @@ def main() -> int:
                     help="cross-run median_ms regression threshold")
     ap.add_argument("--tel-factor", type=float, default=1.10,
                     help="within-run telemetry-vs-plain EF threshold")
+    ap.add_argument("--bucket-factor", type=float, default=1.0,
+                    help="within-run bucketed-vs-perleaf transport "
+                         "threshold (bucketed must not be slower)")
     ap.add_argument("--min-ms", type=float, default=0.25,
                     help="cross-run noise floor (see diff())")
     ap.add_argument("--cross-run", choices=["fail", "warn"], default="fail",
@@ -141,10 +173,12 @@ def main() -> int:
     args = ap.parse_args()
     print(f"bench diff: {args.baseline} -> {args.fresh} "
           f"(factor {args.factor}x, tel {args.tel_factor}x, "
-          f"floor {args.min_ms} ms, cross-run={args.cross_run})")
+          f"bucket {args.bucket_factor}x, floor {args.min_ms} ms, "
+          f"cross-run={args.cross_run})")
     failures = diff(_load(args.baseline), _load(args.fresh),
                     args.factor, args.tel_factor, min_ms=args.min_ms,
-                    cross_run_fail=args.cross_run == "fail")
+                    cross_run_fail=args.cross_run == "fail",
+                    bucket_factor=args.bucket_factor)
     if failures:
         print("\nFAIL:")
         for f in failures:

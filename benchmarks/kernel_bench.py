@@ -49,13 +49,11 @@ def timeit(f, *args, n=20):
     bench_diff compares min_ms across runs because load bursts on shared
     runners inflate a whole median window but rarely every single call.
     """
-    r = f(*args)
-    (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    jax.block_until_ready(f(*args))
     times = []
     for _ in range(n):
         t0 = time.time()
-        r = f(*args)
-        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+        jax.block_until_ready(f(*args))
         times.append(time.time() - t0)
     times.sort()
     return times[len(times) // 2] * 1e6, times[0] * 1e6
@@ -87,19 +85,16 @@ def paired_ratio(f_num, f_den, args, n_pairs=12, repeats=3):
     telemetry-fused EF op's "same streaming pass" claim is certified — two
     independently-timed medians are far too noisy on shared CI runners."""
     for f in (f_den, f_num):
-        r = f(*args)
-        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+        jax.block_until_ready(f(*args))
     meds = []
     for _ in range(repeats):
         ratios = []
         for _ in range(n_pairs):
             t0 = time.perf_counter()
-            r = f_den(*args)
-            (r[0] if isinstance(r, tuple) else r).block_until_ready()
+            jax.block_until_ready(f_den(*args))
             td = time.perf_counter() - t0
             t0 = time.perf_counter()
-            r = f_num(*args)
-            (r[0] if isinstance(r, tuple) else r).block_until_ready()
+            jax.block_until_ready(f_num(*args))
             ratios.append((time.perf_counter() - t0) / max(td, 1e-9))
         ratios.sort()
         meds.append(ratios[len(ratios) // 2])
@@ -214,6 +209,58 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
                min_us=ratio * 1e3)
         out[f"ef2pass_tel_{name}"] = {
             "pallas": us_t[0], "ratio_tel_over_plain": ratio}
+
+    # ---- bucketed vs per-leaf transport on a multi-leaf pytree ----------
+    # The bucketed exchange (DESIGN.md §11) trades per-leaf collectives and
+    # launches for O(1) coalesced ones; on CPU (one XLA program, no real
+    # launch overhead) the win is per-leaf op dispatch, so the honest
+    # workload is leaf-HEAVY: the unstacked-transformer shape regime the
+    # tentpole targets (dozens-to-hundreds of per-row leaves).  The PAIRED
+    # ratio is hard-gated at 1.0x by bench_diff — bucketed must never be
+    # slower than the per-leaf reference it replaced.
+    import functools
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import shard_map
+    from repro.core import Compressor
+    from repro.core.dcsgd import worker_compress_aggregate
+
+    n_leaves = 64 if smoke else 96
+    tree = {f"w{i}": jax.random.normal(jax.random.fold_in(key, 300 + i),
+                                       (1024,)) for i in range(n_leaves)}
+    tree["s0"] = jax.random.normal(jax.random.fold_in(key, 400), (2, 1024))
+    tree["s1"] = jax.random.normal(jax.random.fold_in(key, 401), (2, 1024))
+    tree["dense"] = jax.random.normal(jax.random.fold_in(key, 402), (50,))
+    mem = jax.tree.map(jnp.zeros_like, tree)
+    eta = jnp.float32(0.1)
+    comp = Compressor(gamma=0.05, method="block_topk", block=512,
+                      min_compress_size=64, value_bits=8)
+    tname = f"{n_leaves + 3}leaves"
+
+    def _make_step(transport):
+        mesh = jax.make_mesh((1,), ("data",))
+        pspec = jax.tree.map(lambda _: P(), tree)
+        return jax.jit(shard_map(
+            functools.partial(worker_compress_aggregate, comp=comp,
+                              dp_axes=("data",), transport=transport),
+            mesh=mesh, in_specs=(pspec, pspec, P()),
+            out_specs=(pspec, pspec, P(), P(), P()),
+            axis_names={"data"}))
+
+    f_bucketed = _make_step("bucketed")
+    f_perleaf = _make_step("perleaf")
+    for impl, f in (("bucketed", f_bucketed), ("perleaf", f_perleaf)):
+        us = timeit(f, tree, mem, eta, n=n_heavy)
+        record("exchange_step", impl, tname, us,
+               f"worker_compress_aggregate, {n_leaves + 3} leaves")
+    # deeper pairing than the tel records: the 1.0x gate has no slack, so
+    # min-over-5-repeats keeps a transient load burst from failing CI
+    ratio = paired_ratio(f_bucketed, f_perleaf, (tree, mem, eta),
+                         n_pairs=16, repeats=5)
+    record(f"bucketed_vs_perleaf_step_{tname}", "default", tname,
+           ratio * 1e3,
+           "paired bucketed/perleaf wall-time ratio (x1000, dimensionless)",
+           min_us=ratio * 1e3)
+    out["bucketed_vs_perleaf"] = ratio
 
     path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

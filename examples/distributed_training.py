@@ -24,6 +24,17 @@ the static ragged wire budget the controller moves inside.  Unlike
 ``armijo-coupled`` it senses over-compression directly, so a too-small
 ``--gamma`` start recovers instead of stalling at ``--gamma-min``
 (tests/test_golden_convergence.py pins that pairing).
+
+The exchange itself is **bucketed** (DESIGN.md §11, the default): every
+compressed leaf's packed payload rides ONE flat ``all_gather`` per step
+(down from one collective per leaf), the pack/unpack and fused-EF
+kernels launch once per bucket instead of once per leaf, and every dense
+small leaf folds into a single ``pmean`` — same bytes on the wire, same
+updates bit for bit.  ``--transport perleaf`` restores the per-leaf
+reference schedule for A/B timing or debugging::
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \\
+        --mesh 4x2 --compress-method block_topk --transport perleaf
 """
 import os
 import sys

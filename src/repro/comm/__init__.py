@@ -1,8 +1,12 @@
-"""Compressed communication: the bit-packed wire format and the packed
-payload exchange that make ``wire_bytes`` the literal bytes on the mesh
-(DESIGN.md §8)."""
-from .exchange import check_payload, gather_packed
+"""Compressed communication: the bit-packed wire format, the packed
+payload exchange that makes ``wire_bytes`` the literal bytes on the mesh
+(DESIGN.md §8), and the bucketed transport that coalesces the per-leaf
+exchange into O(1) collectives and launches (DESIGN.md §11)."""
+from .bucket import (BucketPlan, build_bucket_plan, decode_buckets,
+                     encode_buckets)
+from .exchange import check_bucket_payload, check_payload, gather_packed
 from .wire import WireSpec, decode_rows, encode_rows
 
 __all__ = ["WireSpec", "encode_rows", "decode_rows", "check_payload",
-           "gather_packed"]
+           "check_bucket_payload", "gather_packed", "BucketPlan",
+           "build_bucket_plan", "encode_buckets", "decode_buckets"]

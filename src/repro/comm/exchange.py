@@ -1,10 +1,13 @@
 """Packed payload exchange over the data-parallel mesh axes.
 
-The only collective the compressed path issues per leaf is an ``all_gather``
-of the fixed-size packed payload built by :mod:`repro.comm.wire` — W * L *
-``WireSpec.row_bytes`` bytes cross the mesh axis, nothing else.  The
-byte-accounting contract (``Compressor.wire_bytes`` == payload bytes) is
-enforced at trace time by :func:`check_payload`.
+The only collective the compressed path issues is an ``all_gather`` of
+packed payload words built by :mod:`repro.comm.wire` — per leaf on the
+reference transport (W * L * ``WireSpec.row_bytes`` bytes per leaf), ONE
+flat buffer for the whole pytree on the default bucketed transport
+(:mod:`repro.comm.bucket`, DESIGN.md §11).  The byte-accounting contract
+(``Compressor.wire_bytes`` == payload bytes, with no padding word ever
+riding the collective) is enforced at trace time by :func:`check_payload`
+/ :func:`check_bucket_payload`.
 """
 from __future__ import annotations
 
@@ -35,6 +38,38 @@ def check_payload(payload: jax.Array, spec: WireSpec, comp, d: int) -> None:
         raise ValueError(
             f"wire accounting drift: payload row is {physical} B but "
             f"Compressor.wire_bytes({d}) = {accounted} B")
+
+
+def check_bucket_payload(payload: jax.Array, plan, comp) -> None:
+    """Bucket-geometry counterpart of :func:`check_payload` (DESIGN.md
+    §11): the ONE flat uint32 buffer about to cross the mesh axis is
+    exactly the bytes the per-leaf accounting sums to — the bucketed
+    transport ships the same per-leaf payload rows back to back, never a
+    padding word.  ``plan`` is a :class:`repro.comm.bucket.BucketPlan`.
+    All quantities are static, so violations fail at trace time."""
+    if payload.dtype != jnp.uint32:
+        raise ValueError(f"payload must be uint32, got {payload.dtype}")
+    if payload.shape != (plan.total_words,):
+        raise ValueError(f"bucket payload is {payload.shape}, plan says "
+                         f"({plan.total_words},)")
+    words = 0
+    for lane in plan.leaves:
+        if lane.dense:
+            continue
+        accounted = comp.wire_bytes(lane.d)
+        if lane.spec.row_bytes != accounted:
+            raise ValueError(
+                f"wire accounting drift: leaf {lane.index} payload row is "
+                f"{lane.spec.row_bytes} B but Compressor.wire_bytes"
+                f"({lane.d}) = {accounted} B")
+        if lane.word_off != words:
+            raise ValueError(
+                f"bucket offset drift: leaf {lane.index} at word "
+                f"{lane.word_off}, expected {words}")
+        words += lane.words
+    if words != plan.total_words:
+        raise ValueError(f"bucket plan sums to {words} words, "
+                         f"total_words says {plan.total_words}")
 
 
 def effective_payload_bytes(payload: jax.Array, spec: WireSpec) -> jax.Array:

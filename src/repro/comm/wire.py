@@ -162,6 +162,66 @@ class WireSpec:
         return (jnp.arange(self.k, dtype=jnp.int32) // self.k_b) * self.block
 
 
+def field_mask(k: int, counts: jax.Array, period: int) -> jax.Array:
+    """(R, k) ragged validity mask: field j of a row is valid iff
+    ``j % period < count`` — per-block prefix for block-local rows
+    (period = k_b), plain prefix for flat rows (period = k)."""
+    pos = jnp.arange(k, dtype=jnp.int32) % jnp.int32(period)
+    return pos[None, :] < jnp.asarray(counts, jnp.int32).reshape(-1, 1)
+
+
+def row_fields(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
+               counts: jax.Array | None = None):
+    """Encode-side field construction — the codec half shared bit-for-bit
+    by :func:`encode_rows` and the bucketed transport (comm/bucket.py).
+
+    Returns ``(header, ifields, vfields, counts)``: ``header`` is the
+    (R, header_words) uint32 header columns (count word, then scale word;
+    None when the spec has no header), ``ifields``/``vfields`` the (R, k)
+    unpacked uint32 field sections, and ``counts`` the normalized (R,)
+    int32 valid counts (None for non-ragged specs).  Values beyond the
+    count are zeroed *before* the quantization scale; the field sections
+    are NOT yet count-masked — per-leaf packing masks them inside the
+    kernels (:func:`repro.kernels.ops.pack_fields`), the bucketed path
+    applies :func:`field_mask` before its batched stream pack.
+    """
+    R, k = vals.shape
+    assert k == spec.k, (k, spec.k)
+    vals = vals.astype(jnp.float32)
+    header = []
+    if spec.ragged:
+        if counts is None:
+            counts = jnp.full((R,), spec.full_count, jnp.int32)
+        counts = jnp.broadcast_to(
+            jnp.asarray(counts, jnp.int32).reshape(-1), (R,))
+        vals = jnp.where(field_mask(k, counts, spec.count_period), vals, 0.0)
+        header.append(counts.astype(jnp.uint32)[:, None])
+    else:
+        counts = None
+
+    # -- values (+ scale header) --------------------------------------------
+    if spec.value_bits <= 8:
+        QMAX, quant_scale = _quant_helpers()
+        qmax = QMAX[spec.value_bits]
+        scale = quant_scale(vals, qmax)                       # (R, 1) f32
+        q = jnp.clip(jnp.round(vals / scale), -qmax, qmax).astype(jnp.int32)
+        vfields = q.astype(jnp.uint32)  # two's complement, masked on pack
+        header.append(lax.bitcast_convert_type(scale, jnp.uint32))
+    elif spec.value_bits == 16:
+        vfields = lax.bitcast_convert_type(vals.astype(jnp.bfloat16),
+                                           jnp.uint16).astype(jnp.uint32)
+    else:
+        vfields = lax.bitcast_convert_type(vals, jnp.uint32)
+
+    # -- indices ------------------------------------------------------------
+    if spec.local:
+        ifields = (idx - spec._local_base()[None, :]).astype(jnp.uint32)
+    else:
+        ifields = idx.astype(jnp.uint32)
+    header = jnp.concatenate(header, axis=-1) if header else None
+    return header, ifields, vfields, counts
+
+
 def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
                 counts: jax.Array | None = None,
                 impl: str | None = None) -> jax.Array:
@@ -176,44 +236,11 @@ def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
     are zeroed *before* the quantization scale, and both field sections
     are masked inside the pack kernels; omitted counts mean "all valid".
     """
-    R, k = vals.shape
-    assert k == spec.k, (k, spec.k)
-    vals = vals.astype(jnp.float32)
-    parts = []
-    period = 0
-    if spec.ragged:
-        if counts is None:
-            counts = jnp.full((R,), spec.full_count, jnp.int32)
-        counts = jnp.broadcast_to(
-            jnp.asarray(counts, jnp.int32).reshape(-1), (R,))
-        period = spec.count_period
-        pos = jnp.arange(k, dtype=jnp.int32)
-        vals = jnp.where((pos % period)[None, :] < counts[:, None],
-                         vals, 0.0)
-        parts.append(counts.astype(jnp.uint32)[:, None])
-    else:
-        counts = None
-
-    # -- values (+ scale header) --------------------------------------------
-    if spec.value_bits <= 8:
-        QMAX, quant_scale = _quant_helpers()
-        qmax = QMAX[spec.value_bits]
-        scale = quant_scale(vals, qmax)                       # (R, 1) f32
-        q = jnp.clip(jnp.round(vals / scale), -qmax, qmax).astype(jnp.int32)
-        vfields = q.astype(jnp.uint32)  # two's complement, masked on pack
-        parts.append(lax.bitcast_convert_type(scale, jnp.uint32))
-    elif spec.value_bits == 16:
-        vfields = lax.bitcast_convert_type(vals.astype(jnp.bfloat16),
-                                           jnp.uint16).astype(jnp.uint32)
-    else:
-        vfields = lax.bitcast_convert_type(vals, jnp.uint32)
-
-    # -- indices ------------------------------------------------------------
-    if spec.local:
-        ifields = (idx - spec._local_base()[None, :]).astype(jnp.uint32)
-    else:
-        ifields = idx.astype(jnp.uint32)
-
+    R, _ = vals.shape
+    header, ifields, vfields, counts = row_fields(vals, idx, spec,
+                                                  counts=counts)
+    period = spec.count_period if spec.ragged else 0
+    parts = ([header] if header is not None else [])
     parts.append(ops.pack_fields(ifields, spec.index_bits, counts=counts,
                                  period=period, impl=impl))
     parts.append(ops.pack_fields(vfields, spec.value_bits, counts=counts,
@@ -222,6 +249,42 @@ def encode_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
     assert payload.shape == (R, spec.row_words), \
         (payload.shape, spec.row_words)
     return payload
+
+
+def fields_to_rows(ifields: jax.Array, vfields: jax.Array,
+                   scale_words: jax.Array | None,
+                   counts: jax.Array | None, spec: WireSpec):
+    """Decode-side field interpretation — the codec half shared bit-for-bit
+    by :func:`decode_rows` and the bucketed transport (comm/bucket.py).
+
+    ``ifields``/``vfields``: (R, k) unpacked uint32 field sections,
+    already count-masked for ragged specs; ``scale_words``: (R, 1) uint32
+    f32 scale bits (sub-byte value widths only); ``counts``: (R,) int32
+    (ragged specs only).  Returns ((R, k) f32 values, (R, k) int32 flat
+    indices).
+    """
+    if spec.local:
+        idx = ifields.astype(jnp.int32) + spec._local_base()[None, :]
+    else:
+        idx = ifields.astype(jnp.int32)
+
+    if spec.value_bits <= 8:
+        scale = lax.bitcast_convert_type(scale_words, jnp.float32)
+        q = vfields.astype(jnp.int32)
+        q = jnp.where(q >= (1 << (spec.value_bits - 1)),
+                      q - (1 << spec.value_bits), q)
+        vals = q.astype(jnp.float32) * scale
+    elif spec.value_bits == 16:
+        vals = lax.bitcast_convert_type(
+            vfields.astype(jnp.uint16), jnp.bfloat16).astype(jnp.float32)
+    else:
+        vals = lax.bitcast_convert_type(vfields, jnp.float32)
+    if spec.ragged:
+        # belt-and-braces on top of the unpack mask: masked fields decode
+        # to exactly 0.0 already (zero bits are 0 in every value format)
+        vals = jnp.where(field_mask(spec.k, counts, spec.count_period),
+                         vals, 0.0)
+    return vals, idx
 
 
 def decode_rows(payload: jax.Array, spec: WireSpec, *,
@@ -251,30 +314,8 @@ def decode_rows(payload: jax.Array, spec: WireSpec, *,
     vfields = ops.unpack_fields(payload[:, off + iw:off + iw + vw], spec.k,
                                 spec.value_bits, counts=counts,
                                 period=period, impl=impl)
-
-    if spec.local:
-        idx = ifields.astype(jnp.int32) + spec._local_base()[None, :]
-    else:
-        idx = ifields.astype(jnp.int32)
-
-    if spec.value_bits <= 8:
-        scale = lax.bitcast_convert_type(
-            payload[:, off - 1:off], jnp.float32)
-        q = vfields.astype(jnp.int32)
-        q = jnp.where(q >= (1 << (spec.value_bits - 1)),
-                      q - (1 << spec.value_bits), q)
-        vals = q.astype(jnp.float32) * scale
-    elif spec.value_bits == 16:
-        vals = lax.bitcast_convert_type(
-            vfields.astype(jnp.uint16), jnp.bfloat16).astype(jnp.float32)
-    else:
-        vals = lax.bitcast_convert_type(vfields, jnp.float32)
-    if spec.ragged:
-        # belt-and-braces on top of the unpack mask: masked fields decode
-        # to exactly 0.0 already (zero bits are 0 in every value format)
-        pos = jnp.arange(spec.k, dtype=jnp.int32)
-        valid = (pos % period)[None, :] < counts[:, None]
-        vals = jnp.where(valid, vals, 0.0)
+    scale_words = payload[:, off - 1:off] if spec.value_bits <= 8 else None
+    vals, idx = fields_to_rows(ifields, vfields, scale_words, counts, spec)
     if return_counts:
         return vals, idx, counts
     return vals, idx

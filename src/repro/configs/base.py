@@ -184,6 +184,12 @@ class OptimizerConfig:
     # delta is EF-compressed and exchanged once.  Divides exchange
     # frequency by local_steps.  Requires microbatches == local_steps.
     local_steps: int = 1
+    # transport schedule of the compressed exchange (DESIGN.md §11):
+    # "bucketed" coalesces every leaf into ONE flat packed all_gather +
+    # batched kernel launches + ONE dense pmean; "perleaf" is the
+    # bit-exact reference schedule (one collective per leaf) kept for
+    # parity tests and paired benchmarks.
+    transport: str = "bucketed"
 
 
 @dataclasses.dataclass(frozen=True)

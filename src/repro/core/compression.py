@@ -232,6 +232,17 @@ class Compressor:
             return nb * self.block_k()
         return k
 
+    def ships_dense(self, d: int) -> bool:
+        """True when a row of size d ships uncompressed (pmean, no packed
+        payload): no compression method, below the §IV-A size cutoff, or
+        block padding pushing the wire entry count past d.  THE
+        dense-vs-compressed predicate — shared by both transports of
+        ``worker_compress_aggregate`` and ``comm.bucket.build_bucket_plan``
+        so the per-leaf and bucketed schedules can never classify a leaf
+        differently."""
+        return (self.method == "none" or d < self.min_compress_size
+                or self.sparse_k(d) >= d)
+
     def quantize_values(self, vals: jax.Array) -> jax.Array:
         """Simulate wire quantization (returns dequantized f32 values —
         what the receivers reconstruct). Scale is per (leading dims) row.

@@ -24,6 +24,12 @@ compressed").
 
 Scan-stacked leaves (leading axis = layers) are compressed **per layer**
 (axis-0-batched top_k), matching the paper's per-layer compression.
+
+Transport is **bucketed** by default (DESIGN.md §11): steps 4-6 coalesce
+across the whole pytree into one flat packed all_gather, one batched
+pack/unpack launch per bucket section, one batched fused-EF launch pair,
+and one pmean of the concatenated dense leaves — the per-leaf schedule
+above survives as ``transport="perleaf"``, the bit-exact reference.
 """
 from __future__ import annotations
 
@@ -34,7 +40,10 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.comm import wire as wire_fmt
-from repro.comm.exchange import check_payload, gather_packed
+from repro.comm.bucket import (build_bucket_plan, decode_buckets,
+                               encode_buckets)
+from repro.comm.exchange import (check_bucket_payload, check_payload,
+                                 gather_packed)
 from repro.kernels import ops
 from .compression import Compressor, block_extract_sparse
 from .telemetry import CompressionTelemetry, TelemetrySums, sparse_own_sums
@@ -64,16 +73,16 @@ def _per_layer_topk(acc2d: jax.Array, k: int):
 
 def _scatter_layers(vals: jax.Array, idx: jax.Array, L: int, d: int,
                     dtype) -> jax.Array:
-    """Scatter (..., L, k) sparse pairs into a dense (L, d) accumulator."""
-    vals = vals.reshape(-1, vals.shape[-1]) if vals.ndim == 2 else vals
-    if vals.ndim == 3:                                  # (W, L, k) gathered
-        W, L_, k = vals.shape
-        lidx = jnp.broadcast_to(jnp.arange(L_)[None, :, None], (W, L_, k))
-        dense = jnp.zeros((L_, d), dtype)
-        return dense.at[lidx, idx].add(vals.astype(dtype))
-    L_, k = vals.shape
-    lidx = jnp.broadcast_to(jnp.arange(L_)[:, None], (L_, k))
-    dense = jnp.zeros((L_, d), dtype)
+    """Scatter (L, k) or gathered (W, L, k) sparse pairs into a dense
+    (L, d) accumulator — the W axis (workers), when present, sums into
+    the same layer rows."""
+    if vals.ndim not in (2, 3):
+        raise ValueError(f"expected (L, k) or (W, L, k), got {vals.shape}")
+    vals = vals.reshape(-1, L, vals.shape[-1])
+    idx = idx.reshape(vals.shape)
+    W, _, k = vals.shape
+    lidx = jnp.broadcast_to(jnp.arange(L)[None, :, None], (W, L, k))
+    dense = jnp.zeros((L, d), dtype)
     return dense.at[lidx, idx].add(vals.astype(dtype))
 
 
@@ -105,6 +114,7 @@ def worker_compress_aggregate(
     stacked_mask: PyTree | None = None,
     gamma_t: jax.Array | None = None,
     telemetry_axes: AxisNames | None = None,
+    transport: str = "bucketed",
 ) -> tuple[PyTree, PyTree, jax.Array, jax.Array, CompressionTelemetry]:
     """Steps 3-7 of Algorithm 3 for a whole gradient pytree.
 
@@ -117,6 +127,16 @@ def worker_compress_aggregate(
     contraction — DESIGN.md §10).  Its dense reductions are fused into the
     Pallas EF block-stats pass on the kernel path; the decoded-side sums
     touch only the k wire entries.
+
+    ``transport`` (DESIGN.md §11): ``"bucketed"`` (default) coalesces the
+    exchange into ONE flat packed ``all_gather`` for every compressed
+    leaf, one batched ``wire_pack``/``wire_unpack`` launch per bucket
+    field section, one batched fused-EF two-pass launch pair for every
+    kernel-path leaf, and ONE ``pmean`` of the concatenated dense small
+    leaves.  ``"perleaf"`` is the reference schedule (one collective and
+    one launch set per leaf) the bucketed path is regression-pinned
+    against: updates, memory, and byte counters bit-exact, telemetry to
+    <= 8 ulp (XLA reduction order across programs — DESIGN.md §11).
 
     ``telemetry_axes``: extra manual mesh axes this call's inputs are
     sharded over WITHOUT being separate dp workers (the nested
@@ -135,6 +155,9 @@ def worker_compress_aggregate(
     collective would have shipped.  For non-adaptive compressors the two
     byte counts coincide.
     """
+    if transport not in ("bucketed", "perleaf"):
+        raise ValueError(f"unknown transport {transport!r} "
+                         "(want 'bucketed' | 'perleaf')")
     W = _dp_size(dp_axes)
     flat_g, treedef = jax.tree.flatten(grads)
     flat_m = treedef.flatten_up_to(memory)
@@ -145,6 +168,65 @@ def worker_compress_aggregate(
 
     if comp.adaptive and gamma_t is None:
         gamma_t = jnp.float32(comp.gamma)
+    exchange = _bucketed_exchange if transport == "bucketed" \
+        else _perleaf_exchange
+    updates, new_mem, wire, eff_wire, sums = exchange(
+        flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t, W)
+    if telemetry_axes is not None:
+        # sums are additive; ratios are not — reduce BEFORE finalizing
+        sums = jax.tree.map(lambda x: jax.lax.psum(x, telemetry_axes), sums)
+    return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
+            eff_wire, sums.finalize())
+
+
+def _leaf_count(comp: Compressor, spec, gamma_t, d: int):
+    """Per-round valid count for one leaf's rows (DESIGN.md §9): the
+    per-block ``k_b_t`` for block-local rows, the row ``k_t`` for flat
+    rows.  None for non-ragged specs."""
+    if not spec.ragged:
+        return None
+    return comp.block_k_t(gamma_t) if spec.local \
+        else comp.k_t_for(d, gamma_t)
+
+
+def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
+                          dp_axes, use_fused, sent, resid, acc2):
+    """Post-gather per-leaf consumer — THE definition of the transport
+    parity contract, shared by both schedules: the mean update, this
+    worker's EF residual (own rows sliced from the gathered decode — no
+    second decode of the own payload), the byte costs, and the
+    decoded-side telemetry sums.
+
+    Returns ``(upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq,
+    own_dot_g)``; masked-beyond-k_t entries are absent from the decoded
+    own rows, so — like quantization error and tie drops — they land in
+    the residual.
+    """
+    mean_dense = _scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
+    wire_add = jnp.float32(L * spec.row_bytes)
+    eff_add = (jnp.float32(L) * spec.effective_row_bytes(count)
+               if spec.ragged else jnp.float32(L * spec.row_bytes))
+    w_idx = _dp_index(dp_axes)
+    own_vals = jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0,
+                                            keepdims=False)
+    own_idx = jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0, keepdims=False)
+    own_dense = _scatter_layers(own_vals, own_idx, L, d, jnp.float32)
+    if use_fused:
+        r = resid + (sent - own_dense)
+    else:
+        r = acc2 - own_dense
+    # telemetry: the decoded-side sums touch only the k wire entries;
+    # sum m'^2 fuses into the residual's own materialization above
+    leaf_own_sq, leaf_dot = sparse_own_sums(own_vals, own_idx, g2f)
+    return (mean_dense.reshape(g.shape), r.reshape(m.shape).astype(m.dtype),
+            wire_add, eff_add, jnp.sum(r * r), leaf_own_sq, leaf_dot)
+
+
+def _perleaf_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
+                      W):
+    """Reference transport: one packed all_gather + one launch set PER
+    LEAF (plus one pmean per dense leaf).  The bucketed transport is
+    regression-pinned bit-exact against this path."""
     use_fused = comp.method == "block_topk" and comp.use_kernel
     updates, new_mem = [], []
     wire = jnp.float32(0.0)
@@ -153,8 +235,7 @@ def worker_compress_aggregate(
     for g, m, stacked in zip(flat_g, flat_m, flat_s):
         g2 = _leaf_2d(g, stacked)
         L, d = g2.shape
-        if comp.method == "none" or d < comp.min_compress_size \
-                or comp.sparse_k(d) >= d:
+        if comp.ships_dense(d):
             acc = m.astype(jnp.float32) + eta * g.astype(jnp.float32)
             upd = jax.lax.pmean(acc, dp_axes)
             updates.append(upd)
@@ -196,14 +277,10 @@ def worker_compress_aggregate(
         # residual is taken against what receivers actually decode, so
         # quantization error AND tie-dropped entries are recycled.
         spec = wire_fmt.WireSpec.for_row(comp, d)
-        if spec.ragged:
-            # per-round valid count (DESIGN.md §9): entries past it are
-            # masked out of the payload behind the count header word
-            count = comp.block_k_t(gamma_t) if spec.local \
-                else comp.k_t_for(d, gamma_t)
-            counts = jnp.broadcast_to(count, (L,))
-        else:
-            count, counts = None, None
+        # per-round valid count (DESIGN.md §9): entries past it are
+        # masked out of the payload behind the count header word
+        count = _leaf_count(comp, spec, gamma_t, d)
+        counts = None if count is None else jnp.broadcast_to(count, (L,))
         payload = wire_fmt.encode_rows(vals, idx, spec, counts=counts)
         check_payload(payload, spec, comp, d)
 
@@ -212,40 +289,149 @@ def worker_compress_aggregate(
             all_pay.reshape(-1, spec.row_words), spec)
         g_vals = g_vals.reshape(W, L, spec.k)
         g_idx = g_idx.reshape(W, L, spec.k)
-        mean_dense = _scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
-        updates.append(mean_dense.reshape(g.shape))
-        wire = wire + jnp.float32(L * spec.row_bytes)
-        eff_wire = eff_wire + (jnp.float32(L) * spec.effective_row_bytes(
-            count) if spec.ragged else jnp.float32(L * spec.row_bytes))
-
-        # EF residual against what receivers actually decoded — this
-        # worker's rows are already in the gathered decode, so slice them
-        # out instead of decoding the own payload a second time.
-        w_idx = _dp_index(dp_axes)
-        own_vals = jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0,
-                                                keepdims=False)
-        own_idx = jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0,
-                                               keepdims=False)
-        own_dense = _scatter_layers(own_vals, own_idx, L, d, jnp.float32)
-        # masked-beyond-k_t entries are absent from own_dense, so — like
-        # quantization error and tie drops — they land in the residual
-        if use_fused:
-            resid = resid + (sent - own_dense)
-        else:
-            resid = acc2 - own_dense
-        new_mem.append(resid.reshape(m.shape).astype(m.dtype))
-        # telemetry: the decoded-side sums touch only the k wire entries;
-        # sum m'^2 fuses into the residual's own materialization above
-        leaf_own_sq, leaf_dot = sparse_own_sums(own_vals, own_idx, g2f)
+        upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq, own_dot = \
+            _consume_decoded_leaf(
+                g, m, g2f, g_vals, g_idx, spec, L, d, count, W, dp_axes,
+                use_fused, sent if use_fused else None,
+                resid if use_fused else None,
+                None if use_fused else acc2)
+        updates.append(upd)
+        new_mem.append(mem_leaf)
+        wire = wire + wire_add
+        eff_wire = eff_wire + eff_add
         sums = sums.add(g_sq=leaf_g_sq, acc_sq=leaf_acc_sq,
-                        resid_sq=jnp.sum(resid * resid),
-                        own_sq=leaf_own_sq, own_dot_g=leaf_dot)
+                        resid_sq=resid_sq, own_sq=own_sq,
+                        own_dot_g=own_dot)
 
-    if telemetry_axes is not None:
-        # sums are additive; ratios are not — reduce BEFORE finalizing
-        sums = jax.tree.map(lambda x: jax.lax.psum(x, telemetry_axes), sums)
-    return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
-            eff_wire, sums.finalize())
+    return updates, new_mem, wire, eff_wire, sums
+
+
+def _bucketed_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
+                       W):
+    """Bucketed transport (DESIGN.md §11): the same per-leaf selection,
+    EF, accounting, and telemetry as :func:`_perleaf_exchange` — but the
+    step's collective/launch schedule is O(1), not O(leaves):
+
+    * ONE batched fused-EF two-pass launch pair over every kernel-path
+      leaf's concatenated block rows (``ops.fused_ef_compress_batched``);
+    * ONE flat packed ``all_gather`` carrying every compressed leaf's
+      exact payload rows back to back (``comm.bucket``), with one
+      batched ``wire_pack``/``wire_unpack`` launch per bucket section;
+    * ONE ``pmean`` of the concatenated dense small leaves.
+
+    Per-leaf float accumulation order (wire/eff bytes, telemetry sums) is
+    preserved, so updates/memory/byte outputs are bit-identical to the
+    per-leaf path (telemetry to <= 8 ulp — see the reduce note below).
+    """
+    use_fused = comp.method == "block_topk" and comp.use_kernel
+    plan = build_bucket_plan([g.shape for g in flat_g], flat_s, comp)
+    lanes = plan.leaves
+    n = len(lanes)
+    comp_ids = list(plan.compressed_ids)
+
+    # ---- selection at the static budget (per-leaf BY DESIGN — the
+    # contraction constant is per layer row; only transport is bucketed)
+    g2f = [None] * n        # (L, d) f32 gradient views (compressed leaves)
+    acc2 = [None] * n       # unfused: (L, d) f32 accumulator
+    sent = [None] * n       # fused: kept entries / EF residual pair
+    resid = [None] * n
+    leaf_g_sq = [None] * n
+    leaf_acc_sq = [None] * n
+    enc_rows = [None] * n   # (vals, idx, counts) per compressed leaf
+    counts = [None] * n     # scalar per-round count (ragged specs)
+    if use_fused and comp_ids:
+        ms = [_leaf_2d(flat_m[i], flat_s[i]).astype(jnp.float32)
+              for i in comp_ids]
+        gs = [_leaf_2d(flat_g[i], flat_s[i]).astype(jnp.float32)
+              for i in comp_ids]
+        # one pass-1 + one pass-2 launch for ALL leaves; thresholds stay
+        # at the BUDGET level exactly as in the per-leaf path
+        outs = ops.fused_ef_compress_batched(
+            ms, gs, eta, comp.geometry_gamma, comp.block, telemetry=True)
+        for i, g2, (s, r, _, moments) in zip(comp_ids, gs, outs):
+            g2f[i], sent[i], resid[i] = g2, s, r
+            # NB: the batched kernel's per-leaf outputs are bit-identical
+            # to per-leaf launches, but THIS reduce may fuse differently
+            # in the two programs — XLA does not pin f32 reduction order
+            # across program shapes, so telemetry parity is a few-ulp
+            # contract while every other output is bit-exact (DESIGN §11)
+            leaf_g_sq[i] = jnp.sum(moments[:, 0])
+            leaf_acc_sq[i] = jnp.sum(moments[:, 1])
+    for i in comp_ids:
+        lane = lanes[i]
+        if use_fused:
+            vals, idx = block_extract_sparse(sent[i], comp)
+        else:
+            g2 = _leaf_2d(flat_g[i], flat_s[i]).astype(jnp.float32)
+            a2 = _leaf_2d(flat_m[i], flat_s[i]).astype(jnp.float32) \
+                + eta * g2
+            g2f[i], acc2[i] = g2, a2
+            leaf_g_sq[i] = jnp.sum(g2 * g2)
+            leaf_acc_sq[i] = jnp.sum(a2 * a2)
+            vals, idx, _ = compress_leaf(a2, comp, flat_s[i])
+        counts[i] = _leaf_count(comp, lane.spec, gamma_t, lane.d)
+        enc_rows[i] = (vals, idx,
+                       None if counts[i] is None
+                       else jnp.broadcast_to(counts[i], (lane.L,)))
+
+    # ---- ONE flat all_gather for every compressed leaf ------------------
+    decoded = [None] * n
+    if plan.total_words:
+        payload = encode_buckets(plan, enc_rows)
+        check_bucket_payload(payload, plan, comp)
+        all_pay = gather_packed(payload, dp_axes)     # (W, total_words)
+        decoded = decode_buckets(plan, all_pay)
+
+    # ---- ONE pmean folds every dense small leaf -------------------------
+    dense_acc = [None] * n
+    dense_mean = [None] * n
+    dense_ids = list(plan.dense_ids)
+    for i in dense_ids:
+        dense_acc[i] = flat_m[i].astype(jnp.float32) \
+            + eta * flat_g[i].astype(jnp.float32)
+    if dense_ids:
+        mean_cat = jax.lax.pmean(
+            jnp.concatenate([dense_acc[i].reshape(-1) for i in dense_ids]),
+            dp_axes)
+        off = 0
+        for i in dense_ids:
+            size = dense_acc[i].size
+            dense_mean[i] = mean_cat[off:off + size].reshape(
+                dense_acc[i].shape)
+            off += size
+
+    # ---- per-leaf consumers, ORIGINAL tree order (the f32 accumulation
+    # order of the byte counters and telemetry sums is part of the
+    # bit-exact parity contract with the per-leaf path)
+    updates, new_mem = [], []
+    wire = jnp.float32(0.0)
+    eff_wire = jnp.float32(0.0)
+    sums = TelemetrySums.zero()
+    for lane, g, m in zip(lanes, flat_g, flat_m):
+        i = lane.index
+        if lane.dense:
+            acc = dense_acc[i]
+            updates.append(dense_mean[i])
+            new_mem.append(jnp.zeros_like(m))
+            wire = wire + jnp.float32(acc.size * acc.dtype.itemsize)
+            eff_wire = eff_wire + jnp.float32(acc.size * acc.dtype.itemsize)
+            sums = sums.add_dense(acc, g)
+            continue
+        spec, L, d = lane.spec, lane.L, lane.d
+        g_vals, g_idx = decoded[i]
+        upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq, own_dot = \
+            _consume_decoded_leaf(
+                g, m, g2f[i], g_vals, g_idx, spec, L, d, counts[i], W,
+                dp_axes, use_fused, sent[i], resid[i], acc2[i])
+        updates.append(upd)
+        new_mem.append(mem_leaf)
+        wire = wire + wire_add
+        eff_wire = eff_wire + eff_add
+        sums = sums.add(g_sq=leaf_g_sq[i], acc_sq=leaf_acc_sq[i],
+                        resid_sq=resid_sq, own_sq=own_sq,
+                        own_dot_g=own_dot)
+
+    return updates, new_mem, wire, eff_wire, sums
 
 
 def dense_aggregate(grads: PyTree, eta: jax.Array,

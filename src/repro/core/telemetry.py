@@ -25,7 +25,10 @@ scalar reductions that ride existing passes (DESIGN.md §10):
 
 The five underlying sums (:class:`TelemetrySums`) are accumulated across
 leaves and turned into ratios once, so telemetry composes over a gradient
-pytree exactly like the byte accounting does.  The heavy reductions
+pytree exactly like the byte accounting does.  The bucketed transport
+(DESIGN.md §11) accumulates the same per-leaf sums in the same tree order
+from its per-leaf bucket slices — f32 accumulation order is part of the
+bit-exact parity contract — so the signal is transport-invariant.  The heavy reductions
 (``sum g^2``, ``sum acc^2``) are fused into the Pallas EF block-stats pass
 (``kernels/ef_topk.ef_stats_telemetry``) — the accumulator is formed on the
 fly and never costs an extra HBM sweep; the decoded-side sums touch only

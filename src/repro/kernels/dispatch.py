@@ -19,7 +19,13 @@ policy, resolved against the active backend:
   grid step;
 * policy ``"backend"`` — kernel on TPU, ``ref`` elsewhere; used for the
   model-side ops (attention, rmsnorm, wkv) where the jnp oracle is what the
-  CPU dry-run is expected to lower.
+  CPU dry-run is expected to lower, and for the wire pack/unpack codec.
+
+The bucketed transport (DESIGN.md §11) reuses the registered ``wire_pack``
+/ ``wire_unpack`` and EF ops at bucket-shaped geometries — whole-pytree
+field streams and concatenated block rows instead of per-leaf calls — so
+one registry entry serves both the per-leaf reference schedule and the
+coalesced launches; no bucket-specific kernels exist to drift.
 
 ``impl="pallas"`` resolves to the backend-appropriate kernel variant, so
 callers (configs' ``use_pallas``) never hard-code interpret mode.  This

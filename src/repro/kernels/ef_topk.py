@@ -39,6 +39,26 @@ ROWS = 256
 COLS = 1024
 
 
+# Interpret-mode row cap: the `_kth_largest` fori_loop re-touches its
+# whole tile every iteration, so off-TPU the tile should sit in L2 —
+# (64, 512) f32 = 128 KiB was the measured optimum on the bucketed
+# transport's concatenated row counts (~30% faster than 256-row tiles).
+# Compiled TPU launches keep ROWS (a VMEM budget, not a cache guess).
+INTERPRET_ROWS = 64
+
+
+def _tile_rows(R: int, interpret: bool) -> int:
+    """Row-tile height for an R-row launch: split the grid EVENLY instead
+    of ``min(cap, R)`` so the last tile carries < n_tiles padding rows.
+    A naive cap wastes up to cap-1 padded rows — on the bucketed
+    transport's concatenated block rows (DESIGN.md §11) that was measured
+    as ~60% dead work for row counts just past a tile boundary.  Every op
+    here is row-local, so the tiling is numerically invisible."""
+    cap = INTERPRET_ROWS if interpret else ROWS
+    n_tiles = -(-R // cap)
+    return -(-R // n_tiles)
+
+
 def _kth_largest(mag: jax.Array, k_b: int) -> jax.Array:
     """k_b-th largest value per row of ``mag`` (rows, C) via iterative
     max-extraction — k_b is small (= gamma*block <= ~32), so this maps to
@@ -93,7 +113,7 @@ def ef_apply(m: jax.Array, g: jax.Array, eta: jax.Array, tau: jax.Array,
     per-block-row thresholds.  Returns (sent, m_new) with m.dtype.
     """
     R, C = m.shape
-    rows = min(ROWS, R)
+    rows = _tile_rows(R, interpret)
     grid = (pl.cdiv(R, rows), pl.cdiv(C, COLS))
     spec = pl.BlockSpec((rows, min(COLS, C)), lambda i, j: (i, j))
     scal = pl.BlockSpec((1,), lambda i, j: (0,))  # eta broadcast to all tiles
@@ -127,7 +147,7 @@ def _block_stats_kernel(x_ref, out_ref, *, k_b: int):
 def block_stats(x: jax.Array, k_b: int, *, interpret: bool = True):
     """Per-block k_b-th largest |x|. x: (nb, C) -> (nb, 1) f32."""
     nb, C = x.shape
-    rows = min(ROWS, nb)
+    rows = _tile_rows(nb, interpret)
     grid = (pl.cdiv(nb, rows),)
     return pl.pallas_call(
         functools.partial(_block_stats_kernel, k_b=k_b),
@@ -170,7 +190,7 @@ def ef_block_stats(m: jax.Array, g: jax.Array, eta: jax.Array, k_b: int,
                    *, interpret: bool = True):
     """Per-block k_b-th largest |m + eta*g|. m, g: (nb, C) -> (nb, 1) f32."""
     nb, C = m.shape
-    rows = min(ROWS, nb)
+    rows = _tile_rows(nb, interpret)
     grid = (pl.cdiv(nb, rows),)
     spec = pl.BlockSpec((rows, C), lambda i: (i, 0))
     return pl.pallas_call(
@@ -192,7 +212,7 @@ def ef_stats_telemetry(m: jax.Array, g: jax.Array, eta: jax.Array, k_b: int,
     per block row).
     """
     nb, C = m.shape
-    rows = min(ROWS, nb)
+    rows = _tile_rows(nb, interpret)
     grid = (pl.cdiv(nb, rows),)
     spec = pl.BlockSpec((rows, C), lambda i: (i, 0))
     out_shape = (jax.ShapeDtypeStruct((nb, 1), jnp.float32),
@@ -227,7 +247,7 @@ def threshold_split(x: jax.Array, tau: jax.Array, *, interpret: bool = True):
     tau: (R, 1) per-block-row thresholds. Returns (sent, residual), x.dtype.
     """
     R, C = x.shape
-    rows = min(ROWS, R)
+    rows = _tile_rows(R, interpret)
     grid = (pl.cdiv(R, rows), pl.cdiv(C, COLS))
     spec = pl.BlockSpec((rows, min(COLS, C)), lambda i, j: (i, j))
     tspec = pl.BlockSpec((rows, 1), lambda i, j: (i, 0))

@@ -16,7 +16,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from . import dispatch, ref
+from . import dispatch, ref, wire_pack
 from .ef_topk import (block_stats, ef_apply, ef_block_stats as
                       _ef_block_stats_kernel, ef_stats_telemetry as
                       _ef_stats_telemetry_kernel, threshold_split as
@@ -204,6 +204,50 @@ def fused_ef_compress(m, g, eta, gamma: float, block: int = 1024, *,
     return _from_blocks(sent, meta), _from_blocks(mnew, meta), tau
 
 
+def fused_ef_compress_batched(ms, gs, eta, gamma: float, block: int = 1024,
+                              *, telemetry: bool = False,
+                              impl: str | None = None):
+    """Batched :func:`fused_ef_compress` over a LIST of (L_i, d_i) leaf
+    pairs — ONE pass-1 launch and ONE pass-2 launch for the whole list
+    (bucket-shaped launches, DESIGN.md §11).
+
+    Every op in the two-pass scheme is block-row-local (blocks never span
+    rows, thresholds/moments are per block row, the EF update is
+    elementwise against its row's tau), so concatenating all leaves' block
+    rows changes the launch geometry and nothing else: the returned list
+    of per-leaf ``(sent, m', tau[, moments])`` tuples is bit-identical to
+    per-leaf :func:`fused_ef_compress` calls.
+    """
+    k_b = max(1, int(round(gamma * block)))
+    blocks_m, blocks_g, metas, offs = [], [], [], [0]
+    for m, g in zip(ms, gs):
+        m2, meta = _to_blocks(m, block)
+        g2, _ = _to_blocks(g, block)
+        blocks_m.append(m2)
+        blocks_g.append(g2)
+        metas.append(meta)
+        offs.append(offs[-1] + m2.shape[0])
+    cat_m = jnp.concatenate(blocks_m, axis=0)
+    cat_g = jnp.concatenate(blocks_g, axis=0)
+    eta = jnp.asarray(eta, jnp.float32)
+    if telemetry:
+        tau, moments = dispatch.call("ef_stats_telemetry", cat_m, cat_g,
+                                     eta, k_b, impl=impl)
+    else:
+        tau = dispatch.call("ef_stats", cat_m, cat_g, eta, k_b, impl=impl)
+    sent, mnew = dispatch.call("ef_update", cat_m, cat_g, eta, tau,
+                               impl=impl)
+    out = []
+    for i, meta in enumerate(metas):
+        rows = slice(offs[i], offs[i + 1])
+        leaf = (_from_blocks(sent[rows], meta),
+                _from_blocks(mnew[rows], meta), tau[rows])
+        if telemetry:
+            leaf = leaf + (moments[rows],)
+        out.append(leaf)
+    return out
+
+
 def threshold_split_blocks(x, tau, block: int = 1024, *,
                            impl: str | None = None):
     """Dense split of x into (sent, residual) against per-block tau.
@@ -265,6 +309,53 @@ def unpack_fields(words, n: int, bits: int, *, counts=None, period: int = 0,
     out = dispatch.call("wire_unpack", words, bits, counts, period,
                         impl=impl)
     return out[:, :n]
+
+
+def pack_fields_stream(fields, bits: int, *, impl: str | None = None):
+    """Pack a FLAT word-aligned field stream — (N,) uint32 with N a
+    multiple of 32//bits — into (N*bits/32,) uint32 words in ONE
+    bucket-shaped launch (DESIGN.md §11).
+
+    Packing is word-local, so this equals row-by-row :func:`pack_fields`
+    on any row structure whose sections are whole words: the concatenated
+    (already count-masked and zero-padded-to-word) field sections of every
+    payload row of every leaf in a bucket go through a single kernel
+    launch, and each leaf slices its exact words back out.
+    """
+    fields = fields.astype(jnp.uint32)
+    if bits >= 32:
+        return fields
+    F = 32 // bits
+    (n,) = fields.shape
+    if n % F:
+        raise ValueError(f"stream of {n} {bits}-bit fields is not "
+                         f"word-aligned (need a multiple of {F})")
+    W = n // F
+    R, C = wire_pack.stream_shape(W)
+    pad = R * C - W
+    if pad:
+        fields = jnp.concatenate(
+            [fields, jnp.zeros((pad * F,), jnp.uint32)])
+    words = dispatch.call("wire_pack", fields.reshape(R, C * F), bits,
+                          None, 0, impl=impl)
+    return words.reshape(-1)[:W]
+
+
+def unpack_fields_stream(words, bits: int, *, impl: str | None = None):
+    """Inverse of :func:`pack_fields_stream`: (W,) uint32 words -> the
+    (W*32/bits,) uint32 field stream, one bucket-shaped launch."""
+    words = words.astype(jnp.uint32)
+    if bits >= 32:
+        return words
+    F = 32 // bits
+    (W,) = words.shape
+    R, C = wire_pack.stream_shape(W)
+    pad = R * C - W
+    if pad:
+        words = jnp.concatenate([words, jnp.zeros((pad,), jnp.uint32)])
+    fields = dispatch.call("wire_unpack", words.reshape(R, C), bits,
+                           None, 0, impl=impl)
+    return fields.reshape(-1)[:W * F]
 
 
 # --------------------------------------------------------------------------

@@ -31,6 +31,21 @@ ROWS = 256
 WORD_CHUNK = 512
 
 
+def stream_shape(n_words: int) -> tuple[int, int]:
+    """(rows, cols) reflow geometry for a FLAT word stream of ``n_words``
+    uint32 words — the bucket-shaped launch (DESIGN.md §11).
+
+    Packing is word-local (word w holds fields [w*F, (w+1)*F) whatever the
+    row structure), so a whole bucket's concatenated field stream can be
+    reshaped row-major into (rows, cols) word tiles, packed/unpacked in
+    ONE kernel launch, and flattened back — each leaf's exact word segment
+    slices out unchanged.  Cols saturate at :data:`WORD_CHUNK` so big
+    buckets fill full (ROWS, WORD_CHUNK) VPU tiles.
+    """
+    cols = min(WORD_CHUNK, max(n_words, 1))
+    return -(-max(n_words, 1) // cols), cols
+
+
 def _field_mask(c_ref, n: int, rows: int, period: int):
     """(rows, n) validity mask for the current grid tile: GLOBAL field
     index j (tile column offset + local column) is valid iff

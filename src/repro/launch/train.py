@@ -98,6 +98,12 @@ def main() -> None:
                     choices=[32, 16, 8, 4],
                     help="wire value width (DESIGN.md §8 packed format)")
     ap.add_argument("--ef-dtype", default="float32")
+    ap.add_argument("--transport", default="bucketed",
+                    choices=["bucketed", "perleaf"],
+                    help="compressed-exchange schedule (DESIGN.md §11): "
+                         "bucketed = ONE flat packed all_gather + batched "
+                         "launches; perleaf = one collective per leaf "
+                         "(bit-exact reference)")
     ap.add_argument("--shard-local-topk", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -129,7 +135,8 @@ def main() -> None:
                 ef_band=args.ef_band),
             eta=args.eta, ef_dtype=args.ef_dtype,
             shard_local_topk=args.shard_local_topk,
-            local_steps=args.local_steps),
+            local_steps=args.local_steps,
+            transport=args.transport),
         microbatches=args.microbatches)
 
     with set_mesh(mesh):

@@ -188,7 +188,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         smask = model.stacked_mask(params)
         updates, new_mem, wire, eff_wire, tel = worker_compress_aggregate(
             delta, mem, jnp.float32(1.0), opt.compressor, dp,
-            stacked_mask=smask, gamma_t=gamma_t)
+            stacked_mask=smask, gamma_t=gamma_t, transport=opt.transport)
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
@@ -307,7 +307,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 inner = compat.shard_map(
                     lambda g, m2, e, gt: worker_compress_aggregate(
                         g, m2, e, opt.compressor, dp, stacked_mask=smask,
-                        gamma_t=gt, telemetry_axes=("model",)),
+                        gamma_t=gt, telemetry_axes=("model",),
+                        transport=opt.transport),
                     mesh=None,  # nested: resolve from the trace context
                     in_specs=(pspecs, pspecs, P(), P()),
                     out_specs=(pspecs, pspecs, P(), P(), P()),
@@ -325,7 +326,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 updates, new_mem, wire, eff_wire, tel = \
                     worker_compress_aggregate(
                         grads, mem, eta, opt.compressor, dp,
-                        stacked_mask=smask, gamma_t=gamma_t)
+                        stacked_mask=smask, gamma_t=gamma_t,
+                        transport=opt.transport)
             new_mem = jax.tree.map(lambda x: x[None], new_mem)
         else:
             updates, wire = dense_aggregate(grads, eta, dp)

@@ -1,0 +1,131 @@
+"""HLO-level regression pins for the bucketed transport (DESIGN.md §11):
+a future change must not silently fall back to per-leaf collectives.
+
+Two levels:
+
+* the lowered exchange itself — ``stablehlo.all_gather`` count equals the
+  plan's gather count (ONE flat gather for every bucket; <= 2 by
+  construction) and the ``pmean`` family (``stablehlo.all_reduce``) for
+  dense small leaves is exactly 1;
+* the lowered 8-virtual-device TRAIN STEP — the all-gather budget stays
+  <= 2 end to end (metric pmeans lower to all_reduce, so the all_gather
+  count is attributable to the exchange alone).
+
+The per-leaf reference transport is lowered side by side to prove the
+counters really count (it shows one collective per leaf).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.comm.bucket import build_bucket_plan
+from repro.core import Compressor
+from repro.core.dcsgd import worker_compress_aggregate
+
+W_WORKERS = 8
+AG = '"stablehlo.all_gather"'
+AR = '"stablehlo.all_reduce"'
+
+
+def _tree(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "w": jax.random.normal(ks[0], (2, 2048)),
+        "v": jax.random.normal(ks[1], (3000,)),
+        "t": jax.random.normal(ks[2], (50,)),        # dense
+        "u": jax.random.normal(ks[3], (40,)),        # dense
+        "big": jax.random.normal(ks[4], (70000,)),   # 32-bit idx (topk)
+    }
+
+
+def _lower_exchange(tree, comp, transport):
+    mesh = jax.make_mesh((W_WORKERS,), ("data",))
+    mem = jax.tree.map(jnp.zeros_like, tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+    f = shard_map(
+        functools.partial(worker_compress_aggregate, comp=comp,
+                          dp_axes=("data",), transport=transport),
+        mesh=mesh, in_specs=(spec, spec, P()),
+        out_specs=(spec, spec, P(), P(), P()), axis_names={"data"},
+        check_vma=False)
+    return jax.jit(f).lower(tree, mem, jnp.float32(0.1)).as_text()
+
+
+@pytest.mark.parametrize("method", ["block_topk", "topk"])
+def test_exchange_collective_counts(key, method):
+    comp = Compressor(gamma=0.05, method=method, block=512,
+                      min_compress_size=64, value_bits=8)
+    tree = _tree(key)
+    leaves = jax.tree.leaves(tree)
+    plan = build_bucket_plan([x.shape for x in leaves],
+                             [x.ndim >= 2 for x in leaves], comp)
+    n_compressed, n_dense = len(plan.compressed_ids), len(plan.dense_ids)
+    assert n_compressed == 3 and n_dense == 2
+    assert len(plan.buckets) <= 2
+
+    txt = _lower_exchange(tree, comp, "bucketed")
+    # ONE flat all_gather for every bucket; ONE pmean for every dense leaf
+    assert txt.count(AG) == plan.n_gathers == 1, txt.count(AG)
+    assert txt.count(AR) == 1, txt.count(AR)
+
+    # the reference schedule shows the counters have teeth: one collective
+    # per leaf (this is the regression the bucketed path deletes)
+    ref = _lower_exchange(tree, comp, "perleaf")
+    assert ref.count(AG) == n_compressed
+    assert ref.count(AR) == n_dense
+
+
+def test_exchange_all_dense_single_pmean(key):
+    comp = Compressor(method="none")
+    txt = _lower_exchange(_tree(key), comp, "bucketed")
+    assert txt.count(AG) == 0
+    assert txt.count(AR) == 1
+
+
+def _lower_train_step(transport):
+    from repro.configs import get_smoke_config
+    from repro.configs.base import (OptimizerConfig, RunConfig,
+                                    ShapeConfig)
+    from repro.core import ArmijoConfig
+    from repro.compat import set_mesh
+    from repro.launch.train_step import (build_train_step, init_opt_state,
+                                         opt_state_shardings)
+    from repro.models import build_model
+    from repro.sharding import param_shardings
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_smoke_config("qwen1.5-4b")
+    m = build_model(cfg)
+    comp = Compressor(gamma=0.1, method="block_topk", block=256,
+                      min_compress_size=64)
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+        optimizer=OptimizerConfig(kind="csgd_asss", armijo=ArmijoConfig(),
+                                  compressor=comp, transport=transport))
+    with set_mesh(mesh):
+        params = m.init(jax.random.PRNGKey(0))
+        params = jax.device_put(params, param_shardings(params, mesh))
+        batch = {"tokens": jnp.zeros((8, 32), jnp.int32)}
+        st = init_opt_state(params, run, 4)
+        st = jax.device_put(st, opt_state_shardings(st, params, mesh, run))
+        step = build_train_step(m, run, mesh)(params, batch)
+        txt = step.lower(params, st, batch).as_text()
+    leaves = jax.tree.leaves(params)
+    plan = build_bucket_plan([x.shape for x in leaves],
+                             [x.ndim >= 2 for x in leaves], comp)
+    return txt, plan
+
+
+def test_train_step_all_gather_budget():
+    """End to end: the lowered train step's all_gather count equals the
+    bucket gather count (<= 2), where the per-leaf schedule pays one per
+    compressed leaf."""
+    txt, plan = _lower_train_step("bucketed")
+    assert 1 <= txt.count(AG) == plan.n_gathers <= 2, txt.count(AG)
+
+    ref, _ = _lower_train_step("perleaf")
+    assert ref.count(AG) == len(plan.compressed_ids) > 2

@@ -384,3 +384,92 @@ def test_pack_roundtrip_with_counts_property(seed, n, bits, period):
     np.testing.assert_array_equal(np.asarray(back)[valid],
                                   np.asarray(fields)[valid])
     assert np.all(np.asarray(back)[~valid] == 0)
+
+
+# ---------------------------------------------------------------------------
+# bucketed transport round-trip (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def check_bucket_roundtrip(seed: int, method: str, value_bits: int,
+                           adaptive: bool):
+    """Random leaf mixes (stacked/unstacked, odd d, 1-5 leaves) encode
+    into the flat bucket payload EXACTLY as the in-order concatenation of
+    the per-leaf codec's payloads, and a 2-worker gathered bucket decodes
+    per leaf bit-identically to per-leaf decode_rows — random per-row
+    counts riding the ragged headers included."""
+    from repro.comm.bucket import (build_bucket_plan, decode_buckets,
+                                   encode_buckets)
+    from repro.comm.exchange import check_bucket_payload
+    from repro.core.dcsgd import _per_layer_topk
+
+    rng = np.random.default_rng(seed)
+    comp = Compressor(gamma=0.05, max_gamma=0.05 if adaptive else 0.0,
+                      method=method, block=256, min_compress_size=64,
+                      value_bits=value_bits)
+    n_leaves = int(rng.integers(1, 6))
+    shapes, stacked = [], []
+    for _ in range(n_leaves):
+        d = int(rng.integers(64, 3000))
+        if rng.integers(2):
+            shapes.append((int(rng.integers(1, 4)), d))
+            stacked.append(True)
+        else:
+            shapes.append((d,))
+            stacked.append(False)
+    plan = build_bucket_plan(shapes, stacked, comp)
+    if not plan.total_words:
+        return                                     # nothing compresses
+
+    def encode_worker(worker_seed):
+        wrng = np.random.default_rng(worker_seed)
+        rows, perleaf = [], []
+        for ln in plan.leaves:
+            if ln.dense:
+                rows.append(None)
+                perleaf.append(None)
+                continue
+            x = jnp.asarray(wrng.standard_normal((ln.L, ln.d))
+                            .astype(np.float32))
+            if method == "block_topk":
+                vals, idx = block_extract_sparse(x, comp)
+            else:
+                vals, idx = _per_layer_topk(x, comp.k_for(ln.d))
+            counts = None
+            if ln.spec.ragged:
+                counts = jnp.asarray(
+                    wrng.integers(1, ln.spec.full_count + 1, ln.L),
+                    jnp.int32)
+            rows.append((vals, idx, counts))
+            perleaf.append(wire_fmt.encode_rows(vals, idx, ln.spec,
+                                                counts=counts))
+        payload = encode_buckets(plan, rows)
+        check_bucket_payload(payload, plan, comp)
+        np.testing.assert_array_equal(
+            np.asarray(payload),
+            np.concatenate([np.asarray(p).reshape(-1)
+                            for p in perleaf if p is not None]))
+        return payload, perleaf
+
+    pay_a, ref_a = encode_worker(seed + 1)
+    pay_b, ref_b = encode_worker(seed + 2)
+    decoded = decode_buckets(plan, jnp.stack([pay_a, pay_b]))
+    for ln in plan.leaves:
+        if ln.dense:
+            assert decoded[ln.index] is None
+            continue
+        v2, i2 = decoded[ln.index]
+        assert v2.shape == (2, ln.L, ln.spec.k)
+        for w, ref_pay in enumerate((ref_a, ref_b)):
+            v_ref, i_ref = wire_fmt.decode_rows(ref_pay[ln.index],
+                                                ln.spec)
+            np.testing.assert_array_equal(np.asarray(v2[w]),
+                                          np.asarray(v_ref))
+            np.testing.assert_array_equal(np.asarray(i2[w]),
+                                          np.asarray(i_ref))
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["block_topk", "topk"]),
+       st.sampled_from([4, 8, 16, 32]), st.booleans())
+def test_bucket_roundtrip_property(seed, method, value_bits, adaptive):
+    check_bucket_roundtrip(seed, method, value_bits, adaptive)

@@ -11,13 +11,13 @@ Two rule sets:
   ``fresh <= factor * baseline`` on the burst-resistant ``min_ms``
   statistic.  Ops that appear only on one side are reported but never
   fail (new ops join the baseline when it is refreshed; this also keeps
-  the diff robust to shape-set changes).  ``--cross-run warn`` demotes
-  violations to warnings: measured on shared 2-vCPU runners, per-op
-  window minima of even ~10 ms interpret-mode ops swing 2-4x between
-  process invocations, so a hard cross-run gate against a
-  committed-elsewhere baseline flakes — CI runs the failing variant as a
-  separate non-blocking step and hard-gates only the within-run rule
-  below.
+  the diff robust to shape-set changes).  This rule is BLOCKING in CI
+  at the default 1.5x now that the ``bench-baseline`` refresh job has
+  held steady on the tier-1 runner class; a tighter 1.2x early-warning
+  variant runs as a separate ``continue-on-error`` step.  ``--cross-run
+  warn`` (kept for local runs against a committed-elsewhere baseline)
+  demotes violations to warnings — per-op window minima of ~10 ms
+  interpret-mode ops can swing 2-4x across heterogeneous machines.
 * **within-run fusion claims** — the ``ef2pass_tel_ratio_*`` records
   (telemetry-fused EF pass-1 vs the plain fused op, DESIGN.md §10) carry
   a PAIRED wall-time ratio measured by ``kernel_bench.paired_ratio`` in
@@ -32,7 +32,10 @@ Two rule sets:
   hard-gated at ``--bucket-factor`` (default 1.0x): the bucketed
   transport must never be SLOWER than the per-leaf schedule it replaced
   (measured ~0.87x on the gated workload, so the 1.0x gate has real
-  headroom while still being a genuine "not slower" claim).
+  headroom while still being a genuine "not slower" claim).  The
+  ``gossip_vs_bucketed_step_*`` records (DESIGN.md §12) ride the same
+  pairing but are informational only — the serverless path's fixed
+  overhead is a design trade, not a regression.
 
 Usage (the CI invocation)::
 
@@ -52,6 +55,7 @@ import sys
 
 TEL_RATIO_PREFIX = "ef2pass_tel_ratio_"
 BUCKET_RATIO_PREFIX = "bucketed_vs_perleaf_step_"
+GOSSIP_RATIO_PREFIX = "gossip_vs_bucketed_step_"
 
 
 def _key(rec: dict) -> tuple:
@@ -86,7 +90,8 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
     failures = []
 
     def is_ratio(k):
-        return k[0].startswith((TEL_RATIO_PREFIX, BUCKET_RATIO_PREFIX))
+        return k[0].startswith((TEL_RATIO_PREFIX, BUCKET_RATIO_PREFIX,
+                                GOSSIP_RATIO_PREFIX))
 
     shared = sorted(k for k in set(baseline) & set(fresh) if not is_ratio(k))
     for k in shared:
@@ -146,6 +151,14 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
         failures.append(
             f"no {BUCKET_RATIO_PREFIX}* records in the fresh run — the "
             f"bucketed-transport claim went unmeasured")
+
+    # informational: gossip-vs-bucketed paired overhead (DESIGN.md §12) —
+    # printed for the trajectory, never gated (cross-transport thresholds
+    # are a design choice, not a regression signal)
+    for (op, backend, shape), ratio in sorted(fresh.items()):
+        if op.startswith(GOSSIP_RATIO_PREFIX):
+            print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
+                  f"(informational)")
     if not shared:
         print("  (no shared (op, backend, shape) keys — cross-run diff "
               "was vacuous; refresh the committed baseline)")

@@ -236,14 +236,16 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
                       min_compress_size=64, value_bits=8)
     tname = f"{n_leaves + 3}leaves"
 
-    def _make_step(transport):
+    def _make_step(transport, ctx=None):
         mesh = jax.make_mesh((1,), ("data",))
         pspec = jax.tree.map(lambda _: P(), tree)
+        n_out = 6 if ctx is not None else 5
         return jax.jit(shard_map(
             functools.partial(worker_compress_aggregate, comp=comp,
-                              dp_axes=("data",), transport=transport),
+                              dp_axes=("data",), transport=transport,
+                              transport_ctx=ctx),
             mesh=mesh, in_specs=(pspec, pspec, P()),
-            out_specs=(pspec, pspec, P(), P(), P()),
+            out_specs=(pspec, pspec) + (P(),) * (n_out - 2),
             axis_names={"data"}))
 
     f_bucketed = _make_step("bucketed")
@@ -261,6 +263,28 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
            "paired bucketed/perleaf wall-time ratio (x1000, dimensionless)",
            min_us=ratio * 1e3)
     out["bucketed_vs_perleaf"] = ratio
+
+    # gossip vs bucketed on the same pytree (DESIGN.md §12): the single-
+    # worker ring(1) graph is degree 0, so this prices the serverless
+    # path's fixed overhead — same selection/encode stage plus the
+    # self-row decode/consensus arithmetic, no collectives on either
+    # side.  Recorded (not gated): the trajectory keeps the overhead
+    # honest without a brittle cross-transport threshold.
+    from repro.comm.gossip import GossipConfig, GossipCtx, GossipState
+    from repro.comm.topology import build_topology
+    ctx = GossipCtx(topology=build_topology("ring", 1),
+                    cfg=GossipConfig(), state=GossipState.init(()))
+    f_gossip = _make_step("gossip", ctx=ctx)
+    us = timeit(f_gossip, tree, mem, eta, n=n_heavy)
+    record("exchange_step", "gossip", tname, us,
+           f"gossip worker_compress_aggregate, {n_leaves + 3} leaves")
+    ratio = paired_ratio(f_gossip, f_bucketed, (tree, mem, eta),
+                         n_pairs=16, repeats=5)
+    record(f"gossip_vs_bucketed_step_{tname}", "default", tname,
+           ratio * 1e3,
+           "paired gossip/bucketed wall-time ratio (x1000, dimensionless)",
+           min_us=ratio * 1e3)
+    out["gossip_vs_bucketed"] = ratio
 
     path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

@@ -35,7 +35,22 @@ reference schedule for A/B timing or debugging::
 
     PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \\
         --mesh 4x2 --compress-method block_topk --transport perleaf
+
+**Serverless** (DESIGN.md §12): ``--transport gossip`` drops the server
+role entirely — the SAME packed payload moves by ``degree`` neighbor
+``ppermute``\\ s on a fixed mixing graph, each worker consensus-averages
+itself + neighbors with an AdaGossip-style adaptive consensus step, and
+per-worker models converge through the topology's spectral gap::
+
+    python examples/distributed_training.py --transport gossip \\
+        --topology ring --consensus-lr 1.0
+
+Byte accounting is PER LINK so transports stay comparable: a gossip
+worker's uplink carries ``degree x`` the per-link payload (ring: 2x),
+where the gather-based transports pay ``(W-1) x`` — the printed
+``wire_bytes/link`` is the same per-payload figure for all of them.
 """
+import argparse
 import os
 import sys
 
@@ -46,9 +61,11 @@ if "XLA_FLAGS" not in os.environ:
 import jax
 
 from repro.compat import set_mesh
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm.gossip import GossipConfig
+from repro.comm.topology import TOPOLOGIES, build_topology
+from repro.comm.transport import transport_names
 from repro.configs import get_smoke_config
 from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
 from repro.core import ArmijoConfig, Compressor
@@ -59,7 +76,8 @@ from repro.models import build_model
 from repro.sharding import param_shardings
 
 
-def run(kind: str, steps=15, gamma=0.02):
+def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
+        gossip=GossipConfig()):
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = get_smoke_config("yi-34b")
     model = build_model(cfg)
@@ -68,7 +86,14 @@ def run(kind: str, steps=15, gamma=0.02):
         optimizer=OptimizerConfig(kind=kind, armijo=ArmijoConfig(),
                                   compressor=Compressor(gamma=gamma,
                                                         min_compress_size=64),
-                                  eta=0.05))
+                                  eta=0.05, transport=transport,
+                                  gossip=gossip))
+    # links per worker uplink: the gossip worker sends its payload to each
+    # of `degree` neighbors; gather/pmean transports send to the W-1 others
+    if kind in ("csgd_asss", "nonadaptive") and transport == "gossip":
+        n_links = build_topology(gossip.topology, 4).degree
+    else:
+        n_links = 4 - 1
     pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=64,
                          global_batch=8)
     with set_mesh(mesh):
@@ -86,21 +111,41 @@ def run(kind: str, steps=15, gamma=0.02):
                 step_fn = build_train_step(model, run_cfg, mesh)(params, batch)
             params, st, m = step_fn(params, st, batch)
             if i % 5 == 0 or i == steps - 1:
+                wire = float(m["wire_bytes"])
                 print(f"  [{kind:9s}] step {i:3d} loss={float(m['loss']):.4f}"
                       f" alpha={float(m['alpha']):.4f}"
-                      f" wire_bytes/worker={float(m['wire_bytes']):.3e}"
+                      f" wire_bytes/link={wire:.3e}"
+                      f" uplink={n_links * wire:.3e}"
                       f" backlog={float(m['ef_backlog']):.3f}"
                       f" cos={float(m['ef_cosine']):.3f}")
     return float(m["wire_bytes"])
 
 
 def main():
-    print("== DCSGD-ASSS (compressed, per-worker Armijo) ==")
-    wire_c = run("csgd_asss")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--transport", default="bucketed",
+                    choices=list(transport_names()),
+                    help="compressed-exchange schedule for the DCSGD run")
+    ap.add_argument("--topology", default="ring",
+                    choices=sorted(TOPOLOGIES),
+                    help="gossip mixing graph (transport=gossip)")
+    ap.add_argument("--consensus-lr", type=float, default=1.0,
+                    help="AdaGossip consensus step numerator")
+    ap.add_argument("--steps", type=int, default=15)
+    args = ap.parse_args()
+    gossip = GossipConfig(topology=args.topology,
+                          consensus_lr=args.consensus_lr)
+
+    mode = "compressed, per-worker Armijo"
+    if args.transport == "gossip":
+        mode += f", serverless {args.topology} gossip"
+    print(f"== DCSGD-ASSS ({mode}) ==")
+    wire_c = run("csgd_asss", steps=args.steps, transport=args.transport,
+                 gossip=gossip)
     print("== dense SGD baseline (uncompressed all-reduce) ==")
-    wire_d = run("dense")
+    wire_d = run("dense", steps=args.steps)
     print(f"\ncommunication saving: {wire_d / wire_c:.1f}x "
-          f"({wire_c:.2e} vs {wire_d:.2e} bytes/worker/step)")
+          f"({wire_c:.2e} vs {wire_d:.2e} bytes/link/step)")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,28 @@
 """Compressed communication: the bit-packed wire format, the packed
 payload exchange that makes ``wire_bytes`` the literal bytes on the mesh
-(DESIGN.md §8), and the bucketed transport that coalesces the per-leaf
-exchange into O(1) collectives and launches (DESIGN.md §11)."""
+(DESIGN.md §8), the bucketed transport that coalesces the per-leaf
+exchange into O(1) collectives and launches (DESIGN.md §11), and the
+transport registry + serverless gossip exchange (DESIGN.md §12).
+
+Import order matters below: ``gossip`` imports ``transport``/``topology``
+/``bucket``, and nothing here imports ``repro.core`` at package level
+(``repro.core.dcsgd`` imports THIS package — the registry's lazy
+``_ensure_registered`` is what closes the loop at call time)."""
 from .bucket import (BucketPlan, build_bucket_plan, decode_buckets,
                      encode_buckets)
 from .exchange import check_bucket_payload, check_payload, gather_packed
 from .wire import WireSpec, decode_rows, encode_rows
+from .transport import (Transport, get_transport, register_transport,
+                        transport_names, unknown_transport_message,
+                        validate_transport)
+from .topology import TOPOLOGIES, Topology, build_topology
+from .gossip import GossipConfig, GossipCtx, GossipState, gossip_mix
 
 __all__ = ["WireSpec", "encode_rows", "decode_rows", "check_payload",
            "check_bucket_payload", "gather_packed", "BucketPlan",
-           "build_bucket_plan", "encode_buckets", "decode_buckets"]
+           "build_bucket_plan", "encode_buckets", "decode_buckets",
+           "Transport", "register_transport", "get_transport",
+           "transport_names", "unknown_transport_message",
+           "validate_transport", "Topology", "TOPOLOGIES",
+           "build_topology", "GossipConfig", "GossipState", "GossipCtx",
+           "gossip_mix"]

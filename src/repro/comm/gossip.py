@@ -1,0 +1,270 @@
+"""Serverless gossip exchange over the bucketed wire format (DESIGN.md §12).
+
+The third registered transport.  Same selection, same EF arithmetic, and
+the same ONE flat uint32 payload buffer as ``transport="bucketed"``
+(DESIGN.md §8/§9/§11) — but no worker ever sees the whole fleet: the
+buffer moves by ``degree`` neighbor ``ppermute``\\ s along a fixed
+:class:`~repro.comm.topology.Topology` instead of one ``all_gather``,
+dense small leaves ride the same buffer bitcast to uint32 instead of a
+``pmean``, and each worker averages only itself plus its neighbors with
+the uniform Metropolis weight ``1/(degree+1)``.
+
+Per round, per worker ``i`` with mixing row ``w_ij``:
+
+1. select/encode ``acc_i = m_i + eta_i * g_i`` at the static budget —
+   byte-identical payload to the bucketed transport
+   (:func:`repro.core.leafmath.select_and_encode`);
+2. exchange payloads with the ``degree`` neighbors (``ppermute`` per
+   direction — ``degree x payload`` bytes on each worker's uplink, vs
+   ``(W-1) x payload`` for the gather);
+3. decode self + neighbors, form the consensus mix
+   ``mix_i = sum_j w_ij decode(p_j)`` and the gossip error
+   ``e_i = mix_i - decode(p_i)``;
+4. EF residual exactly as centralized: ``m_i' = acc_i - decode(p_i)``
+   (wire distortion recycles locally; the EF memory is BIT-IDENTICAL to
+   the bucketed transport on identical inputs — pinned in
+   tests/distributed/test_gossip_exchange.py);
+5. AdaGossip-style adaptive consensus step (arXiv 2404.05919, scalar
+   variant): ``v' = beta v + (1-beta) mean(e_i^2)`` and
+   ``lr_t = min(lr_max, consensus_lr / (sqrt(v') + eps))`` — large
+   consensus disagreement throttles the mixing step the way the
+   gamma controller throttles compression;
+6. this worker's update is ``decode(p_i) + lr_t * e_i`` — with
+   ``lr_t == 1`` exactly the Metropolis-weighted neighborhood mean.
+
+``(v, lr)`` thread through ``DistOptState.gossip`` the way
+``CompressionTelemetry`` threads through ``DistOptState.telemetry``.
+Per-worker parameter copies (workers now genuinely diverge) live next to
+them — see ``launch/train_step.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.leafmath import scatter_layers, select_and_encode
+from repro.core.telemetry import TelemetrySums, sparse_own_sums
+from .bucket import build_bucket_plan, decode_buckets, encode_buckets
+from .exchange import check_bucket_payload
+from .topology import TOPOLOGIES, Topology
+from .transport import register_transport
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipConfig:
+    """Static gossip/consensus hyper-parameters (``OptimizerConfig.gossip``).
+
+    ``consensus_lr`` is the numerator of the adaptive consensus step;
+    ``beta``/``eps`` shape the second-moment EMA of the gossip error;
+    ``lr_max`` caps the step (the cap is what the fixed-step CHOCO-style
+    baseline would use — with a tiny ``v`` the adaptive step saturates
+    there instead of diverging).
+    """
+
+    topology: str = "ring"
+    consensus_lr: float = 1.0
+    beta: float = 0.9
+    eps: float = 1e-8
+    lr_max: float = 1.0
+
+    def __post_init__(self):
+        if self.topology not in TOPOLOGIES:
+            want = " | ".join(f"'{t}'" for t in sorted(TOPOLOGIES))
+            raise ValueError(f"unknown topology {self.topology!r} "
+                             f"(want {want})")
+        if not 0.0 <= self.beta < 1.0:
+            raise ValueError(f"gossip beta must be in [0, 1), "
+                             f"got {self.beta}")
+        for field in ("consensus_lr", "eps", "lr_max"):
+            if getattr(self, field) <= 0.0:
+                raise ValueError(f"gossip {field} must be > 0, "
+                                 f"got {getattr(self, field)}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GossipState:
+    """Carried adaptive-consensus state, one scalar pair per worker."""
+
+    v: jax.Array    # EMA second moment of the gossip error
+    lr: jax.Array   # last applied consensus step (reporting/telemetry)
+
+    @classmethod
+    def init(cls, batch_shape: tuple[int, ...] = (), abstract: bool = False):
+        """Neutral start: zero moment — the first round's step is simply
+        ``min(lr_max, consensus_lr / eps) -> lr_max`` for any sane eps."""
+        def leaf(v):
+            if abstract:
+                return jax.ShapeDtypeStruct(batch_shape, jnp.float32)
+            return jnp.full(batch_shape, v, jnp.float32)
+        return cls(v=leaf(0.0), lr=leaf(0.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class GossipCtx:
+    """Everything the gossip exchange needs beyond the shared interface:
+    the static topology + config, and the carried (traced) state."""
+
+    topology: Topology
+    cfg: GossipConfig
+    state: GossipState
+
+
+def _single_axis(dp_axes) -> str:
+    axes = (dp_axes,) if isinstance(dp_axes, str) else tuple(dp_axes)
+    if len(axes) != 1:
+        raise ValueError(
+            "gossip transport needs a single data-parallel mesh axis "
+            f"(lax.ppermute is single-axis), got {axes!r}")
+    return axes[0]
+
+
+@register_transport("gossip", stateful=True, description=(
+    "serverless neighbor-ppermute exchange with Metropolis consensus "
+    "averaging and an AdaGossip-style adaptive consensus step"))
+def gossip_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
+                    W, *, ctx: GossipCtx):
+    """Steps 4-6 of Algorithm 3 with a gossip consensus round in place of
+    the global mean — see the module docstring for the per-round math."""
+    axis = _single_axis(dp_axes)
+    topo = ctx.topology
+    if topo.n != W:
+        raise ValueError(f"topology {topo.name!r} is built for {topo.n} "
+                         f"workers but the dp axis has {W}")
+    deg = topo.degree
+    plan = build_bucket_plan([g.shape for g in flat_g], flat_s, comp)
+    lanes = plan.leaves
+    n = len(lanes)
+    sel = select_and_encode(flat_g, flat_m, flat_s, eta, comp, gamma_t,
+                            plan)
+
+    # ---- ONE flat buffer: packed payload + bitcast dense small leaves.
+    # Dense leaves cannot pmean here (gossip has no global collective by
+    # contract — the HLO pin is ZERO all_reduce), so their f32 accumulators
+    # ride the same uint32 buffer and mix like everything else.
+    dense_ids = list(plan.dense_ids)
+    dense_acc = [None] * n
+    for i in dense_ids:
+        dense_acc[i] = flat_m[i].astype(jnp.float32) \
+            + eta * flat_g[i].astype(jnp.float32)
+    parts = []
+    if plan.total_words:
+        payload = encode_buckets(plan, sel.enc_rows)
+        check_bucket_payload(payload, plan, comp)
+        parts.append(payload)
+    if dense_ids:
+        dense_cat = jnp.concatenate(
+            [dense_acc[i].reshape(-1) for i in dense_ids])
+        parts.append(jax.lax.bitcast_convert_type(dense_cat, jnp.uint32))
+    buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    # ---- degree ppermutes of the ONE buffer (self row first) -----------
+    rows = [buf] + [jax.lax.ppermute(buf, axis, perm)
+                    for perm in topo.perms]
+    all_rows = jnp.stack(rows)                    # (degree+1, words)
+
+    decoded = [None] * n
+    if plan.total_words:
+        decoded = decode_buckets(plan, all_rows[:, :plan.total_words])
+    mix_dense = [None] * n
+    if dense_ids:
+        dcat = jax.lax.bitcast_convert_type(
+            all_rows[:, plan.total_words:], jnp.float32)
+        mix_cat = jnp.sum(dcat, axis=0) / (deg + 1)
+        off = 0
+        for i in dense_ids:
+            size = dense_acc[i].size
+            mix_dense[i] = mix_cat[off:off + size].reshape(
+                dense_acc[i].shape)
+            off += size
+
+    # ---- per-leaf consumers, ORIGINAL tree order: EF residual and byte /
+    # telemetry accounting use the identical formulas (and f32 accumulation
+    # order) as the centralized transports — wire bytes are PER LINK; the
+    # uplink total is degree x wire (examples/distributed_training.py).
+    new_mem = [None] * n
+    own_upd = [None] * n    # decode(own payload), dense f32
+    gerr = [None] * n       # mix - decode(own): the consensus correction
+    wire = jnp.float32(0.0)
+    eff_wire = jnp.float32(0.0)
+    sums = TelemetrySums.zero()
+    err_sq = jnp.float32(0.0)
+    n_tot = 0
+    for lane, g, m in zip(lanes, flat_g, flat_m):
+        i = lane.index
+        if lane.dense:
+            acc = dense_acc[i]
+            own_upd[i], gerr[i] = acc, mix_dense[i] - acc
+            new_mem[i] = jnp.zeros_like(m)
+            nbytes = jnp.float32(acc.size * acc.dtype.itemsize)
+            wire = wire + nbytes
+            eff_wire = eff_wire + nbytes
+            sums = sums.add_dense(acc, g)
+            err_sq = err_sq + jnp.sum(gerr[i] * gerr[i])
+            n_tot += acc.size
+            continue
+        spec, L, d = lane.spec, lane.L, lane.d
+        g_vals, g_idx = decoded[i]                # (degree+1, L, k)
+        mix = scatter_layers(g_vals, g_idx, L, d, jnp.float32) / (deg + 1)
+        own_vals, own_idx = g_vals[0], g_idx[0]
+        own_dense = scatter_layers(own_vals, own_idx, L, d, jnp.float32)
+        e = mix - own_dense
+        if sel.use_fused:
+            r = sel.resid[i] + (sel.sent[i] - own_dense)
+        else:
+            r = sel.acc2[i] - own_dense
+        new_mem[i] = r.reshape(m.shape).astype(m.dtype)
+        own_upd[i], gerr[i] = own_dense, e
+        wire = wire + jnp.float32(L * spec.row_bytes)
+        eff_wire = eff_wire + (
+            jnp.float32(L) * spec.effective_row_bytes(sel.counts[i])
+            if spec.ragged else jnp.float32(L * spec.row_bytes))
+        own_sq, own_dot = sparse_own_sums(own_vals, own_idx, sel.g2f[i])
+        sums = sums.add(g_sq=sel.leaf_g_sq[i], acc_sq=sel.leaf_acc_sq[i],
+                        resid_sq=jnp.sum(r * r), own_sq=own_sq,
+                        own_dot_g=own_dot)
+        err_sq = err_sq + jnp.sum(e * e)
+        n_tot += L * d
+
+    # ---- AdaGossip adaptive consensus step (scalar second moment) ------
+    cfg, state = ctx.cfg, ctx.state
+    # float(n_tot): a static Python int here can exceed int32 on
+    # billion-parameter trees, which jnp would reject as a traced operand
+    v_new = cfg.beta * state.v \
+        + (1.0 - cfg.beta) * (err_sq / float(n_tot))
+    lr_t = jnp.minimum(jnp.float32(cfg.lr_max),
+                       cfg.consensus_lr / (jnp.sqrt(v_new) + cfg.eps))
+    updates = []
+    for lane, g in zip(lanes, flat_g):
+        i = lane.index
+        u = own_upd[i] + lr_t * gerr[i]
+        updates.append(u if lane.dense else u.reshape(g.shape))
+    return (updates, new_mem, wire, eff_wire, sums,
+            GossipState(v=v_new, lr=lr_t))
+
+
+def gossip_mix(tree, topo: Topology, axis_name: str, lr: float = 1.0):
+    """One UNCOMPRESSED gossip round on a pytree of per-worker values
+    (inside a shard_map manual over ``axis_name``):
+
+        x_i' = x_i + (lr / (degree+1)) * sum_{j in N(i)} (x_j - x_i)
+
+    The difference form makes a constant tree a fixed point BIT-EXACTLY
+    (every ``x_j - x_i`` is literally zero) and matches
+    :meth:`Topology.mix_reference` term for term.  Used by the consensus
+    contraction tests and as the plain-parameter-averaging building block.
+    """
+    w = lr / (topo.degree + 1)
+
+    def mix_leaf(x):
+        acc = None
+        for perm in topo.perms:
+            delta = jax.lax.ppermute(x, axis_name, perm) - x
+            acc = delta if acc is None else acc + delta
+        if acc is None:
+            return x
+        return x + jnp.asarray(w, x.dtype) * acc
+
+    return jax.tree.map(mix_leaf, tree)

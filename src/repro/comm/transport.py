@@ -1,0 +1,113 @@
+"""Transport registry: the ONE source of truth for exchange schedules.
+
+A *transport* is the schedule that moves one round's compressed payload
+across the data-parallel workers inside ``worker_compress_aggregate``
+(repro/core/dcsgd.py).  Historically the valid-name set lived in three
+places at once — an ``if/else`` in dcsgd, a ``choices=`` list in the
+training CLI, and the config docstring — so a new transport silently
+passed config validation until the call failed deep inside the worker
+body.  This module centralizes the names, the dispatch, and the error
+message; ``OptimizerConfig.transport``, the ``--transport`` CLI flag,
+and dcsgd all validate against this registry and nothing else.
+
+The exchange interface (DESIGN.md §12)
+--------------------------------------
+
+Every registered exchange function is called with the flattened gradient
+pytree and must implement steps 4-6 of Algorithm 3 for the whole tree::
+
+    fn(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t, W)
+        -> (updates, new_mem, wire_bytes, effective_wire_bytes, sums)
+
+where ``flat_g`` / ``flat_m`` are lists of gradient / EF-memory leaves,
+``flat_s`` the per-leaf stacked flags, ``comp`` the
+:class:`~repro.core.compression.Compressor`, ``gamma_t`` the traced
+per-round compression level (or None), and ``W`` the dp worker count.
+``updates`` / ``new_mem`` are leaf lists in the same order; ``sums`` is a
+:class:`~repro.core.telemetry.TelemetrySums` (the caller finalizes it).
+
+*Stateful* transports (``stateful=True``, e.g. the gossip exchange)
+additionally take a ``ctx`` keyword (transport-specific context: mixing
+topology + consensus config + carried state) and return a sixth element,
+the new carried state::
+
+    fn(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t, W, ctx=ctx)
+        -> (updates, new_mem, wire, eff_wire, sums, new_state)
+
+``worker_compress_aggregate`` mirrors this arity: it returns a 5-tuple
+for stateless transports and a 6-tuple for stateful ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Transport:
+    """One registered exchange schedule."""
+
+    name: str
+    exchange: Callable
+    stateful: bool = False      # takes ctx=..., returns new state as 6th
+    description: str = ""
+
+
+_REGISTRY: dict[str, Transport] = {}
+
+
+def register_transport(name: str, *, stateful: bool = False,
+                       description: str = ""):
+    """Decorator: register an exchange function under ``name``.
+
+    The decorated function must satisfy the module-docstring interface.
+    Registration is idempotent per name only for the identical function
+    (re-import safety); a second, different function is a bug.
+    """
+    def deco(fn: Callable) -> Callable:
+        prev = _REGISTRY.get(name)
+        if prev is not None and prev.exchange is not fn:
+            raise ValueError(f"transport {name!r} already registered")
+        _REGISTRY[name] = Transport(name, fn, stateful, description)
+        return fn
+    return deco
+
+
+def _ensure_registered() -> None:
+    """Import the modules that register the built-in transports.
+
+    Lazy so this module stays import-cycle-free: dcsgd registers
+    ``bucketed``/``perleaf`` at its import, ``repro.comm.gossip``
+    registers ``gossip``.  By the time any *call* into the registry
+    happens those imports are cheap no-ops or resolve cleanly.
+    """
+    import repro.comm.gossip      # noqa: F401  (registers "gossip")
+    import repro.core.dcsgd       # noqa: F401  (registers "bucketed"/"perleaf")
+
+
+def transport_names() -> tuple[str, ...]:
+    """Sorted valid transport names — feeds CLI ``choices=`` and errors."""
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def unknown_transport_message(name: str) -> str:
+    """THE error text for an invalid transport name, used verbatim by
+    config validation and dcsgd dispatch so the two can never drift."""
+    want = " | ".join(f"'{n}'" for n in transport_names())
+    return f"unknown transport {name!r} (want {want})"
+
+
+def get_transport(name: str) -> Transport:
+    """Resolve a registered transport; raises the canonical ValueError."""
+    _ensure_registered()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(unknown_transport_message(name)) from None
+
+
+def validate_transport(name: str) -> str:
+    """Config-time validation hook (``OptimizerConfig.__post_init__``)."""
+    get_transport(name)
+    return name

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.comm.gossip import GossipConfig
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
 from repro.core.gamma import GammaControllerConfig
@@ -184,12 +185,20 @@ class OptimizerConfig:
     # delta is EF-compressed and exchanged once.  Divides exchange
     # frequency by local_steps.  Requires microbatches == local_steps.
     local_steps: int = 1
-    # transport schedule of the compressed exchange (DESIGN.md §11):
-    # "bucketed" coalesces every leaf into ONE flat packed all_gather +
-    # batched kernel launches + ONE dense pmean; "perleaf" is the
-    # bit-exact reference schedule (one collective per leaf) kept for
-    # parity tests and paired benchmarks.
+    # transport schedule of the compressed exchange, validated against
+    # the repro.comm.transport registry — the ONE source of truth for
+    # valid names (DESIGN.md §11/§12): "bucketed" coalesces every leaf
+    # into ONE flat packed all_gather + batched kernel launches + ONE
+    # dense pmean; "perleaf" is the bit-exact reference schedule (one
+    # collective per leaf) kept for parity tests and paired benchmarks;
+    # "gossip" is the serverless neighbor-ppermute exchange.
     transport: str = "bucketed"
+    # gossip/consensus hyper-parameters; only read when transport="gossip"
+    gossip: GossipConfig = GossipConfig()
+
+    def __post_init__(self):
+        from repro.comm.transport import validate_transport
+        validate_transport(self.transport)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,71 +38,25 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro import compat
 from repro.comm import wire as wire_fmt
 from repro.comm.bucket import (build_bucket_plan, decode_buckets,
                                encode_buckets)
 from repro.comm.exchange import (check_bucket_payload, check_payload,
                                  gather_packed)
+from repro.comm.transport import get_transport, register_transport
 from repro.kernels import ops
 from .compression import Compressor, block_extract_sparse
+from .leafmath import compress_leaf, select_and_encode
+# the leaf math lives in repro.core.leafmath (shared with the gossip
+# transport); the historical underscore names stay importable from here
+from .leafmath import (dp_size as _dp_size, dp_index as _dp_index,
+                       per_layer_topk as _per_layer_topk,
+                       scatter_layers as _scatter_layers,
+                       leaf_2d as _leaf_2d, leaf_count as _leaf_count)
 from .telemetry import CompressionTelemetry, TelemetrySums, sparse_own_sums
 
 PyTree = Any
 AxisNames = Sequence[str] | str
-
-
-def _dp_size(dp_axes: AxisNames):
-    return compat.axis_size(dp_axes)
-
-
-def _dp_index(dp_axes: AxisNames):
-    """This worker's row in the all-gathered leading axis (lax.axis_index
-    handles axis tuples row-major, matching all_gather's stacking order)."""
-    axes = dp_axes if isinstance(dp_axes, str) else tuple(dp_axes)
-    return jax.lax.axis_index(axes)
-
-
-def _per_layer_topk(acc2d: jax.Array, k: int):
-    """Batched exact top-k over the last axis. acc2d: (L, d)."""
-    mag = jnp.abs(acc2d)
-    _, idx = jax.lax.top_k(mag, k)                     # (L, k)
-    vals = jnp.take_along_axis(acc2d, idx, axis=1)     # (L, k)
-    return vals, idx.astype(jnp.int32)
-
-
-def _scatter_layers(vals: jax.Array, idx: jax.Array, L: int, d: int,
-                    dtype) -> jax.Array:
-    """Scatter (L, k) or gathered (W, L, k) sparse pairs into a dense
-    (L, d) accumulator — the W axis (workers), when present, sums into
-    the same layer rows."""
-    if vals.ndim not in (2, 3):
-        raise ValueError(f"expected (L, k) or (W, L, k), got {vals.shape}")
-    vals = vals.reshape(-1, L, vals.shape[-1])
-    idx = idx.reshape(vals.shape)
-    W, _, k = vals.shape
-    lidx = jnp.broadcast_to(jnp.arange(L)[None, :, None], (W, L, k))
-    dense = jnp.zeros((L, d), dtype)
-    return dense.at[lidx, idx].add(vals.astype(dtype))
-
-
-def _leaf_2d(x: jax.Array, stacked: bool) -> jax.Array:
-    """(L, d) per-layer view of a leaf (L = 1 when unstacked)."""
-    if stacked and x.ndim >= 2:
-        return x.reshape(x.shape[0], -1)
-    return x.reshape(1, -1)
-
-
-def compress_leaf(acc: jax.Array, comp: Compressor, stacked: bool):
-    """Per-leaf sparse compression. Returns (vals, idx, (L, d)) flat layout."""
-    flat = _leaf_2d(acc, stacked)
-    L, d = flat.shape
-    if comp.method == "block_topk" and d >= comp.min_compress_size:
-        # block-local selection, batched over layers
-        vals, idx = block_extract_sparse(flat, comp)
-        return vals, idx, (L, d)
-    vals, idx = _per_layer_topk(flat, comp.k_for(d))
-    return vals, idx, (L, d)
 
 
 def worker_compress_aggregate(
@@ -115,7 +69,8 @@ def worker_compress_aggregate(
     gamma_t: jax.Array | None = None,
     telemetry_axes: AxisNames | None = None,
     transport: str = "bucketed",
-) -> tuple[PyTree, PyTree, jax.Array, jax.Array, CompressionTelemetry]:
+    transport_ctx: Any | None = None,
+) -> tuple:
     """Steps 3-7 of Algorithm 3 for a whole gradient pytree.
 
     Returns ``(mean_update, new_memory, wire_bytes, effective_wire_bytes,
@@ -154,10 +109,19 @@ def worker_compress_aggregate(
     residual, and ``effective_wire_bytes`` reports what a ragged
     collective would have shipped.  For non-adaptive compressors the two
     byte counts coincide.
+
+    ``transport_ctx``: transport-specific context, REQUIRED by stateful
+    transports (``"gossip"``: a :class:`repro.comm.gossip.GossipCtx`) and
+    rejected by stateless ones.  Stateful transports make this function
+    return a SIXTH element, the transport's new carried state.
     """
-    if transport not in ("bucketed", "perleaf"):
-        raise ValueError(f"unknown transport {transport!r} "
-                         "(want 'bucketed' | 'perleaf')")
+    tp = get_transport(transport)
+    if tp.stateful and transport_ctx is None:
+        raise ValueError(f"transport {transport!r} is stateful and needs "
+                         "transport_ctx")
+    if not tp.stateful and transport_ctx is not None:
+        raise ValueError(f"transport {transport!r} is stateless; "
+                         "transport_ctx must be None")
     W = _dp_size(dp_axes)
     flat_g, treedef = jax.tree.flatten(grads)
     flat_m = treedef.flatten_up_to(memory)
@@ -168,25 +132,19 @@ def worker_compress_aggregate(
 
     if comp.adaptive and gamma_t is None:
         gamma_t = jnp.float32(comp.gamma)
-    exchange = _bucketed_exchange if transport == "bucketed" \
-        else _perleaf_exchange
-    updates, new_mem, wire, eff_wire, sums = exchange(
-        flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t, W)
+    if tp.stateful:
+        updates, new_mem, wire, eff_wire, sums, new_state = tp.exchange(
+            flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t, W,
+            ctx=transport_ctx)
+    else:
+        updates, new_mem, wire, eff_wire, sums = tp.exchange(
+            flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t, W)
     if telemetry_axes is not None:
         # sums are additive; ratios are not — reduce BEFORE finalizing
         sums = jax.tree.map(lambda x: jax.lax.psum(x, telemetry_axes), sums)
-    return (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
-            eff_wire, sums.finalize())
-
-
-def _leaf_count(comp: Compressor, spec, gamma_t, d: int):
-    """Per-round valid count for one leaf's rows (DESIGN.md §9): the
-    per-block ``k_b_t`` for block-local rows, the row ``k_t`` for flat
-    rows.  None for non-ragged specs."""
-    if not spec.ragged:
-        return None
-    return comp.block_k_t(gamma_t) if spec.local \
-        else comp.k_t_for(d, gamma_t)
+    out = (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
+           eff_wire, sums.finalize())
+    return out + (new_state,) if tp.stateful else out
 
 
 def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
@@ -222,6 +180,8 @@ def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
             wire_add, eff_add, jnp.sum(r * r), leaf_own_sq, leaf_dot)
 
 
+@register_transport("perleaf", description=(
+    "reference schedule: one packed all_gather + one launch set per leaf"))
 def _perleaf_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
                       W):
     """Reference transport: one packed all_gather + one launch set PER
@@ -306,6 +266,8 @@ def _perleaf_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
     return updates, new_mem, wire, eff_wire, sums
 
 
+@register_transport("bucketed", description=(
+    "O(1) collectives: ONE flat packed all_gather + ONE pmean per step"))
 def _bucketed_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
                        W):
     """Bucketed transport (DESIGN.md §11): the same per-leaf selection,
@@ -323,61 +285,25 @@ def _bucketed_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
     preserved, so updates/memory/byte outputs are bit-identical to the
     per-leaf path (telemetry to <= 8 ulp — see the reduce note below).
     """
-    use_fused = comp.method == "block_topk" and comp.use_kernel
     plan = build_bucket_plan([g.shape for g in flat_g], flat_s, comp)
     lanes = plan.leaves
     n = len(lanes)
-    comp_ids = list(plan.compressed_ids)
 
-    # ---- selection at the static budget (per-leaf BY DESIGN — the
-    # contraction constant is per layer row; only transport is bucketed)
-    g2f = [None] * n        # (L, d) f32 gradient views (compressed leaves)
-    acc2 = [None] * n       # unfused: (L, d) f32 accumulator
-    sent = [None] * n       # fused: kept entries / EF residual pair
-    resid = [None] * n
-    leaf_g_sq = [None] * n
-    leaf_acc_sq = [None] * n
-    enc_rows = [None] * n   # (vals, idx, counts) per compressed leaf
-    counts = [None] * n     # scalar per-round count (ragged specs)
-    if use_fused and comp_ids:
-        ms = [_leaf_2d(flat_m[i], flat_s[i]).astype(jnp.float32)
-              for i in comp_ids]
-        gs = [_leaf_2d(flat_g[i], flat_s[i]).astype(jnp.float32)
-              for i in comp_ids]
-        # one pass-1 + one pass-2 launch for ALL leaves; thresholds stay
-        # at the BUDGET level exactly as in the per-leaf path
-        outs = ops.fused_ef_compress_batched(
-            ms, gs, eta, comp.geometry_gamma, comp.block, telemetry=True)
-        for i, g2, (s, r, _, moments) in zip(comp_ids, gs, outs):
-            g2f[i], sent[i], resid[i] = g2, s, r
-            # NB: the batched kernel's per-leaf outputs are bit-identical
-            # to per-leaf launches, but THIS reduce may fuse differently
-            # in the two programs — XLA does not pin f32 reduction order
-            # across program shapes, so telemetry parity is a few-ulp
-            # contract while every other output is bit-exact (DESIGN §11)
-            leaf_g_sq[i] = jnp.sum(moments[:, 0])
-            leaf_acc_sq[i] = jnp.sum(moments[:, 1])
-    for i in comp_ids:
-        lane = lanes[i]
-        if use_fused:
-            vals, idx = block_extract_sparse(sent[i], comp)
-        else:
-            g2 = _leaf_2d(flat_g[i], flat_s[i]).astype(jnp.float32)
-            a2 = _leaf_2d(flat_m[i], flat_s[i]).astype(jnp.float32) \
-                + eta * g2
-            g2f[i], acc2[i] = g2, a2
-            leaf_g_sq[i] = jnp.sum(g2 * g2)
-            leaf_acc_sq[i] = jnp.sum(a2 * a2)
-            vals, idx, _ = compress_leaf(a2, comp, flat_s[i])
-        counts[i] = _leaf_count(comp, lane.spec, gamma_t, lane.d)
-        enc_rows[i] = (vals, idx,
-                       None if counts[i] is None
-                       else jnp.broadcast_to(counts[i], (lane.L,)))
+    # ---- selection at the static budget, shared with the gossip
+    # transport (repro.core.leafmath.select_and_encode): per-leaf BY
+    # DESIGN — the contraction constant is per layer row; only the
+    # collective schedule below is transport-specific
+    sel = select_and_encode(flat_g, flat_m, flat_s, eta, comp, gamma_t,
+                            plan)
+    use_fused = sel.use_fused
+    g2f, acc2, sent, resid = sel.g2f, sel.acc2, sel.sent, sel.resid
+    leaf_g_sq, leaf_acc_sq = sel.leaf_g_sq, sel.leaf_acc_sq
+    counts = sel.counts
 
     # ---- ONE flat all_gather for every compressed leaf ------------------
     decoded = [None] * n
     if plan.total_words:
-        payload = encode_buckets(plan, enc_rows)
+        payload = encode_buckets(plan, sel.enc_rows)
         check_bucket_payload(payload, plan, comp)
         all_pay = gather_packed(payload, dp_axes)     # (W, total_words)
         decoded = decode_buckets(plan, all_pay)

@@ -28,6 +28,9 @@ import jax
 from repro.compat import set_mesh
 import jax.numpy as jnp
 
+from repro.comm.gossip import GossipConfig
+from repro.comm.topology import TOPOLOGIES
+from repro.comm.transport import transport_names
 from repro.configs import ARCH_NAMES, SHAPES, get_config
 from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
 from repro.core.armijo import ArmijoConfig
@@ -224,6 +227,15 @@ def parse_hlo(hlo_text: str) -> dict:
     out = dict(agg["wire"])
     out["total_wire_bytes"] = sum(agg["wire"].values())
     out["counts"] = agg["counts"]
+    # per-LINK bytes: collective-permute totals count every neighbor
+    # direction (the gossip transport issues ``degree`` of them per
+    # exchange), so the per-step figure comparable across transports
+    # divides the permute total by the permute count — one link's
+    # payload — while the star-shaped collectives pass through unchanged
+    perm = out.get("collective-permute", 0.0)
+    n_perm = agg["counts"].get("collective-permute", 0)
+    out["wire_bytes_per_link"] = (out["total_wire_bytes"] - perm) \
+        + (perm / n_perm if n_perm else 0.0)
     return {
         "collectives": out,
         "hlo_matmul_flops": agg["flops"],
@@ -238,7 +250,7 @@ def parse_hlo(hlo_text: str) -> dict:
 def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
                     microbatches=None, ef_host_offload=False,
                     ef_dtype="float32", shard_local_topk=False,
-                    local_steps=1):
+                    local_steps=1, transport="bucketed", topology="ring"):
     if microbatches is None:
         microbatches = 4 if shape.kind == "train" else 1
     # max_backtracks=2 pins the Armijo while loop's HLO trip-count constant
@@ -252,7 +264,9 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
             kind=opt_kind, armijo=ArmijoConfig(max_backtracks=2),
             compressor=Compressor(gamma=gamma),
             ef_host_offload=ef_host_offload, ef_dtype=ef_dtype,
-            shard_local_topk=shard_local_topk, local_steps=local_steps),
+            shard_local_topk=shard_local_topk, local_steps=local_steps,
+            transport=transport,
+            gossip=GossipConfig(topology=topology)),
         microbatches=microbatches)
 
 
@@ -280,6 +294,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               seq_parallel: bool = False, params_2d: bool = False,
               moe_ep: bool = False, capacity_factor: float = None,
               kv_int8: bool = False, local_steps: int = 1,
+              transport: str = "bucketed", topology: str = "ring",
               keep_hlo: bool = False) -> dict:
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
@@ -291,7 +306,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                      "ef_dtype": ef_dtype,
                      "ef_host_offload": ef_host_offload,
                      "seq_parallel": seq_parallel,
-                     "microbatches": microbatches}}
+                     "microbatches": microbatches,
+                     "transport": transport,
+                     "topology": topology}}
     shape = SHAPES[shape_name]
     cfg0 = get_config(arch)
     cfg, note = adapt_for_shape(cfg0, shape)
@@ -313,7 +330,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     model = build_model(cfg)
     run = make_run_config(cfg, shape, opt_kind, gamma, microbatches,
                           ef_host_offload, ef_dtype, shard_local_topk,
-                          local_steps)
+                          local_steps, transport, topology)
     n_chips = mesh.size
 
     with set_mesh(mesh):
@@ -404,6 +421,12 @@ def main() -> None:
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 self-attention KV cache")
     ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--transport", default="bucketed",
+                    choices=list(transport_names()),
+                    help="compressed-exchange schedule (DESIGN.md §11/§12)")
+    ap.add_argument("--topology", default="ring",
+                    choices=sorted(TOPOLOGIES),
+                    help="gossip mixing graph (transport=gossip)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -430,15 +453,19 @@ def main() -> None:
                             moe_ep=args.moe_ep,
                             capacity_factor=args.capacity_factor,
                             kv_int8=args.kv_int8,
-                            local_steps=args.local_steps)
+                            local_steps=args.local_steps,
+                            transport=args.transport,
+                            topology=args.topology)
         except Exception as e:  # record failures — they are bugs to fix
             rec = {"arch": arch, "shape": shape, "status": "FAIL",
                    "error": f"{type(e).__name__}: {e}",
                    "trace": traceback.format_exc()[-2000:]}
         status = rec["status"]
+        colls = rec.get("collectives", {})
         print(f"[{status:7s}] {arch:24s} {shape:12s} "
               f"flops/chip={rec.get('flops_per_chip', 0):.3e} "
-              f"wire={rec.get('collectives', {}).get('total_wire_bytes', 0):.3e} "
+              f"wire={colls.get('total_wire_bytes', 0):.3e} "
+              f"wire/link={colls.get('wire_bytes_per_link', 0):.3e} "
               f"compile={rec.get('compile_s', 0)}s", flush=True)
         records.append(rec)
 

@@ -23,6 +23,9 @@ from repro.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.comm.gossip import GossipConfig
+from repro.comm.topology import TOPOLOGIES
+from repro.comm.transport import transport_names
 from repro.configs import get_config, get_smoke_config
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig)
 from repro.core.armijo import ArmijoConfig
@@ -98,12 +101,29 @@ def main() -> None:
                     choices=[32, 16, 8, 4],
                     help="wire value width (DESIGN.md §8 packed format)")
     ap.add_argument("--ef-dtype", default="float32")
+    # choices come from the transport registry (repro/comm/transport.py)
+    # so the CLI can never drift from the actual registered schedules
     ap.add_argument("--transport", default="bucketed",
-                    choices=["bucketed", "perleaf"],
-                    help="compressed-exchange schedule (DESIGN.md §11): "
+                    choices=list(transport_names()),
+                    help="compressed-exchange schedule (DESIGN.md §11/§12): "
                          "bucketed = ONE flat packed all_gather + batched "
                          "launches; perleaf = one collective per leaf "
-                         "(bit-exact reference)")
+                         "(bit-exact reference); gossip = serverless "
+                         "neighbor-ppermute consensus exchange")
+    # ---- gossip / consensus (transport=gossip, DESIGN.md §12) ----
+    ap.add_argument("--topology", default=GossipConfig.topology,
+                    choices=sorted(TOPOLOGIES),
+                    help="gossip mixing graph over the dp workers")
+    ap.add_argument("--consensus-lr", type=float,
+                    default=GossipConfig.consensus_lr,
+                    help="numerator of the AdaGossip adaptive consensus "
+                         "step (capped at --consensus-lr-max)")
+    ap.add_argument("--consensus-beta", type=float,
+                    default=GossipConfig.beta,
+                    help="EMA decay of the gossip-error second moment")
+    ap.add_argument("--consensus-lr-max", type=float,
+                    default=GossipConfig.lr_max,
+                    help="consensus step cap (the fixed-step baseline)")
     ap.add_argument("--shard-local-topk", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -136,7 +156,11 @@ def main() -> None:
             eta=args.eta, ef_dtype=args.ef_dtype,
             shard_local_topk=args.shard_local_topk,
             local_steps=args.local_steps,
-            transport=args.transport),
+            transport=args.transport,
+            gossip=GossipConfig(topology=args.topology,
+                                consensus_lr=args.consensus_lr,
+                                beta=args.consensus_beta,
+                                lr_max=args.consensus_lr_max)),
         microbatches=args.microbatches)
 
     with set_mesh(mesh):

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm.gossip import GossipCtx, GossipState
+from repro.comm.topology import build_topology
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
 from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
@@ -39,6 +41,20 @@ from repro.sharding import cache_pspecs, dp_axes_of, param_pspecs
 PyTree = Any
 
 
+class GossipOptState(NamedTuple):
+    """Per-worker serverless-mode state (DESIGN.md §12).
+
+    Under ``transport="gossip"`` there is no global mean, so workers'
+    models genuinely diverge between rounds: each worker's parameters
+    live here with a leading (W,) axis (the replicated ``params`` input
+    stays frozen as the common initialization), next to the AdaGossip
+    consensus state carried exactly like ``CompressionTelemetry``.
+    """
+
+    params: PyTree           # per-worker models: leaves (W, *param_shape)
+    state: GossipState       # (W,) adaptive-consensus (v, lr)
+
+
 class DistOptState(NamedTuple):
     step: jax.Array          # () int32
     alpha_prev: jax.Array    # (W,) per-worker carried step size
@@ -47,6 +63,7 @@ class DistOptState(NamedTuple):
     gamma: jax.Array         # (W,) per-worker per-round compression level
     telemetry: CompressionTelemetry  # (W,) per-worker compression health
     cum_eff_bytes: jax.Array         # () cumulative worker-mean eff bytes
+    gossip: Any = ()         # GossipOptState under transport="gossip"
 
 
 def _n_workers(mesh) -> int:
@@ -64,7 +81,15 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
             return jax.ShapeDtypeStruct(shape, ef_dt)
         return jnp.zeros(shape, ef_dt)
 
+    def gossip_params_leaf(p):
+        shape = (n_workers,) + tuple(p.shape)
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, p.dtype)
+        # every worker starts at the common initialization
+        return jnp.broadcast_to(p[None], shape).astype(p.dtype)
+
     needs_mem = opt.kind in ("csgd_asss", "nonadaptive")
+    needs_gossip = needs_mem and opt.transport == "gossip"
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
         (lambda s, d: jnp.zeros(s, d))
     return DistOptState(
@@ -79,6 +104,10 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
                         jnp.float32)),
         telemetry=CompressionTelemetry.init((n_workers,), abstract=abstract),
         cum_eff_bytes=mk((), jnp.float32),
+        gossip=(GossipOptState(
+            params=jax.tree.map(gossip_params_leaf, params),
+            state=GossipState.init((n_workers,), abstract=abstract))
+            if needs_gossip else ()),
     )
 
 
@@ -111,6 +140,12 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
         gamma=vec,
         telemetry=jax.tree.map(lambda _: vec, opt_state.telemetry),
         cum_eff_bytes=rep,
+        gossip=(GossipOptState(
+            params=jax.tree.map(
+                lambda ps: compat.named_sharding(mesh, P(dp_spec, *ps)),
+                pspecs),
+            state=GossipState(v=vec, lr=vec))
+            if opt_state.gossip != () else ()),
     )
 
 
@@ -140,6 +175,26 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
     dp_spec = dp if len(dp) > 1 else dp[0]
     W = _n_workers(mesh)
     micro = run_cfg.microbatches
+
+    gossip_mode = opt.transport == "gossip"
+    topo = None
+    if gossip_mode:
+        if opt.kind not in ("csgd_asss", "nonadaptive"):
+            raise ValueError(
+                f"transport 'gossip' needs a compressing optimizer "
+                f"(csgd_asss | nonadaptive), got kind={opt.kind!r}")
+        if len(dp) != 1:
+            raise ValueError(
+                f"transport 'gossip' needs a single data-parallel mesh "
+                f"axis (lax.ppermute is single-axis), got {dp!r} — use a "
+                f"('data', 'model') mesh, not multi_pod")
+        if opt.local_steps > 1:
+            raise ValueError(
+                "transport 'gossip' does not compose with local_steps > 1")
+        if opt.shard_local_topk:
+            raise ValueError(
+                "transport 'gossip' does not compose with shard_local_topk")
+        topo = build_topology(opt.gossip.topology, W)
 
     def local_loss(params, batch):
         loss, _ = model.loss(params, batch)
@@ -224,6 +279,14 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         ema = opt_state.n_evals_ema[0]
         gamma_prev = opt_state.gamma[0]
         tel_prev = jax.tree.map(lambda x: x[0], opt_state.telemetry)
+
+        # serverless mode: the replicated ``params`` input is only the
+        # common initialization — this worker optimizes ITS model copy
+        # from DistOptState.gossip (workers genuinely diverge; the
+        # topology's mixing contracts the disagreement each round)
+        base_params = params
+        if gossip_mode:
+            params = jax.tree.map(lambda x: x[0], opt_state.gossip.params)
 
         # ---- local iterations (Qsparse-local-style, beyond-paper) -------
         if run_cfg.optimizer.local_steps > 1 and \
@@ -315,6 +378,16 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                     axis_names={"model"}, check_vma=False)
                 updates, new_mem, wire, eff_wire, tel = inner(grads, mem,
                                                               eta, gamma_t)
+            elif gossip_mode:
+                ctx = GossipCtx(
+                    topology=topo, cfg=opt.gossip,
+                    state=jax.tree.map(lambda x: x[0],
+                                       opt_state.gossip.state))
+                updates, new_mem, wire, eff_wire, tel, gos_state = \
+                    worker_compress_aggregate(
+                        grads, mem, eta, opt.compressor, dp,
+                        stacked_mask=smask, gamma_t=gamma_t,
+                        transport=opt.transport, transport_ctx=ctx)
             else:
                 # covers shard_local_topk on 0.4.x too: there the training
                 # body is already manual over 'model' (compat.
@@ -344,6 +417,17 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
+        if gossip_mode:
+            # the per-worker model advances in DistOptState.gossip; the
+            # replicated params output stays the frozen initialization
+            # (its out_spec asserts replication — diverged values there
+            # would be undefined behavior)
+            new_gossip = GossipOptState(
+                params=jax.tree.map(lambda x: x[None], new_params),
+                state=jax.tree.map(lambda x: x[None], gos_state))
+            new_params = base_params
+        else:
+            new_gossip = opt_state.gossip
         new_state = DistOptState(
             step=opt_state.step + 1,
             alpha_prev=new_alpha[None],
@@ -352,6 +436,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             gamma=gamma_t[None],
             telemetry=jax.tree.map(lambda x: x[None], tel),
             cum_eff_bytes=cum_eff,
+            gossip=new_gossip,
         )
         return new_params, new_state, metrics
 
@@ -370,7 +455,11 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             memory=(jax.tree.map(lambda _: lead, params_like)
                     if opt.kind in ("csgd_asss", "nonadaptive") else ()),
             n_evals_ema=lead, gamma=lead,
-            telemetry=tel_spec, cum_eff_bytes=rep)
+            telemetry=tel_spec, cum_eff_bytes=rep,
+            gossip=(GossipOptState(
+                params=jax.tree.map(lambda _: lead, params_like),
+                state=GossipState(v=lead, lr=lead))
+                if gossip_mode else ()))
         metrics_spec = {k: rep for k in
                         ("loss", "grad_sqnorm", "alpha", "n_evals",
                          "wire_bytes", "effective_wire_bytes",

@@ -13,6 +13,13 @@ Two levels:
 
 The per-leaf reference transport is lowered side by side to prove the
 counters really count (it shows one collective per leaf).
+
+The gossip transport (DESIGN.md §12) gets the same treatment: the lowered
+exchange must contain exactly ``degree`` ``stablehlo.collective_permute``
+ops (one neighbor ``ppermute`` per graph edge class — ring: 2) and ZERO
+all_gathers / all_reduces: dense small leaves ride the permuted payload
+buffer, and a global collective sneaking back in would silently
+re-centralize the serverless path.
 """
 import functools
 
@@ -29,6 +36,7 @@ from repro.core.dcsgd import worker_compress_aggregate
 W_WORKERS = 8
 AG = '"stablehlo.all_gather"'
 AR = '"stablehlo.all_reduce"'
+CP = '"stablehlo.collective_permute"'
 
 
 def _tree(key):
@@ -77,6 +85,40 @@ def test_exchange_collective_counts(key, method):
     ref = _lower_exchange(tree, comp, "perleaf")
     assert ref.count(AG) == n_compressed
     assert ref.count(AR) == n_dense
+
+
+def _lower_gossip(tree, comp, topology):
+    from repro.comm.gossip import GossipConfig, GossipCtx, GossipState
+    from repro.comm.topology import build_topology
+
+    mesh = jax.make_mesh((W_WORKERS,), ("data",))
+    ctx = GossipCtx(topology=build_topology(topology, W_WORKERS),
+                    cfg=GossipConfig(topology=topology),
+                    state=GossipState.init(()))
+    mem = jax.tree.map(jnp.zeros_like, tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+    f = shard_map(
+        functools.partial(worker_compress_aggregate, comp=comp,
+                          dp_axes=("data",), transport="gossip",
+                          transport_ctx=ctx),
+        mesh=mesh, in_specs=(spec, spec, P()),
+        out_specs=(spec, spec, P(), P(), P(), P()), axis_names={"data"},
+        check_vma=False)
+    return jax.jit(f).lower(tree, mem, jnp.float32(0.1)).as_text(), ctx
+
+
+@pytest.mark.parametrize("topology,degree", [("ring", 2), ("exp", 5)])
+def test_gossip_exchange_collective_counts(key, topology, degree):
+    """Gossip lowers to exactly `degree` neighbor permutes and NOTHING
+    global — no all_gather, no all_reduce (dense leaves ride the permuted
+    payload buffer instead of a pmean)."""
+    comp = Compressor(gamma=0.05, method="block_topk", block=512,
+                      min_compress_size=64, value_bits=8)
+    txt, ctx = _lower_gossip(_tree(key), comp, topology)
+    assert ctx.topology.degree == degree
+    assert txt.count(CP) == degree, txt.count(CP)
+    assert txt.count(AG) == 0, txt.count(AG)
+    assert txt.count(AR) == 0, txt.count(AR)
 
 
 def test_exchange_all_dense_single_pmean(key):

@@ -473,3 +473,51 @@ def check_bucket_roundtrip(seed: int, method: str, value_bits: int,
        st.sampled_from([4, 8, 16, 32]), st.booleans())
 def test_bucket_roundtrip_property(seed, method, value_bits, adaptive):
     check_bucket_roundtrip(seed, method, value_bits, adaptive)
+
+
+# ---- gossip topology invariants (DESIGN.md §12) -------------------------
+
+@given(st.sampled_from(["ring", "torus", "exp"]),
+       st.sampled_from([4, 8, 16]))
+def test_mixing_matrix_invariants_property(name, n):
+    """Every registered topology builder yields a symmetric, doubly
+    stochastic mixing matrix with a strictly positive spectral gap —
+    the three conditions under which gossip averaging converges to the
+    true mean at a geometric rate."""
+    from repro.comm.topology import build_topology
+
+    topo = build_topology(name, n)
+    m = topo.mixing_matrix()
+    assert m.shape == (n, n)
+    np.testing.assert_array_equal(m, m.T)
+    ones = np.ones(n)
+    np.testing.assert_allclose(m @ ones, ones, atol=1e-12)
+    np.testing.assert_allclose(ones @ m, ones, atol=1e-12)
+    assert np.all(m >= 0.0)
+    assert topo.spectral_gap() > 0.0
+    # every row mixes self + degree neighbors at the uniform weight
+    assert np.count_nonzero(m[0]) == topo.degree + 1
+    np.testing.assert_allclose(m[m > 0], topo.mix_weight)
+
+
+@given(st.integers(0, 2**31 - 1),
+       st.sampled_from(["ring", "torus", "exp"]),
+       st.sampled_from([4, 8, 16]))
+def test_gossip_constant_fixed_point_property(seed, name, n):
+    """A consensus-reached (constant-over-workers) state is a BIT-EXACT
+    fixed point of the gossip round: the difference form makes every
+    ``z_j - z_i`` literally zero before any weight multiplies it."""
+    from repro.comm.topology import build_topology
+
+    topo = build_topology(name, n)
+    rng = np.random.default_rng(seed)
+    row = rng.standard_normal(17).astype(np.float32)
+    z = np.broadcast_to(row, (n, 17)).copy()
+    np.testing.assert_array_equal(topo.mix_reference(z), z)
+    # and one round strictly contracts a NON-constant state (gap > 0)
+    z2 = rng.standard_normal((n, 17)).astype(np.float32)
+
+    def err(a):
+        return np.max(np.abs(a - a.mean(0)))
+
+    assert err(topo.mix_reference(z2)) < err(z2)

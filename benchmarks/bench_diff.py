@@ -56,6 +56,7 @@ import sys
 TEL_RATIO_PREFIX = "ef2pass_tel_ratio_"
 BUCKET_RATIO_PREFIX = "bucketed_vs_perleaf_step_"
 GOSSIP_RATIO_PREFIX = "gossip_vs_bucketed_step_"
+FED_STEP_PREFIX = "fed_cohort_step_"
 
 
 def _key(rec: dict) -> tuple:
@@ -159,6 +160,18 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
         if op.startswith(GOSSIP_RATIO_PREFIX):
             print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
                   f"(informational)")
+
+    # informational: federated cohort simulation throughput (DESIGN.md
+    # §13) — clients/sec derived from the burst-resistant window minimum;
+    # a capacity trajectory, not a gate (it still rides the cross-run
+    # rule above once the record lands in the committed baseline)
+    for (op, backend, shape), ms in sorted(fresh.items()):
+        if not op.startswith(FED_STEP_PREFIX):
+            continue
+        n_clients = shape[0] if isinstance(shape[0], int) else 0
+        rate = n_clients / (ms / 1e3) if ms > 0 else float("inf")
+        print(f"  {op:36s} {str(shape):18s} {ms:10.4f} ms  "
+              f"({rate:,.0f} clients/s, informational)")
     if not shared:
         print("  (no shared (op, backend, shape) keys — cross-run diff "
               "was vacuous; refresh the committed baseline)")

@@ -286,6 +286,37 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
            min_us=ratio * 1e3)
     out["gossip_vs_bucketed"] = ratio
 
+    # ---- federated cohort step (DESIGN.md §13) --------------------------
+    # The vmap'd heterogeneous-client exchange, single device (dp_axes=
+    # None: the whole cohort local, no collectives — what scales here is
+    # the batched selection/encode, so clients/sec is the honest axis).
+    # Informational in bench_diff: simulation throughput is a capacity
+    # number, not a fusion claim.
+    from repro.fed.clients import cohort_compress_aggregate
+
+    comp_fed = Compressor(gamma=0.02, method="topk", min_compress_size=64,
+                          value_bits=32, use_kernel=False, max_gamma=0.2)
+    cohort_sizes = [16, 64] if smoke else [64, 256, 1024]
+    f_fed = jax.jit(functools.partial(
+        cohort_compress_aggregate, comp=comp_fed, dp_axes=None,
+        aggregation="support"))
+    for nc in cohort_sizes:
+        gf = {"w": jax.random.normal(jax.random.fold_in(key, 500 + nc),
+                                     (nc, 2, 1024)),
+              "v": jax.random.normal(jax.random.fold_in(key, 501 + nc),
+                                     (nc, 4096))}
+        mf = jax.tree.map(jnp.zeros_like, gf)
+        eta_c = jnp.full((nc,), 0.1, jnp.float32)
+        gamma_c = jnp.linspace(0.02, 0.2, nc, dtype=jnp.float32)
+        ones = jnp.ones((nc,), jnp.float32)
+        us = timeit(lambda g, m, e, gc, p: f_fed(
+            g, m, e, participation=p, gamma_c=gc),
+            gf, mf, eta_c, gamma_c, ones, n=n_heavy)
+        record(f"fed_cohort_step_{nc}c", "default", (nc,), us,
+               f"cohort exchange, {nc} clients, "
+               f"{nc / (us[0] / 1e6):,.0f} clients/s median")
+        out[f"fed_cohort_step_{nc}c"] = us[0]
+
     path = out_path or os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
         "BENCH_kernels.json")

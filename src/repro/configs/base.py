@@ -161,6 +161,59 @@ SHAPES = {
 
 
 @dataclasses.dataclass(frozen=True)
+class FederatedConfig:
+    """Federated cohort simulation (DESIGN.md §13, repro/fed/).
+
+    ``n_clients`` > 0 turns the train step into a cohort round: each dp
+    worker ``vmap``s ``n_clients / W`` simulated clients (per-client EF
+    memory, gamma controller, and Armijo step in ``DistOptState.fed``)
+    through the compressed exchange, ONE all_gather + ONE psum for the
+    whole cohort.  Client participation is sampled host-side per round
+    (repro/fed/sampling.py) and enters the batch as a replicated
+    ``"participation"`` mask.
+    """
+
+    n_clients: int = 0            # 0 = disabled (plain dp training)
+    clients_per_round: int = 0    # fixed sampler: 0 -> all clients
+    sampling: str = "fixed"       # fixed | bernoulli
+    participation_rate: float = 1.0   # bernoulli per-client probability
+    straggler_rate: float = 0.0   # drop each selected client with this p
+    # "support" divides each coordinate by its nonzero-support count
+    # across participants (fed_dropout_avg-style — fixes the dense mean
+    # averaging zeros into unsent coordinates); "mean" keeps the
+    # zero-averaging dense mean as the reference (repro/fed/aggregate.py)
+    aggregation: str = "support"
+    # per-client gamma controllers (fixed | linear schedules; the linear
+    # ramp advances on each client's OWN participation counter, so
+    # clients genuinely carry heterogeneous k_t)
+    per_client_gamma: bool = True
+    dirichlet_alpha: float = 0.0  # >0: non-IID client data skew
+    seed: int = 0                 # sampling stream seed
+
+    @property
+    def enabled(self) -> bool:
+        return self.n_clients > 0
+
+    def __post_init__(self):
+        from repro.fed.aggregate import validate_aggregation
+        from repro.fed.sampling import validate_sampler
+        validate_sampler(self.sampling)
+        validate_aggregation(self.aggregation)
+        if self.n_clients < 0:
+            raise ValueError(f"n_clients must be >= 0, got {self.n_clients}")
+        if not 0 <= self.clients_per_round <= self.n_clients:
+            raise ValueError(
+                f"clients_per_round={self.clients_per_round} out of range "
+                f"for n_clients={self.n_clients}")
+        if not 0.0 <= self.participation_rate <= 1.0:
+            raise ValueError(f"participation_rate must be in [0, 1], got "
+                             f"{self.participation_rate}")
+        if not 0.0 <= self.straggler_rate < 1.0:
+            raise ValueError(f"straggler_rate must be in [0, 1), got "
+                             f"{self.straggler_rate}")
+
+
+@dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
     kind: str = "csgd_asss"       # csgd_asss | nonadaptive | sgd | sls | dense
     armijo: ArmijoConfig = ArmijoConfig()
@@ -195,10 +248,19 @@ class OptimizerConfig:
     transport: str = "bucketed"
     # gossip/consensus hyper-parameters; only read when transport="gossip"
     gossip: GossipConfig = GossipConfig()
+    # federated cohort simulation (DESIGN.md §13): n_clients > 0 vmaps a
+    # client cohort above the dp mesh with per-client EF/gamma state and
+    # support-weighted aggregation of the decoded top-k payloads
+    federated: FederatedConfig = FederatedConfig()
 
     def __post_init__(self):
         from repro.comm.transport import validate_transport
         validate_transport(self.transport)
+        if self.federated.enabled and self.transport == "gossip":
+            raise ValueError(
+                "federated cohort simulation does not compose with "
+                "transport='gossip' — the cohort has its own one-gather "
+                "collective schedule (DESIGN.md §13)")
 
 
 @dataclasses.dataclass(frozen=True)

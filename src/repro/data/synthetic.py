@@ -10,6 +10,15 @@ Three generators:
   exactly (interpolation holds by construction).
 * ``teacher_classification`` — images/labels from a fixed random teacher so
   an over-parameterized student can interpolate (paper's NN experiments).
+
+Non-IID federated shards (DESIGN.md §13): ``TokenPipeline.
+dirichlet_alpha`` tilts each shard's unigram distribution by a
+Dirichlet-weighted reweighting keyed ONLY on ``(seed, shard)`` — never
+on ``step`` or ``n_shards`` — so the ``(seed, step, shard)``
+determinism contract extends verbatim to heterogeneous clients and
+survives n_shards refactors (pinned in tests/test_property.py).
+``dirichlet_label_shards`` is the classic label-skew partitioner for
+the classification generators.
 """
 from __future__ import annotations
 
@@ -17,6 +26,10 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
+
+# SeedSequence domain tag for the per-shard Dirichlet tilt stream —
+# independent of the per-(seed, step, shard) batch streams.
+_DIRICHLET_TAG = 0xD161_C4E7
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,11 +40,36 @@ class TokenPipeline:
     seed: int = 0
     n_shards: int = 1
     shard: int = 0
+    # > 0: non-IID shards — per-shard Dirichlet(alpha) reweighting of the
+    # zipf unigrams, keyed on (seed, shard) only.  alpha -> inf recovers
+    # the IID zipf stream; small alpha concentrates each shard's mass on
+    # a few shard-specific symbols (federated label/feature skew).
+    dirichlet_alpha: float = 0.0
 
     @property
     def local_batch(self) -> int:
         assert self.global_batch % self.n_shards == 0
         return self.global_batch // self.n_shards
+
+    def unigram_probs(self) -> np.ndarray:
+        """This shard's unigram distribution: zipf, Dirichlet-tilted when
+        ``dirichlet_alpha`` > 0.  A pure function of (seed, shard,
+        dirichlet_alpha, vocab_size) — step- and n_shards-independent by
+        construction, which is what makes the determinism regression in
+        tests/test_property.py hold for non-IID shards."""
+        V = self.vocab_size
+        probs = 1.0 / np.arange(1, V + 1)
+        probs /= probs.sum()
+        if self.dirichlet_alpha > 0:
+            trng = np.random.default_rng(np.random.SeedSequence(
+                [self.seed, _DIRICHLET_TAG, self.shard]))
+            # gamma weights ~ the un-normalized Dirichlet sample; the
+            # floor guards tiny-alpha underflow to an all-zero draw
+            w = np.maximum(trng.gamma(self.dirichlet_alpha, 1.0, size=V),
+                           1e-300)
+            probs = probs * w
+            probs /= probs.sum()
+        return probs
 
     def batch(self, step: int) -> dict:
         """Deterministic batch for (step, shard). CPU-side numpy; returns
@@ -39,10 +77,7 @@ class TokenPipeline:
         rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, step, self.shard]))
         B, S, V = self.local_batch, self.seq_len, self.vocab_size
-        # zipf unigrams
-        ranks = np.arange(1, V + 1)
-        probs = 1.0 / ranks
-        probs /= probs.sum()
+        probs = self.unigram_probs()
         base = rng.choice(V, size=(B, S), p=probs)
         # order-2 structure: with prob .5, token t = (t-1 + t-2) % V
         mix = rng.random((B, S)) < 0.5
@@ -108,3 +143,37 @@ def class_batch(x, y, batch_size: int, step: int, seed: int = 0):
     rng = np.random.default_rng(np.random.SeedSequence([seed, step]))
     idx = rng.integers(0, x.shape[0], batch_size)
     return {"x": x[idx], "y": y[idx]}
+
+
+def dirichlet_label_shards(labels, n_shards: int, alpha: float,
+                           seed: int = 0) -> np.ndarray:
+    """Classic federated label-skew partition: for each class, shard
+    proportions ~ Dirichlet(alpha * 1) decide how its samples split.
+
+    Returns ``shard_of`` (n,) int32 — a complete partition (every index
+    lands on exactly one shard).  Small ``alpha`` concentrates each
+    class on few shards (strong non-IID); large ``alpha`` approaches the
+    uniform IID split.  Deterministic in (labels, n_shards, alpha, seed).
+    """
+    labels = np.asarray(labels)
+    if n_shards <= 0:
+        raise ValueError(f"n_shards must be positive, got {n_shards}")
+    if alpha <= 0:
+        raise ValueError(f"alpha must be positive, got {alpha}")
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, _DIRICHLET_TAG]))
+    shard_of = np.empty(labels.shape[0], np.int32)
+    for c in np.unique(labels):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        p = rng.dirichlet(np.full(n_shards, alpha))
+        # largest-remainder apportionment of len(idx) samples to shards
+        quota = p * len(idx)
+        counts = np.floor(quota).astype(np.int64)
+        short = len(idx) - counts.sum()
+        if short:
+            counts[np.argsort(quota - counts)[::-1][:short]] += 1
+        bounds = np.cumsum(counts)[:-1]
+        for s, chunk in enumerate(np.split(idx, bounds)):
+            shard_of[chunk] = s
+    return shard_of

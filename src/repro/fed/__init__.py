@@ -1,0 +1,31 @@
+"""Federated cohort simulation tier (DESIGN.md §13).
+
+A cohort layer ABOVE the dp mesh: each data-parallel worker ``vmap``s
+``C = n_clients / W`` simulated clients through the existing §8/§9
+compressed exchange, so one 8-device host stands in for hundreds of
+heterogeneous federated clients per round.
+
+* :mod:`repro.fed.sampling`  — host-side deterministic participation
+  masks (Bernoulli / fixed-size sampling, straggler dropout).
+* :mod:`repro.fed.aggregate` — sparsity-aware support-weighted
+  aggregation of decoded top-k payloads (``fed_dropout_avg``-style),
+  with the dense zero-averaging mean retained as the reference.
+* :mod:`repro.fed.clients`   — per-client EF memory / gamma / Armijo
+  state and the cohort exchange itself (ONE all_gather + ONE psum for
+  the whole cohort, regardless of client count).
+"""
+from .aggregate import (AGGREGATIONS, aggregate_decoded,
+                        scatter_with_support, support_weighted_mean,
+                        zero_averaged_mean)
+from .clients import (ClientState, cohort_compress_aggregate,
+                      init_client_state, local_participation,
+                      per_client_wire_bytes)
+from .sampling import (SAMPLERS, ZeroParticipationError,
+                       participation_mask)
+
+__all__ = [
+    "AGGREGATIONS", "SAMPLERS", "ClientState", "ZeroParticipationError",
+    "aggregate_decoded", "cohort_compress_aggregate", "init_client_state",
+    "local_participation", "participation_mask", "per_client_wire_bytes",
+    "scatter_with_support", "support_weighted_mean", "zero_averaged_mean",
+]

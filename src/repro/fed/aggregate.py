@@ -1,0 +1,87 @@
+"""Sparsity-aware aggregation of decoded top-k client payloads
+(DESIGN.md §13, ``fed_dropout_avg``-style).
+
+The dense pmean the dp exchange applies divides every coordinate's sum
+by the FULL worker count — with top-k payloads that averages implicit
+zeros into every coordinate a client never sent, shrinking the update by
+roughly the per-coordinate sparsity (the defect called out in
+ROADMAP.md).  With 8 homogeneous workers and EF the bias is survivable;
+with hundreds of partially-participating clients it collapses the
+effective step size.
+
+``aggregation="support"`` fixes it: each coordinate's sum is divided by
+its **nonzero-support count** — how many *participating* clients shipped
+a nonzero decoded value there.  Support is computed from the decoded
+values themselves, so block-padding clamp entries and masked-beyond-k_t
+tails (both decode to exactly 0.0) never count, and no extra wire field
+is needed.  Coordinates nobody sent get 0 (no update), not 0/0.
+
+``aggregation="mean"`` keeps the zero-averaging dense mean as the
+reference.  When every participant sends every coordinate the two are
+the same division on the same operands — bit-exact, pinned in
+``tests/test_compression.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.leafmath import scatter_layers
+
+AGGREGATIONS = ("support", "mean")
+
+
+def validate_aggregation(name: str) -> None:
+    if name not in AGGREGATIONS:
+        raise ValueError(f"unknown aggregation {name!r} "
+                         f"(want one of {AGGREGATIONS})")
+
+
+def scatter_with_support(vals: jax.Array, idx: jax.Array,
+                         weights: jax.Array, L: int, d: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Scatter (N, L, k) decoded client rows into a dense (L, d) sum and
+    its per-coordinate support count.
+
+    ``weights``: (N,) 0/1 participation — non-participants contribute to
+    neither.  Support counts clients with a NONZERO decoded value at the
+    coordinate, so decode-to-zero entries (ragged tails, padding clamps,
+    values quantized to zero) are invisible, matching what receivers
+    actually apply.
+    """
+    w = weights.astype(jnp.float32).reshape(-1, 1, 1)
+    total = scatter_layers(vals * w, idx, L, d, jnp.float32)
+    nonzero = (vals != 0.0).astype(jnp.float32) * w
+    support = scatter_layers(nonzero, idx, L, d, jnp.float32)
+    return total, support
+
+
+def support_weighted_mean(total: jax.Array,
+                          support: jax.Array) -> jax.Array:
+    """total / support where supported, 0 elsewhere (never 0/0)."""
+    return jnp.where(support > 0.0,
+                     total / jnp.maximum(support, 1.0),
+                     jnp.zeros_like(total))
+
+
+def zero_averaged_mean(total: jax.Array,
+                       n_participants: jax.Array) -> jax.Array:
+    """The dense-pmean reference: unsent coordinates average as zeros."""
+    n = jnp.maximum(jnp.asarray(n_participants, jnp.float32), 1.0)
+    return total / n
+
+
+def aggregate_decoded(vals: jax.Array, idx: jax.Array, weights: jax.Array,
+                      L: int, d: int, n_participants: jax.Array,
+                      aggregation: str) -> jax.Array:
+    """One leaf's aggregated (L, d) update from all N decoded client rows.
+
+    When support equals ``n_participants`` at every coordinate (every
+    participant sent every coordinate — gamma at budget, 32-bit values)
+    the two modes perform the identical division and agree bit-exactly.
+    """
+    validate_aggregation(aggregation)
+    total, support = scatter_with_support(vals, idx, weights, L, d)
+    if aggregation == "support":
+        return support_weighted_mean(total, support)
+    return zero_averaged_mean(total, n_participants)

@@ -1,0 +1,278 @@
+"""Per-client optimizer state and the vmap'd cohort compressed exchange
+(DESIGN.md §13).
+
+Each dp worker simulates ``C = n_clients / W`` clients by ``vmap``-ing
+the EXISTING selection/encode stage (``repro.core.leafmath.
+select_and_encode`` + ``repro.comm.bucket.encode_buckets`` — the same
+§8/§9/§11 wire math every transport runs) over a per-client leading
+axis, then moves every client's payload on the SAME O(1) collective
+schedule the bucketed dp transport uses:
+
+* ONE flat ``all_gather`` of the (C, total_words) client payload block —
+  gathered to (W*C, total_words), i.e. the whole cohort's ragged
+  payloads ride one fixed-shape collective exactly like heterogeneous
+  per-worker k_t does on the dp path;
+* ONE ``psum`` carrying the concatenated participation-weighted dense
+  small leaves AND the effective-byte counter (always exactly one
+  all_reduce, dense leaves or not).
+
+Client IDs map to gather rows as ``worker * C + c`` (``lax.axis_index``
+over the dp axes is row-major, matching ``all_gather`` stacking), so the
+host-built participation mask — replicated, never sharded — indexes the
+gathered decode directly and no collective is ever needed to agree on
+who participated.
+
+The cohort forces ``use_kernel=False``: the Pallas EF kernels run in
+interpret mode off-TPU and do not batch under ``vmap``; the pure-jnp
+selection path is bit-compatible wire-wise and vmaps freely (the wire
+pack/unpack codec dispatches to its jnp reference off-TPU already).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.bucket import (build_bucket_plan, decode_buckets,
+                               encode_buckets)
+from repro.comm.exchange import check_bucket_payload, gather_packed
+from repro.core.gamma import gamma_init
+from repro.core.leafmath import (dp_index, dp_size, scatter_layers,
+                                 select_and_encode)
+from .aggregate import aggregate_decoded, validate_aggregation
+
+PyTree = Any
+AxisNames = Sequence[str] | str
+
+
+class ClientState(NamedTuple):
+    """Per-client carried optimizer state, leaves client-leading.
+
+    Stored in ``DistOptState.fed`` with GLOBAL (n_clients, ...) leaves
+    sharded over the dp axes on dim 0; inside the worker each field is
+    the local (C, ...) slice.  Only participating clients advance: EF
+    memory, gamma, the round counter, and the carried Armijo step of a
+    non-participant are bit-frozen through the round.
+    """
+
+    memory: PyTree        # per-client EF: leaves (C, *param_shape)
+    gamma: jax.Array      # (C,) per-client per-round compression level
+    rounds: jax.Array     # (C,) int32 participation counter (drives the
+                          # per-client linear gamma schedule)
+    alpha: jax.Array      # (C,) per-client carried Armijo step size
+
+
+def init_client_state(params: PyTree, opt, n_clients: int,
+                      abstract: bool = False) -> ClientState:
+    """Initial :class:`ClientState` with (n_clients, ...) leaves.
+
+    ``opt`` duck-types :class:`repro.configs.base.OptimizerConfig`
+    (reads ``ef_dtype``, ``armijo.alpha0``, ``gamma_controller``,
+    ``compressor``).
+    """
+    ef_dt = jnp.dtype(opt.ef_dtype)
+
+    def mem_leaf(p):
+        shape = (n_clients,) + tuple(p.shape)
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, ef_dt)
+        return jnp.zeros(shape, ef_dt)
+
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
+        (lambda s, d: jnp.zeros(s, d))
+    return ClientState(
+        memory=jax.tree.map(mem_leaf, params),
+        gamma=(mk((n_clients,), jnp.float32) if abstract else
+               jnp.full((n_clients,),
+                        gamma_init(opt.gamma_controller, opt.compressor),
+                        jnp.float32)),
+        rounds=mk((n_clients,), jnp.int32),
+        alpha=(mk((n_clients,), jnp.float32) if abstract else
+               jnp.full((n_clients,), opt.armijo.alpha0, jnp.float32)),
+    )
+
+
+def local_participation(mask: jax.Array, dp_axes: AxisNames | None,
+                        n_local: int) -> jax.Array:
+    """This worker's (C,) slice of the replicated (W*C,) cohort mask."""
+    m = jnp.asarray(mask, jnp.float32)
+    if dp_axes is None:
+        return m
+    w = dp_index(dp_axes)
+    return jax.lax.dynamic_slice_in_dim(m, w * n_local, n_local)
+
+
+def per_client_wire_bytes(plan) -> int:
+    """Static uplink bytes ONE participating client transmits per round:
+    its flat packed payload plus its dense small leaves (f32)."""
+    dense = sum(_size(ln.shape) for ln in plan.leaves if ln.dense)
+    return plan.total_words * 4 + dense * 4
+
+
+def _size(shape: Sequence[int]) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def cohort_compress_aggregate(
+    grads: PyTree,
+    memory: PyTree,
+    eta_c: jax.Array,
+    comp,
+    dp_axes: AxisNames | None,
+    participation: jax.Array,
+    gamma_c: jax.Array | None = None,
+    *,
+    stacked_mask: PyTree | None = None,
+    aggregation: str = "support",
+    impl: str | None = None,
+) -> tuple:
+    """The cohort round: per-client select/encode under ``vmap``, ONE
+    gather of every client's payload, support-weighted decode.
+
+    ``grads`` / ``memory``: leaves client-leading ``(C, *shape)`` — this
+    worker's local cohort.  ``eta_c``: per-client step sizes ``(C,)`` (a
+    scalar broadcasts).  ``participation``: the REPLICATED global
+    ``(W*C,)`` 0/1 mask from :func:`repro.fed.sampling.
+    participation_mask` — client ``w*C + c`` is worker w's c-th row.
+    ``gamma_c``: per-client traced compression levels ``(C,)`` (adaptive
+    compressors; heterogeneous per-client k_t ride the same fixed-shape
+    gather via the §9 valid-count headers).  ``dp_axes=None`` runs the
+    whole cohort collective-free on one device (W=1).
+
+    Returns ``(updates, new_memory, wire_bytes, effective_wire_bytes)``:
+    ``updates`` is the aggregated dense tree (leaves ``(*shape,)``, the
+    same on every worker), ``new_memory`` the per-client EF tree —
+    participants recycle ``acc - decode(own payload)`` exactly like the
+    dp path (own rows sliced from the gathered decode), non-participants
+    are untouched.  ``wire_bytes`` prices the semantic uplink: only
+    participants transmit, so it is ``n_participants *``
+    :func:`per_client_wire_bytes`; ``effective_wire_bytes`` is the
+    participant sum of per-client §9 ragged byte costs.
+    """
+    validate_aggregation(aggregation)
+    # vmap-safe selection: see module docstring
+    comp = dataclasses.replace(comp, use_kernel=False)
+    W = dp_size(dp_axes) if dp_axes is not None else 1
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(memory)
+    if not flat_g:
+        raise ValueError("empty gradient tree")
+    C = flat_g[0].shape[0]
+    N = W * C
+    if stacked_mask is None:
+        flat_s = [leaf.ndim - 1 >= 2 for leaf in flat_g]
+    else:
+        flat_s = treedef.flatten_up_to(stacked_mask)
+    part = jnp.asarray(participation, jnp.float32)
+    if part.shape != (N,):
+        raise ValueError(f"participation mask is {part.shape}, cohort "
+                         f"has {N} clients ({W} workers x {C})")
+    eta_c = jnp.broadcast_to(jnp.asarray(eta_c, jnp.float32), (C,))
+    if gamma_c is None:
+        gamma_c = jnp.full((C,), comp.gamma if comp.adaptive else 0.0,
+                           jnp.float32)
+
+    shapes = [g.shape[1:] for g in flat_g]
+    plan = build_bucket_plan(shapes, flat_s, comp)
+    lanes = plan.leaves
+    n = len(lanes)
+    pl = local_participation(part, dp_axes, C)           # (C,)
+    n_part = jnp.sum(part)                               # replicated scalar
+
+    # ---- per-client selection + encode, ONE vmap over the cohort --------
+    def encode_one(gs, ms, eta, gamma_t):
+        sel = select_and_encode(list(gs), list(ms), flat_s, eta, comp,
+                                gamma_t, plan)
+        payload = (encode_buckets(plan, sel.enc_rows, impl=impl)
+                   if plan.total_words else jnp.zeros((0,), jnp.uint32))
+        accs, dense_accs = [], []
+        eff = jnp.float32(0.0)
+        for lane, g, m in zip(lanes, gs, ms):
+            if lane.dense:
+                accs.append(None)
+                dense_accs.append(m.astype(jnp.float32)
+                                  + eta * g.astype(jnp.float32))
+                eff = eff + jnp.float32(_size(lane.shape) * 4)
+            else:
+                accs.append(sel.acc2[lane.index])        # (L, d) f32
+                dense_accs.append(None)
+                spec = lane.spec
+                if spec.ragged:
+                    eff = eff + jnp.float32(lane.L) * \
+                        spec.effective_row_bytes(sel.counts[lane.index])
+                else:
+                    eff = eff + jnp.float32(lane.L * spec.row_bytes)
+        return payload, accs, dense_accs, eff
+
+    payload_c, acc_c, dense_c, eff_c = jax.vmap(encode_one)(
+        tuple(flat_g), tuple(flat_m), eta_c, gamma_c)
+
+    # ---- ONE gather: the whole cohort's payload block -------------------
+    decoded = [None] * n
+    if plan.total_words:
+        check_bucket_payload(payload_c[0], plan, comp)
+        if dp_axes is None:
+            all_pay = payload_c                          # (N, total_words)
+        else:
+            all_pay = gather_packed(payload_c, dp_axes).reshape(
+                N, plan.total_words)
+        decoded = decode_buckets(plan, all_pay, impl=impl)
+
+    w_idx = dp_index(dp_axes) if dp_axes is not None else 0
+
+    updates: list = [None] * n
+    new_mem: list = [None] * n
+
+    # ---- dense small leaves + eff counter: ONE psum ---------------------
+    # (dense rows reach every participant in full, so support equals
+    # n_participants at every coordinate and both aggregations are the
+    # same division — one code path, bit-consistent with "support")
+    dense_ids = list(plan.dense_ids)
+    vec_parts = []
+    for i in dense_ids:
+        acc = dense_c[i]                                 # (C, *shape)
+        wl = pl.reshape((C,) + (1,) * (acc.ndim - 1))
+        vec_parts.append(jnp.sum(acc * wl, axis=0).reshape(-1))
+        keep = wl > 0.0
+        new_mem[i] = jnp.where(keep, 0.0, flat_m[i].astype(jnp.float32)
+                               ).astype(flat_m[i].dtype)
+    vec_parts.append((pl @ eff_c).reshape(1))
+    vec = jnp.concatenate(vec_parts)
+    if dp_axes is not None:
+        vec = jax.lax.psum(vec, dp_axes)
+    eff_wire = vec[-1]
+    off = 0
+    for i in dense_ids:
+        size = _size(lanes[i].shape)
+        updates[i] = (vec[off:off + size]
+                      / jnp.maximum(n_part, 1.0)).reshape(lanes[i].shape)
+        off += size
+
+    # ---- compressed leaves: support-weighted aggregate + per-client EF --
+    for lane in lanes:
+        if lane.dense:
+            continue
+        i, L, d = lane.index, lane.L, lane.d
+        vals, idx = decoded[i]                           # (N, L, k)
+        agg = aggregate_decoded(vals, idx, part, L, d, n_part, aggregation)
+        updates[i] = agg.reshape(lane.shape)
+        # own decode sliced from the gather — no second decode, exactly
+        # the dp-path EF contract (_consume_decoded_leaf)
+        own_vals = jax.lax.dynamic_slice_in_dim(vals, w_idx * C, C, 0)
+        own_idx = jax.lax.dynamic_slice_in_dim(idx, w_idx * C, C, 0)
+        own_dense = jax.vmap(
+            lambda v, ix: scatter_layers(v, ix, L, d, jnp.float32))(
+            own_vals, own_idx)                           # (C, L, d)
+        m3 = flat_m[i].astype(jnp.float32).reshape(C, L, d)
+        keep = pl.reshape(C, 1, 1) > 0.0
+        r = jnp.where(keep, acc_c[i] - own_dense, m3)
+        new_mem[i] = r.reshape(flat_m[i].shape).astype(flat_m[i].dtype)
+
+    wire = n_part * jnp.float32(per_client_wire_bytes(plan))
+    return (treedef.unflatten(updates), treedef.unflatten(new_mem),
+            wire, eff_wire)

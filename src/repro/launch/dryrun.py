@@ -32,7 +32,8 @@ from repro.comm.gossip import GossipConfig
 from repro.comm.topology import TOPOLOGIES
 from repro.comm.transport import transport_names
 from repro.configs import ARCH_NAMES, SHAPES, get_config
-from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
+from repro.configs.base import (FederatedConfig, OptimizerConfig, RunConfig,
+                                ShapeConfig)
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
 from repro.launch.mesh import make_production_mesh
@@ -250,9 +251,12 @@ def parse_hlo(hlo_text: str) -> dict:
 def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
                     microbatches=None, ef_host_offload=False,
                     ef_dtype="float32", shard_local_topk=False,
-                    local_steps=1, transport="bucketed", topology="ring"):
+                    local_steps=1, transport="bucketed", topology="ring",
+                    n_clients=0, aggregation="support"):
     if microbatches is None:
         microbatches = 4 if shape.kind == "train" else 1
+    if n_clients:
+        microbatches = 1   # each client IS a batch row group
     # max_backtracks=2 pins the Armijo while loop's HLO trip-count constant
     # to the paper's expected ~2 condition evaluations per step (we measure
     # 1.7-1.9 on real runs), so the trip-count-aware roofline charges the
@@ -266,8 +270,24 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
             ef_host_offload=ef_host_offload, ef_dtype=ef_dtype,
             shard_local_topk=shard_local_topk, local_steps=local_steps,
             transport=transport,
-            gossip=GossipConfig(topology=topology)),
+            gossip=GossipConfig(topology=topology),
+            federated=FederatedConfig(n_clients=n_clients,
+                                      aggregation=aggregation)),
         microbatches=microbatches)
+
+
+def federate_input_specs(batch_like, n_clients: int):
+    """Reshape abstract batch specs to the cohort layout: every data leaf
+    (B, ...) -> (n_clients, B/n_clients, ...) + the participation row."""
+    out = {}
+    for k, v in batch_like.items():
+        assert v.shape[0] % n_clients == 0, \
+            f"batch dim {v.shape[0]} must divide across {n_clients} clients"
+        out[k] = jax.ShapeDtypeStruct(
+            (n_clients, v.shape[0] // n_clients) + tuple(v.shape[1:]),
+            v.dtype)
+    out["participation"] = jax.ShapeDtypeStruct((n_clients,), jnp.float32)
+    return out
 
 
 def adapt_for_shape(cfg, shape: ShapeConfig):
@@ -295,6 +315,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               moe_ep: bool = False, capacity_factor: float = None,
               kv_int8: bool = False, local_steps: int = 1,
               transport: str = "bucketed", topology: str = "ring",
+              n_clients: int = 0, aggregation: str = "support",
               keep_hlo: bool = False) -> dict:
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
@@ -330,7 +351,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     model = build_model(cfg)
     run = make_run_config(cfg, shape, opt_kind, gamma, microbatches,
                           ef_host_offload, ef_dtype, shard_local_topk,
-                          local_steps, transport, topology)
+                          local_steps, transport, topology,
+                          n_clients, aggregation)
     n_chips = mesh.size
 
     with set_mesh(mesh):
@@ -343,6 +365,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             import math as _m
             W = _m.prod(mesh.shape[a] for a in dp_axes_of(mesh))
             batch_like = model.input_specs(shape)
+            if n_clients:
+                batch_like = federate_input_specs(batch_like, n_clients)
             opt_like = init_opt_state(params_like, run, W, abstract=True)
             step = build_train_step(model, run, mesh)(params_like, batch_like)
             lowered = step.lower(params_like, opt_like, batch_like)
@@ -427,6 +451,12 @@ def main() -> None:
     ap.add_argument("--topology", default="ring",
                     choices=sorted(TOPOLOGIES),
                     help="gossip mixing graph (transport=gossip)")
+    ap.add_argument("--n-clients", type=int, default=0,
+                    help="> 0: lower the federated cohort train step "
+                         "(n-clients/W vmapped clients per dp worker)")
+    ap.add_argument("--aggregation", default="support",
+                    choices=["support", "mean"],
+                    help="cohort aggregation (federated mode)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -455,7 +485,9 @@ def main() -> None:
                             kv_int8=args.kv_int8,
                             local_steps=args.local_steps,
                             transport=args.transport,
-                            topology=args.topology)
+                            topology=args.topology,
+                            n_clients=args.n_clients,
+                            aggregation=args.aggregation)
         except Exception as e:  # record failures — they are bugs to fix
             rec = {"arch": arch, "shape": shape, "status": "FAIL",
                    "error": f"{type(e).__name__}: {e}",

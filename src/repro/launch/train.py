@@ -18,6 +18,7 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -27,11 +28,13 @@ from repro.comm.gossip import GossipConfig
 from repro.comm.topology import TOPOLOGIES
 from repro.comm.transport import transport_names
 from repro.configs import get_config, get_smoke_config
-from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig)
+from repro.configs.base import (FederatedConfig, OptimizerConfig, RunConfig,
+                                ShapeConfig)
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
 from repro.core.gamma import GammaControllerConfig
 from repro.data.synthetic import TokenPipeline
+from repro.fed.sampling import participation_mask
 from repro.launch.train_step import (build_train_step, init_opt_state,
                                      opt_state_shardings)
 from repro.models import build_model
@@ -125,6 +128,34 @@ def main() -> None:
                     default=GossipConfig.lr_max,
                     help="consensus step cap (the fixed-step baseline)")
     ap.add_argument("--shard-local-topk", action="store_true")
+    # ---- federated cohort simulation (DESIGN.md §13) ----
+    ap.add_argument("--n-clients", type=int, default=0,
+                    help="> 0: federated cohort simulation — vmap "
+                         "n-clients/W simulated clients per dp worker, "
+                         "each with its own non-IID shard, EF memory and "
+                         "gamma controller")
+    ap.add_argument("--clients-per-round", type=int, default=0,
+                    help="fixed-size sampling: participants per round "
+                         "(0 = all clients)")
+    ap.add_argument("--client-sampling", default="fixed",
+                    choices=["fixed", "bernoulli"],
+                    help="per-round participation sampler (fed/sampling.py)")
+    ap.add_argument("--participation-rate", type=float, default=1.0,
+                    help="bernoulli sampling: per-client participation "
+                         "probability")
+    ap.add_argument("--straggler-rate", type=float, default=0.0,
+                    help="probability a sampled client drops out "
+                         "(straggler model, applied after sampling)")
+    ap.add_argument("--aggregation", default="support",
+                    choices=["support", "mean"],
+                    help="cohort aggregation: 'support' divides each "
+                         "coordinate by its nonzero-support count; 'mean' "
+                         "is the zero-averaging dense-pmean reference")
+    ap.add_argument("--dirichlet-alpha", type=float, default=0.0,
+                    help="> 0: non-IID client shards via per-client "
+                         "Dirichlet(alpha) unigram tilt (data/synthetic.py)")
+    ap.add_argument("--fed-seed", type=int, default=0,
+                    help="seed for participation sampling + client shards")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -160,7 +191,16 @@ def main() -> None:
             gossip=GossipConfig(topology=args.topology,
                                 consensus_lr=args.consensus_lr,
                                 beta=args.consensus_beta,
-                                lr_max=args.consensus_lr_max)),
+                                lr_max=args.consensus_lr_max),
+            federated=FederatedConfig(
+                n_clients=args.n_clients,
+                clients_per_round=args.clients_per_round,
+                sampling=args.client_sampling,
+                participation_rate=args.participation_rate,
+                straggler_rate=args.straggler_rate,
+                aggregation=args.aggregation,
+                dirichlet_alpha=args.dirichlet_alpha,
+                seed=args.fed_seed)),
         microbatches=args.microbatches)
 
     with set_mesh(mesh):
@@ -177,18 +217,51 @@ def main() -> None:
             start = meta.get("step", 0)
             print(f"resumed from step {start}")
 
-        pipe = TokenPipeline(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
-                             global_batch=args.global_batch)
+        fed = run.optimizer.federated
         bspec = NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))
+        rep_sh = NamedSharding(mesh, P())
+        if fed.enabled:
+            if args.global_batch % fed.n_clients:
+                raise SystemExit(
+                    f"--global-batch {args.global_batch} must divide "
+                    f"evenly across --n-clients {fed.n_clients}")
+            # one shard-aware pipeline per client: client c IS shard c of
+            # the (seed, step, shard)-deterministic stream, Dirichlet-
+            # tilted per client when --dirichlet-alpha > 0
+            cpipes = [TokenPipeline(
+                vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                global_batch=args.global_batch, seed=fed.seed,
+                n_shards=fed.n_clients, shard=c,
+                dirichlet_alpha=fed.dirichlet_alpha)
+                for c in range(fed.n_clients)]
+
+            def make_batch(step):
+                rows = [p.batch_with_aux(step, cfg) for p in cpipes]
+                b = {k: jnp.stack([r[k] for r in rows]) for k in rows[0]}
+                b["participation"] = participation_mask(
+                    fed.n_clients, step, seed=fed.seed, mode=fed.sampling,
+                    clients_per_round=fed.clients_per_round,
+                    rate=fed.participation_rate,
+                    straggler_rate=fed.straggler_rate)
+                return b
+        else:
+            pipe = TokenPipeline(vocab_size=cfg.vocab_size,
+                                 seq_len=args.seq_len,
+                                 global_batch=args.global_batch)
+
+            def make_batch(step):
+                return pipe.batch_with_aux(step, cfg)
 
         def put_batch(b):
-            return jax.tree.map(lambda x: jax.device_put(x, bspec), b)
+            return {k: jax.device_put(
+                v, rep_sh if k == "participation" else bspec)
+                for k, v in b.items()}
 
         step_fn = None
         log = []
         t_start = time.time()
         for step in range(start, args.steps):
-            batch = put_batch(pipe.batch_with_aux(step, cfg))
+            batch = put_batch(make_batch(step))
             if step_fn is None:
                 step_fn = build_train_step(model, run, mesh)(params, batch)
                 t0 = time.time()

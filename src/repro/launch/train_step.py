@@ -35,6 +35,8 @@ from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
 from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
 from repro.core.gamma import gamma_init, gamma_update
 from repro.core.telemetry import CompressionTelemetry, SearchTelemetry
+from repro.fed.clients import (ClientState, cohort_compress_aggregate,
+                               init_client_state, local_participation)
 from repro.models.registry import Model
 from repro.sharding import cache_pspecs, dp_axes_of, param_pspecs
 
@@ -64,6 +66,8 @@ class DistOptState(NamedTuple):
     telemetry: CompressionTelemetry  # (W,) per-worker compression health
     cum_eff_bytes: jax.Array         # () cumulative worker-mean eff bytes
     gossip: Any = ()         # GossipOptState under transport="gossip"
+    fed: Any = ()            # ClientState when federated.n_clients > 0
+                             # (leaves (n_clients, ...) over the dp axes)
 
 
 def _n_workers(mesh) -> int:
@@ -88,7 +92,8 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
         # every worker starts at the common initialization
         return jnp.broadcast_to(p[None], shape).astype(p.dtype)
 
-    needs_mem = opt.kind in ("csgd_asss", "nonadaptive")
+    fed_on = opt.federated.enabled
+    needs_mem = opt.kind in ("csgd_asss", "nonadaptive") and not fed_on
     needs_gossip = needs_mem and opt.transport == "gossip"
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
         (lambda s, d: jnp.zeros(s, d))
@@ -108,6 +113,8 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
             params=jax.tree.map(gossip_params_leaf, params),
             state=GossipState.init((n_workers,), abstract=abstract))
             if needs_gossip else ()),
+        fed=(init_client_state(params, opt, opt.federated.n_clients,
+                               abstract=abstract) if fed_on else ()),
     )
 
 
@@ -146,6 +153,10 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
                 pspecs),
             state=GossipState(v=vec, lr=vec))
             if opt_state.gossip != () else ()),
+        fed=(ClientState(
+            memory=jax.tree.map(mem_sh, pspecs),
+            gamma=vec, rounds=vec, alpha=vec)
+            if opt_state.fed != () else ()),
     )
 
 
@@ -195,6 +206,38 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             raise ValueError(
                 "transport 'gossip' does not compose with shard_local_topk")
         topo = build_topology(opt.gossip.topology, W)
+
+    fed = opt.federated
+    fed_mode = fed.enabled
+    if fed_mode:
+        # (transport="gossip" is already rejected by OptimizerConfig)
+        if opt.kind not in ("csgd_asss", "nonadaptive"):
+            raise ValueError(
+                f"federated cohort simulation needs a compressing "
+                f"optimizer (csgd_asss | nonadaptive), got "
+                f"kind={opt.kind!r}")
+        if opt.local_steps > 1:
+            raise ValueError(
+                "federated cohort simulation does not compose with "
+                "local_steps > 1")
+        if opt.shard_local_topk:
+            raise ValueError(
+                "federated cohort simulation does not compose with "
+                "shard_local_topk")
+        if micro > 1:
+            raise ValueError(
+                "federated cohort simulation does not compose with "
+                "microbatches > 1 (each client IS a batch row group)")
+        if fed.n_clients % W:
+            raise ValueError(
+                f"n_clients={fed.n_clients} must divide evenly over the "
+                f"{W} dp workers (each worker vmaps n_clients/W clients)")
+        if opt.gamma_controller.schedule not in ("fixed", "linear"):
+            raise ValueError(
+                f"per-client gamma controllers support the 'fixed' and "
+                f"'linear' schedules (each client sees only its own "
+                f"participation counter, not the coupled telemetry), got "
+                f"{opt.gamma_controller.schedule!r}")
 
     def local_loss(params, batch):
         loss, _ = model.loss(params, batch)
@@ -271,7 +314,104 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         )
         return new_params, new_state, metrics
 
+    def _federated_worker(params, opt_state, batch):
+        """One cohort round (DESIGN.md §13): this worker vmaps its C =
+        n_clients/W clients — per-client grad, Armijo step, and gamma —
+        then ONE cohort exchange aggregates the participants'
+        compressed payloads support-weighted.  Non-participating
+        clients' carried state (EF memory, gamma, rounds, alpha) is
+        bit-frozen; their compute this round is simulation overhead the
+        mask discards, exactly like a sampled-out real client."""
+        C = fed.n_clients // W
+        fedst = opt_state.fed                     # local leaves (C, ...)
+        mask = batch["participation"]             # (n_clients,) replicated
+        cbatch = {k: v for k, v in batch.items() if k != "participation"}
+        pl = local_participation(mask, dp, C)     # (C,)
+        n_part = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+
+        def wmean(x_c):
+            """Participation-weighted global mean of a per-client (C,)."""
+            return jax.lax.psum(jnp.sum(pl * x_c), dp) / n_part
+
+        # ---- per-client gradients (ONE vmap over the local cohort) ------
+        losses, grads_c = jax.vmap(
+            lambda mb: jax.value_and_grad(local_loss)(params, mb))(cbatch)
+        gsq_c = jax.vmap(tree_sqnorm)(grads_c)
+        metrics = {"loss": wmean(losses), "grad_sqnorm": wmean(gsq_c),
+                   "participants": jnp.sum(mask.astype(jnp.float32))}
+
+        # ---- per-client gamma controllers -------------------------------
+        if fed.per_client_gamma:
+            # each client's linear ramp advances on its OWN participation
+            # counter — heterogeneous k_t across the cohort by design
+            gamma_t_c = jax.vmap(
+                lambda g, r: gamma_update(opt.gamma_controller,
+                                          opt.compressor, g, r))(
+                fedst.gamma, fedst.rounds)
+        else:
+            gamma_t_c = jnp.broadcast_to(
+                gamma_update(opt.gamma_controller, opt.compressor,
+                             fedst.gamma[0], opt_state.step), (C,))
+        gamma_used = jnp.where(pl > 0, gamma_t_c, fedst.gamma)
+        metrics["gamma"] = wmean(gamma_used)
+
+        # ---- per-client step sizes --------------------------------------
+        if opt.kind == "csgd_asss":
+            amax_c = next_alpha_max(fedst.alpha, opt.armijo)
+            res = jax.vmap(
+                lambda mb, g, f0, gsq, amax: armijo_search(
+                    lambda p: local_loss(p, mb), params, g, amax,
+                    opt.armijo, f0=f0, grad_sqnorm=gsq))(
+                cbatch, grads_c, losses, gsq_c, amax_c)
+            alpha_c = res.alpha
+            evals_c = res.n_evals.astype(jnp.float32)
+            eta_c = jax.vmap(
+                lambda g, a: opt.armijo.scale_for(g) * a)(
+                gamma_used, alpha_c)
+        else:
+            alpha_c = jnp.full((C,), opt.eta, jnp.float32)
+            evals_c = jnp.zeros((C,), jnp.float32)
+            eta_c = jnp.full((C,), opt.eta, jnp.float32)
+        metrics["alpha"] = wmean(alpha_c)
+        metrics["n_evals"] = wmean(evals_c)
+
+        # ---- the cohort exchange: ONE gather + ONE psum -----------------
+        smask = model.stacked_mask(params)
+        updates, new_mem, wire, eff_wire = cohort_compress_aggregate(
+            grads_c, fedst.memory, eta_c, opt.compressor, dp, mask,
+            gamma_used, stacked_mask=smask, aggregation=fed.aggregation)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
+            params, updates)
+
+        # wire/eff are cohort-global already (mask-weighted + psum'd)
+        cum_eff = opt_state.cum_eff_bytes + eff_wire
+        metrics["wire_bytes"] = wire
+        metrics["effective_wire_bytes"] = eff_wire
+        metrics["cum_effective_wire_bytes"] = cum_eff
+        metrics["ef_backlog"] = jnp.float32(0.0)   # no cohort telemetry
+        metrics["ef_cosine"] = jnp.float32(1.0)    # (DESIGN.md §13)
+
+        new_state = DistOptState(
+            step=opt_state.step + 1,
+            alpha_prev=opt_state.alpha_prev,
+            memory=(),
+            n_evals_ema=opt_state.n_evals_ema,
+            gamma=opt_state.gamma,
+            telemetry=opt_state.telemetry,
+            cum_eff_bytes=cum_eff,
+            gossip=opt_state.gossip,
+            fed=ClientState(
+                memory=new_mem,
+                gamma=jnp.where(pl > 0, gamma_t_c, fedst.gamma),
+                rounds=fedst.rounds + (pl > 0).astype(jnp.int32),
+                alpha=jnp.where(pl > 0, alpha_c, fedst.alpha)),
+        )
+        return new_params, new_state, metrics
+
     def worker_fn(params, opt_state, batch):
+        if fed_mode:
+            return _federated_worker(params, opt_state, batch)
         # squeeze the per-worker leading axis of the optimizer state
         mem = jax.tree.map(lambda x: x[0], opt_state.memory) \
             if opt_state.memory != () else ()
@@ -445,7 +585,12 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
     rep = P()
 
     def batch_spec_of(batch_tree):
-        return jax.tree.map(lambda _: P(dp_spec), batch_tree)
+        # the cohort participation mask is a global (n_clients,) row every
+        # worker reads (each slices its own C clients) — replicated, not
+        # batch-sharded like the data leaves
+        return {k: (rep if k == "participation" else P(dp_spec))
+                for k in batch_tree} if isinstance(batch_tree, dict) else \
+            jax.tree.map(lambda _: P(dp_spec), batch_tree)
 
     def make(params_like, batch_like):
         tel_spec = jax.tree.map(lambda _: lead,
@@ -453,18 +598,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         state_in = DistOptState(
             step=rep, alpha_prev=lead,
             memory=(jax.tree.map(lambda _: lead, params_like)
-                    if opt.kind in ("csgd_asss", "nonadaptive") else ()),
+                    if opt.kind in ("csgd_asss", "nonadaptive")
+                    and not fed_mode else ()),
             n_evals_ema=lead, gamma=lead,
             telemetry=tel_spec, cum_eff_bytes=rep,
             gossip=(GossipOptState(
                 params=jax.tree.map(lambda _: lead, params_like),
                 state=GossipState(v=lead, lr=lead))
-                if gossip_mode else ()))
-        metrics_spec = {k: rep for k in
-                        ("loss", "grad_sqnorm", "alpha", "n_evals",
-                         "wire_bytes", "effective_wire_bytes",
-                         "cum_effective_wire_bytes", "ef_backlog",
-                         "ef_cosine", "gamma")}
+                if gossip_mode else ()),
+            fed=(ClientState(
+                memory=jax.tree.map(lambda _: lead, params_like),
+                gamma=lead, rounds=lead, alpha=lead)
+                if fed_mode else ()))
+        metric_keys = ("loss", "grad_sqnorm", "alpha", "n_evals",
+                       "wire_bytes", "effective_wire_bytes",
+                       "cum_effective_wire_bytes", "ef_backlog",
+                       "ef_cosine", "gamma") + \
+            (("participants",) if fed_mode else ())
+        metrics_spec = {k: rep for k in metric_keys}
         # Manual over dp, auto over 'model' (XLA partitions the TP math).
         # On 0.4.x partial-auto shard_map cannot contain a lax.scan
         # (compat.PARTIAL_AUTO_SAFE), so there the body is manual over
@@ -488,11 +639,9 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             init_opt_state(params_like, run_cfg, W, abstract=True),
             params_like, mesh, run_cfg)
         bsh = jax.tree.map(
-            lambda _: NamedSharding(mesh, P(dp_spec)), batch_like)
-        msh = {k: NamedSharding(mesh, P()) for k in
-               ("loss", "grad_sqnorm", "alpha", "n_evals", "wire_bytes",
-                "effective_wire_bytes", "cum_effective_wire_bytes",
-                "ef_backlog", "ef_cosine", "gamma")}
+            lambda s: NamedSharding(mesh, s), batch_spec_of(batch_like),
+            is_leaf=lambda x: isinstance(x, P))
+        msh = {k: NamedSharding(mesh, P()) for k in metric_keys}
         # donation of pinned_host-backed state trips an XLA SPMD RET_CHECK
         # (side-effecting copy-to-host without sharding); skip it there.
         donate = () if opt.ef_host_offload else (0, 1)

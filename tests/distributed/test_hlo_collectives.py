@@ -171,3 +171,88 @@ def test_train_step_all_gather_budget():
 
     ref, _ = _lower_train_step("perleaf")
     assert ref.count(AG) == len(plan.compressed_ids) > 2
+
+
+# ---------------------------------------------------------------------------
+# federated cohort tier (DESIGN.md §13): vmap must not multiply collectives
+# ---------------------------------------------------------------------------
+
+def _lower_cohort(key, comp, n_clients):
+    from repro.fed.clients import cohort_compress_aggregate
+
+    mesh = jax.make_mesh((W_WORKERS,), ("data",))
+    C = n_clients // W_WORKERS
+    base = _tree(key)
+    tree = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (C,) + x.shape), base)
+    mem = jax.tree.map(jnp.zeros_like, tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+    f = shard_map(
+        lambda g, m, part: cohort_compress_aggregate(
+            g, m, jnp.float32(0.1), comp, ("data",), part),
+        mesh=mesh, in_specs=(spec, spec, P()),
+        out_specs=(jax.tree.map(lambda _: P(), base), spec, P(), P()),
+        axis_names={"data"}, check_vma=False)
+    part = jnp.ones((n_clients,), jnp.float32)
+    return jax.jit(f).lower(tree, mem, part).as_text()
+
+
+@pytest.mark.parametrize("n_clients", [8, 64, 256])
+def test_cohort_exchange_collective_counts(key, n_clients):
+    """The vmap'd cohort exchange keeps the O(1) bucketed schedule:
+    exactly ONE all_gather (every client's payload in one fixed-shape
+    block) and exactly ONE all_reduce (dense leaves + the eff-bytes
+    counter), INDEPENDENT of how many clients each worker simulates."""
+    comp = Compressor(gamma=0.05, method="topk", min_compress_size=64,
+                      value_bits=8, use_kernel=False)
+    txt = _lower_cohort(key, comp, n_clients)
+    assert txt.count(AG) == 1, txt.count(AG)
+    assert txt.count(AR) == 1, txt.count(AR)
+
+
+def _lower_fed_train_step(n_clients):
+    from repro.configs import get_smoke_config
+    from repro.configs.base import (FederatedConfig, OptimizerConfig,
+                                    RunConfig, ShapeConfig)
+    from repro.core import ArmijoConfig
+    from repro.compat import set_mesh
+    from repro.launch.train_step import (build_train_step, init_opt_state,
+                                         opt_state_shardings)
+    from repro.models import build_model
+    from repro.sharding import param_shardings
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    cfg = get_smoke_config("qwen1.5-4b")
+    m = build_model(cfg)
+    comp = Compressor(gamma=0.1, method="block_topk", block=256,
+                      min_compress_size=64, use_kernel=False)
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("t", 32, n_clients, "train"),
+        optimizer=OptimizerConfig(
+            kind="csgd_asss", armijo=ArmijoConfig(), compressor=comp,
+            federated=FederatedConfig(n_clients=n_clients)))
+    with set_mesh(mesh):
+        params = m.init(jax.random.PRNGKey(0))
+        params = jax.device_put(params, param_shardings(params, mesh))
+        batch = {"tokens": jnp.zeros((n_clients, 1, 32), jnp.int32),
+                 "participation": jnp.ones((n_clients,), jnp.float32)}
+        st = init_opt_state(params, run, 4)
+        st = jax.device_put(st, opt_state_shardings(st, params, mesh, run))
+        step = build_train_step(m, run, mesh)(params, batch)
+        txt = step.lower(params, st, batch).as_text()
+    leaves = jax.tree.leaves(params)
+    plan = build_bucket_plan([x.shape for x in leaves],
+                             [x.ndim >= 2 for x in leaves], comp)
+    return txt, plan
+
+
+def test_fed_train_step_collective_budget():
+    """End to end: the federated train step's all_gather count equals the
+    bucket plan's gather count — the SAME budget as the plain dp step —
+    and stays constant as the cohort grows 8 -> 32 clients (vmap width
+    never becomes collective count)."""
+    txt8, plan = _lower_fed_train_step(8)
+    txt32, _ = _lower_fed_train_step(32)
+    assert 1 <= txt8.count(AG) == plan.n_gathers <= 2, txt8.count(AG)
+    assert txt32.count(AG) == txt8.count(AG)
+    assert txt32.count(AR) == txt8.count(AR)

@@ -1,0 +1,47 @@
+"""tests/federated — the cohort-simulation test tier (DESIGN.md §13).
+
+Every test here runs IN-PROCESS against 8 forced host devices, exactly
+like tests/distributed: start the process with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — use
+``python tests/federated/harness.py`` (which relaunches pytest with the
+right environment) or the ``tier1-federated`` CI job.
+
+Collected under fewer devices (the plain tier-1 run), everything here is
+skipped so single-device runs stay fast.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+# the tier's NumPy oracle (reference.py) imports as a plain module
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)
+
+
+def pytest_collection_modifyitems(config, items):
+    # scope by path — this hook sees the whole session's items
+    n = jax.device_count()
+    skip = pytest.mark.skip(
+        reason=f"needs 8 virtual devices, have {n} "
+               "(run tests/federated/harness.py)")
+    for item in items:
+        if not str(item.fspath).startswith(_HERE):
+            continue
+        item.add_marker(pytest.mark.federated)
+        if n < 8:
+            item.add_marker(skip)
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seed():
+    np.random.seed(0)
+    yield
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

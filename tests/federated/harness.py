@@ -1,0 +1,32 @@
+#!/usr/bin/env python
+"""Relaunch pytest under 8 forced host devices for the federated tier.
+
+Same contract as tests/distributed/harness.py (whose environment builder
+this reuses): the main pytest process keeps its single-device view, and
+the cohort suite runs in a fresh interpreter whose XLA backend is forced
+to 8 host devices before jax initializes:
+
+    python tests/federated/harness.py [extra pytest args]
+
+CI runs the same thing as a dedicated job (see .github/workflows/ci.yml,
+job ``tier1-federated``).
+"""
+import os
+import subprocess
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_REPO = os.path.dirname(os.path.dirname(_HERE))
+sys.path.insert(0, os.path.join(_REPO, "tests", "distributed"))
+
+from harness import multidevice_env  # noqa: E402
+
+
+def main(argv=None) -> int:
+    cmd = [sys.executable, "-m", "pytest", "-q", "-m", "federated", _HERE]
+    cmd += list(sys.argv[1:] if argv is None else argv)
+    return subprocess.call(cmd, env=multidevice_env(_REPO), cwd=_REPO)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,93 @@
+"""Collective-free NumPy/float64 reference of the cohort exchange.
+
+Mirrors ``repro.fed.clients.cohort_compress_aggregate`` for the
+``method='topk'``, ``value_bits=32`` configuration the parity suite
+pins: per-client EF accumulate, per-layer exact top-k at the static
+budget, the §9 ragged valid-count mask (first ``k_t`` of the
+magnitude-ordered entries survive the wire), support-weighted
+aggregation, and the participant-only EF recycle.  No jax, no
+collectives — every client is a plain python loop iteration, which is
+exactly what makes it a trustworthy oracle for the vmap'd shard_map
+path.
+
+Selection order matches ``lax.top_k`` (descending magnitude, ties to
+the lower index) via a stable argsort on the negated magnitudes.  The
+EF accumulate is computed in float32 — the SAME IEEE arithmetic the jax
+path performs elementwise — so the selected set is identical by
+construction (no near-tie flakiness between a float64 oracle and the
+float32 device path); only the cross-client aggregation runs in
+float64, which is the part where summation order actually differs.
+Residuals therefore agree to one float32 ulp (XLA fuses the accumulate
+into an fma; numpy rounds the product separately), and the parity suite
+compares EF memory at roundoff tolerance, the update at float32
+aggregation tolerance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _leaf2d(x: np.ndarray, stacked: bool) -> np.ndarray:
+    if stacked and x.ndim >= 2:
+        return x.reshape(x.shape[0], -1)
+    return x.reshape(1, -1)
+
+
+def _k_t(comp, gamma_t: float, d: int) -> int:
+    """comp.k_t_for in numpy: round(f32(gamma_t) * d) clamped to
+    [1, k_max] (same banker's rounding as jnp.round)."""
+    k_max = comp.k_for(d)
+    return int(np.clip(np.round(np.float32(gamma_t) * np.float32(d)),
+                       1, k_max))
+
+
+def simulate_cohort(grads: dict, mem: dict, eta_c: np.ndarray,
+                    gamma_c: np.ndarray, part: np.ndarray, comp,
+                    aggregation: str = "support"):
+    """One cohort round in float64. ``grads``/``mem``: dicts of
+    (N, *shape) arrays; ``eta_c``/``gamma_c``/``part``: (N,).
+
+    Returns ``(updates, new_mem)`` — updates float64 per-leaf
+    (*shape,), new_mem float32 per-client (N, *shape) with
+    non-participants bit-frozen.
+    """
+    assert comp.method == "topk" and comp.value_bits == 32
+    N = int(part.size)
+    n_part = max(float(part.sum()), 1.0)
+    updates, new_mem = {}, {}
+    for name, g in grads.items():
+        g = np.asarray(g, np.float32)
+        m = np.asarray(mem[name], np.float32)
+        stacked = (g.ndim - 1) >= 2
+        L, d = _leaf2d(g[0], stacked).shape
+        sent = np.zeros((N, L, d), np.float32)
+        accs = np.zeros((N, L, d), np.float32)
+        for c in range(N):
+            # float32 on purpose — see module docstring
+            acc = (_leaf2d(m[c], stacked)
+                   + np.float32(eta_c[c]) * _leaf2d(g[c], stacked))
+            accs[c] = acc
+            if comp.ships_dense(d):
+                sent[c] = acc              # dense lane: whole row ships
+                continue
+            k_max = comp.k_for(d)
+            k_t = _k_t(comp, float(gamma_c[c]), d) if comp.adaptive \
+                else k_max
+            order = np.argsort(-np.abs(acc), axis=1, kind="stable")
+            for ell in range(L):
+                keep = order[ell, :k_t]
+                sent[c, ell, keep] = acc[ell, keep]
+        w = part.astype(np.float64).reshape(N, 1, 1)
+        total = (sent.astype(np.float64) * w).sum(axis=0)
+        if comp.ships_dense(d) or aggregation == "mean":
+            upd = total / n_part
+        else:
+            support = ((sent != 0.0) * w).sum(axis=0)
+            upd = np.where(support > 0.0,
+                           total / np.maximum(support, 1.0), 0.0)
+        updates[name] = upd.reshape(g.shape[1:])
+        keep = part.astype(bool).reshape(N, 1, 1)
+        m_rows = np.stack([_leaf2d(m[c], stacked) for c in range(N)])
+        resid = np.where(keep, accs - sent, m_rows)
+        new_mem[name] = resid.astype(np.float32).reshape(m.shape)
+    return updates, new_mem

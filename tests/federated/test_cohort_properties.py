@@ -1,0 +1,118 @@
+"""Hypothesis properties for the cohort exchange (DESIGN.md §13):
+arbitrary participation masks and per-client adaptive levels never
+break the wire invariants.
+
+* every participating client's transmitted set has between 1 and
+  ``k_max`` coordinates, and never more than its own ``k_t`` — the
+  per-client ragged budget holds for EVERY gamma in (0, max_gamma];
+* non-participants are bit-frozen and their payloads are dead: the
+  aggregated update is byte-identical no matter what garbage a
+  non-participant would have sent;
+* wire accounting prices exactly ``n_participants`` uplinks.
+
+Shapes are static (one jit compile per module); hypothesis only drives
+runtime arrays (masks, gammas, garbage seeds).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.comm.bucket import build_bucket_plan            # noqa: E402
+from repro.core import Compressor                          # noqa: E402
+from repro.fed.clients import (cohort_compress_aggregate,  # noqa: E402
+                               per_client_wire_bytes)
+
+C = 8            # cohort size (dp_axes=None: the whole cohort, one device)
+D, D_SMALL = 512, 24
+
+COMP = Compressor(gamma=0.05, method="topk", min_compress_size=64,
+                  value_bits=32, use_kernel=False, max_gamma=0.25)
+K_MAX = COMP.k_for(D)
+
+_RNG = np.random.default_rng(42)
+GRADS = {"v": _RNG.standard_normal((C, D)).astype(np.float32),
+         "t": _RNG.standard_normal((C, D_SMALL)).astype(np.float32)}
+MEM = {k: (0.1 * _RNG.standard_normal(v.shape)).astype(np.float32)
+       for k, v in GRADS.items()}
+ETA = np.float32(0.3)
+
+
+@jax.jit
+def _step(g, m, gamma_c, part):
+    return cohort_compress_aggregate(g, m, ETA, COMP, None, part,
+                                     gamma_c=gamma_c)
+
+
+masks = st.lists(st.booleans(), min_size=C, max_size=C).filter(any)
+gammas = st.lists(st.floats(0.005, 0.25, allow_nan=False, width=32),
+                  min_size=C, max_size=C)
+
+
+@settings(max_examples=12, deadline=None)
+@given(mask=masks, gamma=gammas)
+def test_per_client_counts_within_budget(mask, gamma):
+    part = np.asarray(mask, np.float32)
+    gamma_c = np.asarray(gamma, np.float32)
+    upd, new_mem, wire, eff = _step(GRADS, MEM, gamma_c, part)
+
+    acc = MEM["v"] + ETA * GRADS["v"]
+    sent = acc - np.asarray(new_mem["v"])          # participants only
+    for c in range(C):
+        if not mask[c]:
+            continue
+        # roundoff threshold: host acc differs from the device's fma'd
+        # acc by ~1 ulp; real transmitted magnitudes here are O(0.1)
+        n_sent = int(np.count_nonzero(np.abs(sent[c]) > 1e-5))
+        k_t = int(np.clip(np.round(gamma_c[c] * D), 1, K_MAX))
+        assert 1 <= n_sent <= K_MAX
+        assert n_sent <= k_t
+
+    # non-participants: EF memory bit-frozen, both lanes
+    for name in GRADS:
+        froz = np.asarray(new_mem[name])
+        for c in range(C):
+            if not mask[c]:
+                np.testing.assert_array_equal(froz[c], MEM[name][c])
+
+    leaves = [v.shape[1:] for v in GRADS.values()]
+    plan = build_bucket_plan(leaves, [len(s) >= 2 for s in leaves], COMP)
+    n_on = float(part.sum())
+    assert float(wire) == n_on * per_client_wire_bytes(plan)
+    assert 0.0 < float(eff) <= float(wire)
+
+    # dense small leaf: participation-weighted zero-averaged mean
+    acc_t = MEM["t"] + ETA * GRADS["t"]
+    want = (part[:, None] * acc_t).sum(0) / max(n_on, 1.0)
+    np.testing.assert_allclose(np.asarray(upd["t"]), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(mask=masks, seed=st.integers(0, 2**31 - 1))
+def test_nonparticipant_payloads_are_dead(mask, seed):
+    part = np.asarray(mask, np.float32)
+    gamma_c = np.full(C, 0.1, np.float32)
+    base = _step(GRADS, MEM, gamma_c, part)
+
+    rng = np.random.default_rng(seed)
+    g2 = {k: v.copy() for k, v in GRADS.items()}
+    m2 = {k: v.copy() for k, v in MEM.items()}
+    for c in range(C):
+        if mask[c]:
+            continue
+        for t in (g2, m2):
+            for k in t:
+                t[k][c] = rng.standard_normal(t[k][c].shape)
+    other = _step(g2, m2, gamma_c, part)
+
+    for name in GRADS:
+        np.testing.assert_array_equal(np.asarray(base[0][name]),
+                                      np.asarray(other[0][name]))
+    np.testing.assert_array_equal(np.asarray(base[2]),
+                                  np.asarray(other[2]))
+    np.testing.assert_array_equal(np.asarray(base[3]),
+                                  np.asarray(other[3]))

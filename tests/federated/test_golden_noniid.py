@@ -1,0 +1,81 @@
+"""Golden non-IID convergence pair (DESIGN.md §13): support-weighted
+aggregation matches the IID baseline on pathologically non-IID clients,
+zero-averaged mean demonstrably lags.
+
+Construction: least-squares in d=2048 with 64 clients, client ``c``'s
+data (hence gradient, hence EF memory) supported ONLY on its own
+32-coordinate stripe.  48/64 clients participate per round (fixed
+sampling, deterministic in (seed, round)).  Under top-k compression the
+budget covers a whole stripe, so a participating owner ships its full
+stripe residual:
+
+* ``support`` divides each coordinate by the clients that actually sent
+  it (= 1, the owner) — the stripe takes the full step and the run
+  converges at least as fast as the IID baseline;
+* ``mean`` divides by all 48 participants — every stripe step is
+  shrunk 48x with no EF recourse (the owner's residual against its OWN
+  payload is zero), so after 40 rounds the loss is still O(1).
+
+The numbers are golden: deterministic data (seeded), deterministic
+participation, single device (dp_axes=None — the parity suite covers
+mesh equivalence), so the final losses are pinned to ranges with an
+order of magnitude of headroom rather than exact floats.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Compressor
+from repro.fed.clients import cohort_compress_aggregate
+from repro.fed.sampling import participation_mask
+
+D, N_CLIENTS, STRIPE, ROUNDS = 2048, 64, 32, 40
+ETA, GAMMA = 0.3, 0.05
+
+
+def _run(noniid: bool, aggregation: str) -> float:
+    comp = Compressor(gamma=GAMMA, method="topk", min_compress_size=64,
+                      value_bits=32, use_kernel=False)
+    rng = np.random.default_rng(0)
+    wstar = rng.standard_normal(D).astype(np.float32)
+    w = np.zeros(D, np.float32)
+    mem = jnp.zeros((N_CLIENTS, D), jnp.float32)
+
+    @jax.jit
+    def step(g, m, p):
+        u, nm, _, _ = cohort_compress_aggregate(
+            {"w": g}, {"w": m}, jnp.float32(ETA), comp, None, p,
+            aggregation=aggregation)
+        return u["w"], nm["w"]
+
+    for t in range(ROUNDS):
+        mask = participation_mask(N_CLIENTS, t, seed=5, mode="fixed",
+                                  clients_per_round=48)
+        resid = w - wstar
+        if noniid:
+            g = np.zeros((N_CLIENTS, D), np.float32)
+            for c in range(N_CLIENTS):
+                sl = slice(c * STRIPE, (c + 1) * STRIPE)
+                g[c, sl] = resid[sl]
+        else:
+            g = np.broadcast_to(resid, (N_CLIENTS, D)).copy()
+        u, mem = step(jnp.asarray(g), mem, jnp.asarray(mask))
+        w = w - np.asarray(u)
+    return float(np.mean((w - wstar) ** 2) / np.mean(wstar ** 2))
+
+
+def test_golden_noniid_convergence_pair():
+    iid = _run(noniid=False, aggregation="support")
+    sup = _run(noniid=True, aggregation="support")
+    mean = _run(noniid=True, aggregation="mean")
+
+    # the IID baseline itself converges (sanity: EF top-k is healthy)
+    assert 0.005 < iid < 0.08, iid
+    # support on non-IID clients: within 5% + noise of the IID baseline
+    assert sup <= 1.05 * iid + 1e-3, (sup, iid)
+    # ... in fact essentially exact here (full-stripe sends, support=1)
+    assert sup < 1e-5, sup
+    # zero-averaged mean lags by orders of magnitude
+    assert mean > 10.0 * iid, (mean, iid)
+    # golden range (measured 0.687 at seed 0; wide platform headroom)
+    assert 0.5 < mean < 0.8, mean

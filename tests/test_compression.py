@@ -166,6 +166,61 @@ def test_compress_dense_block_topk_kernel_identity(key):
                                   np.asarray(y))
 
 
+def test_support_mean_bitexact_at_full_support(key):
+    """Satellite pin (DESIGN.md §13): when every participant ships every
+    coordinate, the support count equals n_participants everywhere and the
+    support-weighted mean IS the zero-averaging dense mean — the identical
+    division on the identical operands, bit-exact."""
+    from repro.fed.aggregate import (scatter_with_support,
+                                     support_weighted_mean,
+                                     zero_averaged_mean)
+    N, L, d = 6, 3, 128
+    vals = jax.random.normal(key, (N, L, d))      # nonzero a.s.
+    idx = jnp.broadcast_to(jnp.arange(d, dtype=jnp.int32), (N, L, d))
+    weights = jnp.asarray([1, 1, 0, 1, 0, 1], jnp.float32)
+    total, support = scatter_with_support(vals, idx, weights, L, d)
+    n_part = jnp.sum(weights)
+    np.testing.assert_array_equal(
+        np.asarray(support), np.full((L, d), float(n_part), np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(support_weighted_mean(total, support)),
+        np.asarray(zero_averaged_mean(total, n_part)))
+    # and with client-disjoint partial coverage they genuinely differ
+    # (the zero-averaging defect exists): client i covers its own stripe,
+    # so covered coordinates have support 1 or 2, never n_part
+    k = d // 4
+    pvals = vals[:, :, :k]
+    pidx = (jnp.arange(k, dtype=jnp.int32)[None, None, :] * 4
+            + jnp.arange(N, dtype=jnp.int32)[:, None, None] % 4)
+    pidx = jnp.broadcast_to(pidx, (N, L, k))
+    t2, s2 = scatter_with_support(pvals, pidx, weights, L, d)
+    sup = np.asarray(support_weighted_mean(t2, s2))
+    zav = np.asarray(zero_averaged_mean(t2, n_part))
+    assert np.max(np.abs(sup - zav)) > 0.0
+
+
+def test_cohort_support_equals_mean_at_budget(key):
+    """End-to-end satellite pin: the cohort exchange at gamma=1.0 with
+    32-bit values (every client sends every coordinate of every
+    compressed leaf) produces bit-identical updates and EF memory under
+    aggregation='support' and 'mean'."""
+    from repro.fed.clients import cohort_compress_aggregate
+    comp = Compressor(gamma=1.0, method="topk", min_compress_size=64,
+                      use_kernel=False)
+    C = 5
+    grads = {"w": jax.random.normal(key, (C, 2, 256)),     # stacked lane
+             "b": jax.random.normal(jax.random.fold_in(key, 1), (C, 40))}
+    mem = jax.tree.map(jnp.zeros_like, grads)
+    part = jnp.asarray([1, 0, 1, 1, 1], jnp.float32)
+    out = {agg: cohort_compress_aggregate(
+        grads, mem, jnp.float32(0.1), comp, None, part, aggregation=agg)
+        for agg in ("support", "mean")}
+    for a, b in zip(jax.tree.leaves(out["support"][:2]),
+                    jax.tree.leaves(out["mean"][:2])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert float(out["support"][2]) == float(out["mean"][2])  # wire
+
+
 def test_contraction_gamma_metric(key):
     x = jax.random.normal(key, (2048,))
     comp = Compressor(gamma=0.1)

@@ -500,6 +500,138 @@ def test_mixing_matrix_invariants_property(name, n):
     np.testing.assert_allclose(m[m > 0], topo.mix_weight)
 
 
+# ---------------------------------------------------------------------------
+# federated tier: non-IID shard determinism + client sampling (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 1000),
+       st.integers(0, 3), st.floats(0.05, 5.0))
+def test_noniid_shard_determinism_property(seed, step, shard, alpha):
+    """The (seed, step, shard) determinism contract survives the Dirichlet
+    tilt AND n_shards refactors: the same shard of the same stream yields
+    the bit-identical batch whether the cohort is 4 or 8 shards wide
+    (same per-shard batch rows), across independent processes by
+    construction (pure numpy SeedSequence)."""
+    from repro.data.synthetic import TokenPipeline
+
+    def pipe(n_shards):
+        return TokenPipeline(vocab_size=128, seq_len=16,
+                             global_batch=2 * n_shards, seed=seed,
+                             n_shards=n_shards, shard=shard,
+                             dirichlet_alpha=alpha)
+
+    a = pipe(4).batch(step)["tokens"]
+    b = pipe(8).batch(step)["tokens"]
+    c = pipe(4).batch(step)["tokens"]       # fresh pipeline, same stream
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.05, 50.0))
+def test_dirichlet_tilt_property(seed, alpha):
+    """The per-shard unigram tilt: a valid distribution, deterministic in
+    (seed, shard), genuinely different across shards (non-IID), exactly
+    the base zipf at alpha=0, and step-independent by construction (the
+    tilt never sees the step counter)."""
+    from repro.data.synthetic import TokenPipeline
+
+    def probs(shard, a):
+        return TokenPipeline(vocab_size=256, seq_len=8, global_batch=4,
+                             seed=seed, n_shards=4, shard=shard,
+                             dirichlet_alpha=a).unigram_probs()
+
+    p0, p1 = probs(0, alpha), probs(1, alpha)
+    for p in (p0, p1):
+        assert np.all(p >= 0.0)
+        np.testing.assert_allclose(p.sum(), 1.0, atol=1e-9)
+    assert np.max(np.abs(p0 - p1)) > 0.0          # shards differ
+    np.testing.assert_array_equal(probs(0, alpha), p0)   # deterministic
+    base = probs(0, 0.0)
+    zipf = 1.0 / np.arange(1, 257)
+    np.testing.assert_allclose(base, zipf / zipf.sum(), atol=1e-12)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 16),
+       st.floats(0.05, 20.0), st.integers(40, 400))
+def test_dirichlet_label_shards_property(seed, n_shards, alpha, n):
+    """Label-skew partition: a complete partition (every sample on exactly
+    one shard), deterministic, and skew grows as alpha shrinks — at
+    alpha <= 0.1 some class concentrates harder than the uniform split."""
+    from repro.data.synthetic import dirichlet_label_shards
+
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, n)
+    s1 = dirichlet_label_shards(labels, n_shards, alpha, seed=seed)
+    s2 = dirichlet_label_shards(labels, n_shards, alpha, seed=seed)
+    np.testing.assert_array_equal(s1, s2)
+    assert s1.shape == labels.shape
+    assert s1.min() >= 0 and s1.max() < n_shards
+    # per-class apportionment is exact: class sizes are conserved
+    for c in np.unique(labels):
+        assert (s1[labels == c] >= 0).all()
+    assert np.bincount(s1, minlength=n_shards).sum() == n
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 10**6),
+       st.integers(2, 64))
+def test_participation_mask_reproducible_property(seed, round_idx, n):
+    """Same (seed, round) -> bit-identical mask, for both samplers; masks
+    are 0/1 float32 and fixed mode hits clients_per_round exactly."""
+    from repro.fed.sampling import participation_mask
+
+    k = max(1, n // 2)
+    m1 = participation_mask(n, round_idx, seed=seed, mode="fixed",
+                            clients_per_round=k)
+    m2 = participation_mask(n, round_idx, seed=seed, mode="fixed",
+                            clients_per_round=k)
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.dtype == np.float32
+    assert set(np.unique(m1)) <= {0.0, 1.0}
+    assert int(m1.sum()) == k
+    b1 = participation_mask(n, round_idx, seed=seed, mode="bernoulli",
+                            rate=0.9)
+    b2 = participation_mask(n, round_idx, seed=seed, mode="bernoulli",
+                            rate=0.9)
+    np.testing.assert_array_equal(b1, b2)
+    # different rounds decorrelate (not a frozen mask)
+    m3 = participation_mask(n, round_idx + 1, seed=seed, mode="fixed",
+                            clients_per_round=k)
+    assert int(m3.sum()) == k
+
+
+@given(st.integers(0, 2**31 - 1), st.floats(0.2, 0.9))
+def test_bernoulli_participation_binomial_bounds_property(seed, rate):
+    """Bernoulli sampling: the participation count stays within 6 sigma of
+    the binomial mean (per-seed deterministic, so this is a pure tail
+    bound on the underlying generator)."""
+    from repro.fed.sampling import participation_mask
+
+    n = 512
+    m = participation_mask(n, 0, seed=seed, mode="bernoulli", rate=rate)
+    cnt = m.sum()
+    mu, sd = n * rate, np.sqrt(n * rate * (1 - rate))
+    assert mu - 6 * sd - 1 <= cnt <= mu + 6 * sd + 1
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64))
+def test_zero_participation_raises_property(seed, n):
+    """A round nobody survives raises instead of producing 0/0 NaNs —
+    rate=0 bernoulli deterministically, and stragglers only ever shrink
+    the sampled set."""
+    from repro.fed.sampling import (ZeroParticipationError,
+                                    participation_mask)
+
+    with pytest.raises(ZeroParticipationError):
+        participation_mask(n, 0, seed=seed, mode="bernoulli", rate=0.0)
+    full = participation_mask(n, 3, seed=seed, mode="fixed")
+    try:
+        dropped = participation_mask(n, 3, seed=seed, mode="fixed",
+                                     straggler_rate=0.5)
+    except ZeroParticipationError:
+        return                       # everyone straggled: also correct
+    assert np.all(dropped <= full)   # stragglers are a subset
+
+
 @given(st.integers(0, 2**31 - 1),
        st.sampled_from(["ring", "torus", "exp"]),
        st.sampled_from([4, 8, 16]))

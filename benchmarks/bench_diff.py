@@ -33,8 +33,15 @@ Two rule sets:
   transport must never be SLOWER than the per-leaf schedule it replaced
   (measured ~0.87x on the gated workload, so the 1.0x gate has real
   headroom while still being a genuine "not slower" claim).  The
-  ``gossip_vs_bucketed_step_*`` records (DESIGN.md §12) ride the same
-  pairing but are informational only — the serverless path's fixed
+  ``bucketed_vs_overlap_step_*`` records (DESIGN.md §14) make the same
+  claim for the chunked-ring overlap transport in its bit-exact
+  ``delay=0`` mode — the ring schedule must not be slower than the flat
+  gather it replaces — hard-gated at ``--overlap-factor`` (default
+  1.0x).  The stale ``delay=1`` mode is timed as an ungated
+  ``exchange_step`` record: its single-device cost is the EF-current
+  roundtrip, while the overlap win it exists for needs a real network.
+  The ``gossip_vs_bucketed_step_*`` records (DESIGN.md §12) ride the
+  same pairing but are informational only — the serverless path's fixed
   overhead is a design trade, not a regression.
 
 Usage (the CI invocation)::
@@ -55,6 +62,7 @@ import sys
 
 TEL_RATIO_PREFIX = "ef2pass_tel_ratio_"
 BUCKET_RATIO_PREFIX = "bucketed_vs_perleaf_step_"
+OVERLAP_RATIO_PREFIX = "bucketed_vs_overlap_step_"
 GOSSIP_RATIO_PREFIX = "gossip_vs_bucketed_step_"
 FED_STEP_PREFIX = "fed_cohort_step_"
 
@@ -79,7 +87,8 @@ def _load(path: str) -> dict[tuple, float]:
 def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
          factor: float, tel_factor: float, min_ms: float = 0.25,
          cross_run_fail: bool = True,
-         bucket_factor: float = 1.0) -> list[str]:
+         bucket_factor: float = 1.0,
+         overlap_factor: float = 1.0) -> list[str]:
     """Returns the list of failure messages (empty = pass).
 
     ``min_ms``: noise floor for the cross-run rule — keys where both
@@ -92,7 +101,7 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
 
     def is_ratio(k):
         return k[0].startswith((TEL_RATIO_PREFIX, BUCKET_RATIO_PREFIX,
-                                GOSSIP_RATIO_PREFIX))
+                                OVERLAP_RATIO_PREFIX, GOSSIP_RATIO_PREFIX))
 
     shared = sorted(k for k in set(baseline) & set(fresh) if not is_ratio(k))
     for k in shared:
@@ -153,6 +162,28 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
             f"no {BUCKET_RATIO_PREFIX}* records in the fresh run — the "
             f"bucketed-transport claim went unmeasured")
 
+    # within-run: overlap(delay=0)-vs-bucketed transport ratio (DESIGN.md
+    # §14) — the chunked-ring schedule must not be slower than the flat
+    # bucketed gather it replaces
+    n_overlap = 0
+    for (op, backend, shape), ratio in sorted(fresh.items()):
+        if not op.startswith(OVERLAP_RATIO_PREFIX):
+            continue
+        n_overlap += 1
+        flag = "RING SLOWER" if ratio > overlap_factor else "ok"
+        print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
+              f"(limit {overlap_factor}x) {flag}")
+        if ratio > overlap_factor:
+            failures.append(
+                f"{op}{shape}: overlap transport costs {ratio:.3f}x the "
+                f"bucketed exchange (> {overlap_factor}x) — the chunked-"
+                f"ring schedule (DESIGN.md §14) is slower than the flat "
+                f"gather it replaced")
+    if n_overlap == 0:
+        failures.append(
+            f"no {OVERLAP_RATIO_PREFIX}* records in the fresh run — the "
+            f"overlap-transport claim went unmeasured")
+
     # informational: gossip-vs-bucketed paired overhead (DESIGN.md §12) —
     # printed for the trajectory, never gated (cross-transport thresholds
     # are a design choice, not a regression signal)
@@ -190,6 +221,10 @@ def main() -> int:
     ap.add_argument("--bucket-factor", type=float, default=1.0,
                     help="within-run bucketed-vs-perleaf transport "
                          "threshold (bucketed must not be slower)")
+    ap.add_argument("--overlap-factor", type=float, default=1.0,
+                    help="within-run overlap(delay=0)-vs-bucketed "
+                         "transport threshold (the ring schedule must "
+                         "not be slower)")
     ap.add_argument("--min-ms", type=float, default=0.25,
                     help="cross-run noise floor (see diff())")
     ap.add_argument("--cross-run", choices=["fail", "warn"], default="fail",
@@ -199,12 +234,13 @@ def main() -> int:
     args = ap.parse_args()
     print(f"bench diff: {args.baseline} -> {args.fresh} "
           f"(factor {args.factor}x, tel {args.tel_factor}x, "
-          f"bucket {args.bucket_factor}x, floor {args.min_ms} ms, "
-          f"cross-run={args.cross_run})")
+          f"bucket {args.bucket_factor}x, overlap {args.overlap_factor}x, "
+          f"floor {args.min_ms} ms, cross-run={args.cross_run})")
     failures = diff(_load(args.baseline), _load(args.fresh),
                     args.factor, args.tel_factor, min_ms=args.min_ms,
                     cross_run_fail=args.cross_run == "fail",
-                    bucket_factor=args.bucket_factor)
+                    bucket_factor=args.bucket_factor,
+                    overlap_factor=args.overlap_factor)
     if failures:
         print("\nFAIL:")
         for f in failures:

@@ -286,6 +286,54 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
            min_us=ratio * 1e3)
     out["gossip_vs_bucketed"] = ratio
 
+    # overlap vs bucketed on the same pytree (DESIGN.md §14).  The GATED
+    # pair runs the transport at delay=0: the chunked-ring schedule as a
+    # bit-exact drop-in for the flat bucketed gather — the same "not
+    # slower than the path it replaced" claim the bucketed/perleaf gate
+    # makes, measurable on a 1-worker mesh where both sides do identical
+    # codec work.  delay=1 (the overlapped mode) is timed as its own
+    # informational record: its extra cost here is exactly the
+    # launch-free EF roundtrip that keeps the residual current under
+    # staleness, while the hiding it buys — the collective running
+    # concurrently with compute — needs a real network; XLA's CPU runtime
+    # serializes collectives, so a single-device wall clock cannot see
+    # it.  The carried state rides as a traced argument so XLA cannot
+    # constant-fold the stale decode away.
+    from repro.comm.overlap import (OverlapConfig, OverlapCtx,
+                                    init_overlap_state)
+
+    flat = jax.tree.leaves(tree)
+    st = init_overlap_state([x.shape for x in flat],
+                            [x.ndim >= 2 for x in flat], comp)
+    mesh1 = jax.make_mesh((1,), ("data",))
+    pspec1 = jax.tree.map(lambda _: P(), tree)
+    st_spec = jax.tree.map(lambda _: P(), st)
+
+    def _make_overlap(ov_cfg):
+        return jax.jit(shard_map(
+            lambda g, m, e, s: worker_compress_aggregate(
+                g, m, e, comp, ("data",), transport="overlap",
+                transport_ctx=OverlapCtx(cfg=ov_cfg, state=s)),
+            mesh=mesh1, in_specs=(pspec1, pspec1, P(), st_spec),
+            out_specs=(pspec1, pspec1) + (P(),) * 3 + (st_spec,),
+            axis_names={"data"}))
+
+    f_stale = _make_overlap(OverlapConfig(n_chunks=2, delay=1))
+    us = timeit(f_stale, tree, mem, eta, st, n=n_heavy)
+    record("exchange_step", "overlap", tname, us,
+           f"overlap worker_compress_aggregate (delay=1), "
+           f"{n_leaves + 3} leaves")
+    f_ring = _make_overlap(OverlapConfig(n_chunks=2, delay=0))
+    ratio = paired_ratio(f_ring,
+                         lambda g, m, e, s: f_bucketed(g, m, e),
+                         (tree, mem, eta, st), n_pairs=16, repeats=5)
+    record(f"bucketed_vs_overlap_step_{tname}", "default", tname,
+           ratio * 1e3,
+           "paired overlap(delay=0)/bucketed wall-time ratio "
+           "(x1000, dimensionless)",
+           min_us=ratio * 1e3)
+    out["bucketed_vs_overlap"] = ratio
+
     # ---- federated cohort step (DESIGN.md §13) --------------------------
     # The vmap'd heterogeneous-client exchange, single device (dp_axes=
     # None: the whole cohort local, no collectives — what scales here is

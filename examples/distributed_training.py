@@ -50,6 +50,18 @@ worker's uplink carries ``degree x`` the per-link payload (ring: 2x),
 where the gather-based transports pay ``(W-1) x`` — the printed
 ``wire_bytes/link`` is the same per-payload figure for all of them.
 
+**Overlapped** (DESIGN.md §14): ``--transport overlap`` streams the SAME
+packed buffer around a chunked ``ppermute`` ring instead of one flat
+``all_gather`` and, at ``--overlap-delay 1`` (the default), ships the
+PREVIOUS step's payload so the collective runs concurrently with this
+step's compute — the applied mean is one step stale (watch the
+``staleness`` column flip 0 -> 1 after the warm-up step) while EF and
+telemetry stay current.  ``--overlap-delay 0`` is the bit-exact bucketed
+drop-in; ``--overlap-chunks`` sets the ring section count::
+
+    python examples/distributed_training.py --transport overlap \\
+        --overlap-chunks 4 --overlap-delay 1
+
 **Federated cohort simulation** (DESIGN.md §13): ``--n-clients N`` vmaps
 ``N / W`` simulated clients onto each dp worker — per-client EF memory,
 per-client gamma, non-IID Dirichlet-tilted shards, partial participation
@@ -84,6 +96,7 @@ from repro.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.comm.gossip import GossipConfig
+from repro.comm.overlap import OverlapConfig
 from repro.comm.topology import TOPOLOGIES, build_topology
 from repro.comm.transport import transport_names
 from repro.configs import get_smoke_config
@@ -99,7 +112,7 @@ from repro.sharding import param_shardings
 
 
 def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
-        gossip=GossipConfig()):
+        gossip=GossipConfig(), overlap=OverlapConfig()):
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = get_smoke_config("yi-34b")
     model = build_model(cfg)
@@ -109,7 +122,7 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
                                   compressor=Compressor(gamma=gamma,
                                                         min_compress_size=64),
                                   eta=0.05, transport=transport,
-                                  gossip=gossip))
+                                  gossip=gossip, overlap=overlap))
     # links per worker uplink: the gossip worker sends its payload to each
     # of `degree` neighbors; gather/pmean transports send to the W-1 others
     if kind in ("csgd_asss", "nonadaptive") and transport == "gossip":
@@ -121,7 +134,8 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
     with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, param_shardings(params, mesh))
-        st = init_opt_state(params, run_cfg, 4)
+        st = init_opt_state(params, run_cfg, 4,
+                            stacked_mask=model.stacked_mask(params))
         st = jax.device_put(st, opt_state_shardings(st, params, mesh,
                                                     run_cfg))
         step_fn = None
@@ -134,12 +148,14 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
             params, st, m = step_fn(params, st, batch)
             if i % 5 == 0 or i == steps - 1:
                 wire = float(m["wire_bytes"])
+                stale = (f" staleness={float(m['staleness']):.0f}"
+                         if "staleness" in m else "")
                 print(f"  [{kind:9s}] step {i:3d} loss={float(m['loss']):.4f}"
                       f" alpha={float(m['alpha']):.4f}"
                       f" wire_bytes/link={wire:.3e}"
                       f" uplink={n_links * wire:.3e}"
                       f" backlog={float(m['ef_backlog']):.3f}"
-                      f" cos={float(m['ef_cosine']):.3f}")
+                      f" cos={float(m['ef_cosine']):.3f}{stale}")
     return float(m["wire_bytes"])
 
 
@@ -206,6 +222,15 @@ def main():
                     help="gossip mixing graph (transport=gossip)")
     ap.add_argument("--consensus-lr", type=float, default=1.0,
                     help="AdaGossip consensus step numerator")
+    ap.add_argument("--overlap-chunks", type=int,
+                    default=OverlapConfig.n_chunks,
+                    help="ring sections per gather axis "
+                         "(transport=overlap, DESIGN.md §14)")
+    ap.add_argument("--overlap-delay", type=int,
+                    default=OverlapConfig.delay, choices=[0, 1],
+                    help="1: ship the previous step's payload (overlapped,"
+                         " one-step-stale aggregate); 0: bit-exact "
+                         "bucketed drop-in")
     ap.add_argument("--n-clients", type=int, default=0,
                     help="> 0: federated cohort demo (DESIGN.md §13) — "
                          "support vs mean aggregation on non-IID shards")
@@ -228,13 +253,18 @@ def main():
         return
     gossip = GossipConfig(topology=args.topology,
                           consensus_lr=args.consensus_lr)
+    overlap = OverlapConfig(n_chunks=args.overlap_chunks,
+                            delay=args.overlap_delay)
 
     mode = "compressed, per-worker Armijo"
     if args.transport == "gossip":
         mode += f", serverless {args.topology} gossip"
+    elif args.transport == "overlap":
+        mode += (f", chunked-ring overlap ({args.overlap_chunks} chunks, "
+                 f"delay {args.overlap_delay})")
     print(f"== DCSGD-ASSS ({mode}) ==")
     wire_c = run("csgd_asss", steps=args.steps, transport=args.transport,
-                 gossip=gossip)
+                 gossip=gossip, overlap=overlap)
     print("== dense SGD baseline (uncompressed all-reduce) ==")
     wire_d = run("dense", steps=args.steps)
     print(f"\ncommunication saving: {wire_d / wire_c:.1f}x "

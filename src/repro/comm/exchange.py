@@ -87,10 +87,22 @@ def effective_payload_bytes(payload: jax.Array, spec: WireSpec) -> jax.Array:
     return jnp.sum(spec.effective_row_bytes(counts))
 
 
-def gather_packed(payload: jax.Array, dp_axes: AxisNames) -> jax.Array:
+def gather_packed(payload: jax.Array, dp_axes: AxisNames, *,
+                  ring_chunks: int | None = None) -> jax.Array:
     """All-gather one worker's (L, row_words) payload over the dp axes ->
     (W, L, row_words) with the worker axis flattened across multi-axis
-    meshes (('pod','data') gathers as (pod, data, ...))."""
+    meshes (('pod','data') gathers as (pod, data, ...)).
+
+    ``ring_chunks``: when set, the gather is carried by the chunked
+    ppermute ring schedule of :func:`repro.comm.ring.ring_all_gather`
+    (DESIGN.md §14) instead of one flat ``lax.all_gather`` — bit-identical
+    result, same total bytes per link, but split into ``n_chunks * (W-1)``
+    small dependency-free collectives an overlap-capable runtime can hide
+    behind compute."""
+    if ring_chunks is not None:
+        from repro.comm.ring import ring_all_gather
+        flat = ring_all_gather(payload.reshape(-1), dp_axes, ring_chunks)
+        return flat.reshape(-1, *payload.shape)
     gathered = jax.lax.all_gather(payload, dp_axes)
     if isinstance(dp_axes, (tuple, list)) and len(dp_axes) > 1:
         gathered = gathered.reshape(-1, *payload.shape)

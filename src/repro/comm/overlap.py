@@ -1,0 +1,311 @@
+"""Overlapped compressed exchange — chunked ring + delay-1 double buffer
+(DESIGN.md §14).
+
+``transport="overlap"`` keeps the bucketed transport's selection, wire
+format, EF contract, and byte accounting (DESIGN.md §8/§9/§11) but takes
+the collective off the step's critical path two ways:
+
+1. **Chunked ring streaming** — the ONE flat bucketed all_gather becomes
+   ``n_chunks * (W-1)`` ``ppermute`` ring steps (``comm/ring.py``),
+   bit-identical and byte-identical, but split into small
+   dependency-free collectives that interleave with compute and with the
+   decode of already-arrived chunks.
+2. **One-step-stale aggregation** (``delay=1``, the default) — the step
+   ships the PREVIOUS step's encoded payload (carried in
+   :class:`OverlapState`, threaded through ``DistOptState.overlap`` like
+   gossip's), so the collective's operands are ready the moment the step
+   starts: XLA can schedule the entire ring concurrently with this
+   step's backward/Armijo/selection compute.  The aggregate applied at
+   step t is the mean of step t-1's payloads.
+
+**What stays current under staleness.**  Selection, encoding, the EF
+residual, and the telemetry sums always describe THIS step's
+accumulator: the residual is ``acc - decode(own CURRENT payload)``
+(via :func:`repro.comm.wire.roundtrip_rows` — launch-free and bit-exact
+against a literal decode of the carried payload), so the telescoping EF
+identity holds per worker regardless of when the aggregate lands, and
+the ef-coupled gamma controller keeps reading same-step compressor
+health.  Only the applied mean and the ``effective_wire_bytes`` report
+(which describes the buffer actually on the wire this step) are one
+step old.
+
+``delay=0`` degenerates to the bucketed schedule over the ring:
+BIT-EXACT vs ``transport="bucketed"`` in updates, EF memory, wire and
+effective bytes (telemetry to <= 8 ulp) — the pinned parity contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import wire as wire_fmt
+from repro.comm.bucket import (BucketPlan, build_bucket_plan, decode_buckets,
+                               encode_buckets)
+from repro.comm.exchange import check_bucket_payload, gather_packed
+from repro.comm.transport import register_transport
+from repro.core.leafmath import (dp_index, scatter_layers, select_and_encode)
+from repro.core.telemetry import TelemetrySums, sparse_own_sums
+
+__all__ = [
+    "OverlapConfig",
+    "OverlapState",
+    "OverlapCtx",
+    "init_overlap_state",
+    "overlap_exchange",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapConfig:
+    """Static knobs of the overlap transport (``--overlap-*`` CLI flags).
+
+    ``n_chunks``: word-aligned ring sections per gather axis (clamped to
+    the buffer length; more chunks = finer compute/comm interleaving,
+    more collective launches).  ``delay``: 0 = ship this step's payload
+    (bit-exact bucketed parity mode), 1 = ship the carried previous
+    payload (the overlapped mode; aggregate lands one step late).
+    """
+
+    n_chunks: int = 1
+    delay: int = 1
+
+    def __post_init__(self):
+        if self.n_chunks < 1:
+            raise ValueError(
+                f"overlap n_chunks must be >= 1, got {self.n_chunks}")
+        if self.delay not in (0, 1):
+            raise ValueError(
+                f"overlap delay must be 0 or 1, got {self.delay}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class OverlapState:
+    """Double-buffered carried state, per worker (DESIGN.md §14).
+
+    ``payload``/``dense``: the §11 bucket buffer and concatenated dense
+    accumulators this worker encoded LAST step — the operands of this
+    step's collective at ``delay=1``.  ``eff_wire``: the
+    effective-byte count of that carried payload (computed at encode
+    time, reported when the buffer actually ships).  ``seeded``: 0.0
+    until the first encode lands in the buffer; drives the warm-up
+    convention (the initial zero payload decodes to a zero update) and
+    the ``staleness`` metric.
+    """
+
+    payload: jax.Array    # (total_words,) uint32 — §11 bucket buffer
+    dense: jax.Array      # (dense_size,) f32 — concatenated dense accs
+    eff_wire: jax.Array   # () f32 — effective bytes of `payload`
+    seeded: jax.Array     # () f32 — 1.0 once a real payload is carried
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapCtx:
+    """Static config + this worker's carried (traced) state."""
+
+    cfg: OverlapConfig
+    state: OverlapState
+
+
+def _zero_payload_eff_bytes(plan: BucketPlan) -> float:
+    """Effective bytes of the all-zero §11 buffer the warm-up step ships:
+    ragged rows decode count 0 (header words only count as effective),
+    non-ragged rows always ship full rows, dense leaves ship dense."""
+    eff = 0.0
+    for lane in plan.leaves:
+        if lane.dense:
+            eff += float(jnp.prod(jnp.asarray(lane.shape))) * 4.0
+        elif lane.spec.ragged:
+            eff += lane.L * float(lane.spec.effective_row_bytes(0))
+        else:
+            eff += lane.L * lane.spec.row_bytes
+    return eff
+
+
+def init_overlap_state(shapes, stacked, comp, abstract: bool = False
+                       ) -> OverlapState:
+    """Fresh (unbatched, per-worker) carried state for a gradient pytree
+    with flat leaf ``shapes`` and per-leaf ``stacked`` flags — the SAME
+    flags the worker passes to ``worker_compress_aggregate``
+    (``stacked_mask``), or the payload geometry will not line up (the
+    exchange raises at trace time on any mismatch).
+    """
+    plan = build_bucket_plan([tuple(s) for s in shapes], list(stacked), comp)
+    dense_size = 0
+    for lane in plan.leaves:
+        if lane.dense:
+            n = 1
+            for s in lane.shape:
+                n *= int(s)
+            dense_size += n
+    if abstract:
+        return OverlapState(
+            payload=jax.ShapeDtypeStruct((plan.total_words,), jnp.uint32),
+            dense=jax.ShapeDtypeStruct((dense_size,), jnp.float32),
+            eff_wire=jax.ShapeDtypeStruct((), jnp.float32),
+            seeded=jax.ShapeDtypeStruct((), jnp.float32))
+    return OverlapState(
+        payload=jnp.zeros((plan.total_words,), jnp.uint32),
+        dense=jnp.zeros((dense_size,), jnp.float32),
+        eff_wire=jnp.float32(_zero_payload_eff_bytes(plan)),
+        seeded=jnp.float32(0.0))
+
+
+@register_transport("overlap", stateful=True, description=(
+    "chunked-ring, double-buffered exchange: the collective ships the "
+    "previous step's payload concurrently with this step's compute"))
+def overlap_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
+                     W, *, ctx: OverlapCtx):
+    """Bucketed semantics on an overlapped schedule (DESIGN.md §14).
+
+    At ``delay=1`` the collective (ring + dense pmean) consumes only
+    ``ctx.state`` — data-ready at step start, schedulable concurrently
+    with every current-step op; EF/telemetry stay current via the
+    launch-free own-payload roundtrip.  At ``delay=0`` the own rows come
+    off the gathered decode exactly like the bucketed consumer, making
+    this a bit-exact drop-in (the pinned parity mode).
+    """
+    cfg, state = ctx.cfg, ctx.state
+    stale = cfg.delay == 1
+    plan = build_bucket_plan([g.shape for g in flat_g], flat_s, comp)
+    lanes = plan.leaves
+    n = len(lanes)
+
+    sel = select_and_encode(flat_g, flat_m, flat_s, eta, comp, gamma_t,
+                            plan)
+    use_fused = sel.use_fused
+
+    # ---- CURRENT-step buffers (next step's collective operands) ---------
+    payload = jnp.zeros((0,), jnp.uint32)
+    if plan.total_words:
+        payload = encode_buckets(plan, sel.enc_rows)
+        check_bucket_payload(payload, plan, comp)
+    if state.payload.shape != payload.shape:
+        raise ValueError(
+            f"OverlapState.payload shape {state.payload.shape} does not "
+            f"match the bucket plan's ({payload.shape}) — init the state "
+            "with the same leaf shapes/stacked_mask/compressor the worker "
+            "uses (see init_overlap_state)")
+
+    dense_ids = list(plan.dense_ids)
+    dense_acc = [None] * n
+    for i in dense_ids:
+        dense_acc[i] = flat_m[i].astype(jnp.float32) \
+            + eta * flat_g[i].astype(jnp.float32)
+    dense_cat = (jnp.concatenate([dense_acc[i].reshape(-1)
+                                  for i in dense_ids])
+                 if dense_ids else jnp.zeros((0,), jnp.float32))
+    if state.dense.shape != dense_cat.shape:
+        raise ValueError(
+            f"OverlapState.dense shape {state.dense.shape} does not match "
+            f"the plan's concatenated dense size ({dense_cat.shape})")
+
+    # ---- the collective ships the carried (stale) or current buffer -----
+    ship_pay = state.payload if stale else payload
+    ship_dense = state.dense if stale else dense_cat
+
+    decoded = [None] * n
+    if plan.total_words:
+        all_pay = gather_packed(ship_pay, dp_axes,
+                                ring_chunks=cfg.n_chunks)  # (W, total)
+        decoded = decode_buckets(plan, all_pay)
+
+    dense_mean = [None] * n
+    if dense_ids:
+        mean_cat = jax.lax.pmean(ship_dense, dp_axes)
+        off = 0
+        for i in dense_ids:
+            size = dense_acc[i].size
+            dense_mean[i] = mean_cat[off:off + size].reshape(
+                dense_acc[i].shape)
+            off += size
+
+    # delay=1 EF roundtrip, batched across same-spec leaves: row_fields /
+    # fields_to_rows are strictly row-wise (per-row scale, per-row mask),
+    # so the common many-identical-lanes case shares ONE launch set
+    # instead of one per leaf — bit-identical per row, and the per-leaf
+    # dispatch overhead that would otherwise price the stale mode above
+    # the bucketed baseline disappears
+    own_rt = [None] * n
+    if stale:
+        by_spec: dict = {}
+        for lane in lanes:
+            if not lane.dense:
+                by_spec.setdefault(lane.spec, []).append(lane)
+        for gspec, group in by_spec.items():
+            vals = jnp.concatenate([sel.enc_rows[l.index][0] for l in group])
+            idxs = jnp.concatenate([sel.enc_rows[l.index][1] for l in group])
+            counts = None
+            if gspec.ragged:
+                counts = jnp.concatenate([
+                    jnp.broadcast_to(
+                        jnp.asarray(c, jnp.int32).reshape(-1), (l.L,))
+                    if (c := sel.enc_rows[l.index][2]) is not None
+                    else jnp.full((l.L,), gspec.full_count, jnp.int32)
+                    for l in group])
+            rv, ri = wire_fmt.roundtrip_rows(vals, idxs, gspec,
+                                             counts=counts)
+            off = 0
+            for l in group:
+                own_rt[l.index] = (rv[off:off + l.L], ri[off:off + l.L])
+                off += l.L
+
+    # ---- per-leaf consumers, ORIGINAL tree order (bucketed parity:
+    # identical f32 accumulation order for bytes and telemetry sums)
+    updates, new_mem = [], []
+    wire = jnp.float32(0.0)
+    cur_eff = jnp.float32(0.0)
+    sums = TelemetrySums.zero()
+    w_idx = dp_index(dp_axes)
+    for lane, g, m in zip(lanes, flat_g, flat_m):
+        i = lane.index
+        if lane.dense:
+            acc = dense_acc[i]
+            updates.append(dense_mean[i])
+            new_mem.append(jnp.zeros_like(m))
+            nbytes = jnp.float32(acc.size * acc.dtype.itemsize)
+            wire = wire + nbytes
+            cur_eff = cur_eff + nbytes
+            sums = sums.add_dense(acc, g)
+            continue
+        spec, L, d = lane.spec, lane.L, lane.d
+        g_vals, g_idx = decoded[i]
+        mean_dense = scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
+
+        # EF against the CURRENT own payload: at delay=0 the gathered
+        # buffer IS current — slice own rows exactly like the bucketed
+        # consumer; at delay=1 the gather carries old rows, so roundtrip
+        # the encoder's own fields instead (bit-exact, launch-free)
+        if stale:
+            own_vals, own_idx = own_rt[i]
+        else:
+            own_vals = jax.lax.dynamic_index_in_dim(g_vals, w_idx, 0,
+                                                    keepdims=False)
+            own_idx = jax.lax.dynamic_index_in_dim(g_idx, w_idx, 0,
+                                                   keepdims=False)
+        own_dense = scatter_layers(own_vals, own_idx, L, d, jnp.float32)
+        if use_fused:
+            r = sel.resid[i] + (sel.sent[i] - own_dense)
+        else:
+            r = sel.acc2[i] - own_dense
+
+        updates.append(mean_dense.reshape(g.shape))
+        new_mem.append(r.reshape(m.shape).astype(m.dtype))
+        wire = wire + jnp.float32(L * spec.row_bytes)
+        cur_eff = cur_eff + (
+            jnp.float32(L) * spec.effective_row_bytes(sel.counts[i])
+            if spec.ragged else jnp.float32(L * spec.row_bytes))
+        own_sq, own_dot = sparse_own_sums(own_vals, own_idx, sel.g2f[i])
+        sums = sums.add(g_sq=sel.leaf_g_sq[i], acc_sq=sel.leaf_acc_sq[i],
+                        resid_sq=jnp.sum(r * r), own_sq=own_sq,
+                        own_dot_g=own_dot)
+
+    # wire bytes are static per plan (the full buffer crosses the wire
+    # every step, carried or not); effective bytes describe the buffer
+    # actually shipped THIS step — the carried one under delay=1
+    eff_out = state.eff_wire if stale else cur_eff
+    new_state = OverlapState(payload=payload, dense=dense_cat,
+                             eff_wire=cur_eff, seeded=jnp.float32(1.0))
+    return updates, new_mem, wire, eff_out, sums, new_state

@@ -82,6 +82,7 @@ def _ensure_registered() -> None:
     happens those imports are cheap no-ops or resolve cleanly.
     """
     import repro.comm.gossip      # noqa: F401  (registers "gossip")
+    import repro.comm.overlap     # noqa: F401  (registers "overlap")
     import repro.core.dcsgd       # noqa: F401  (registers "bucketed"/"perleaf")
 
 

@@ -287,6 +287,36 @@ def fields_to_rows(ifields: jax.Array, vfields: jax.Array,
     return vals, idx
 
 
+def roundtrip_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
+                   counts: jax.Array | None = None):
+    """``decode_rows(encode_rows(vals, idx, ...))`` value semantics WITHOUT
+    materializing packed words — bit-exact by construction, launch-free.
+
+    The encode side quantizes/masks through :func:`row_fields` and the
+    decode side reinterprets through :func:`fields_to_rows`; composing the
+    two directly skips the pack/unpack kernels in between (every packed
+    field round-trips its low ``value_bits``/``index_bits`` exactly, and
+    ``fields_to_rows``'s two's-complement fold maps the un-truncated
+    int32 quantized fields to the same values the truncated wire fields
+    decode to).  The overlap transport (DESIGN.md §14) uses this for the
+    CURRENT-step EF residual while the collective still carries the
+    previous step's payload: no second unpack launch set, and the
+    residual equals ``acc - decode(own payload)`` bit-for-bit — pinned by
+    tests against a literal decode of the carried payload.
+    """
+    header, ifields, vfields, counts = row_fields(vals, idx, spec,
+                                                  counts=counts)
+    if spec.ragged:
+        # the pack kernels zero invalid fields; reproduce that here so
+        # masked entries decode to value 0.0 at the block-base index,
+        # exactly like the wire
+        m = field_mask(spec.k, counts, spec.count_period)
+        ifields = jnp.where(m, ifields, 0)
+        vfields = jnp.where(m, vfields, 0)
+    scale_words = header[:, -1:] if spec.value_bits <= 8 else None
+    return fields_to_rows(ifields, vfields, scale_words, counts, spec)
+
+
 def decode_rows(payload: jax.Array, spec: WireSpec, *,
                 impl: str | None = None, return_counts: bool = False):
     """Decode a packed (R, row_words) uint32 payload back to

@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.comm.gossip import GossipConfig
+from repro.comm.overlap import OverlapConfig
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
 from repro.core.gamma import GammaControllerConfig
@@ -244,10 +245,15 @@ class OptimizerConfig:
     # into ONE flat packed all_gather + batched kernel launches + ONE
     # dense pmean; "perleaf" is the bit-exact reference schedule (one
     # collective per leaf) kept for parity tests and paired benchmarks;
-    # "gossip" is the serverless neighbor-ppermute exchange.
+    # "gossip" is the serverless neighbor-ppermute exchange; "overlap"
+    # streams the bucket buffer over a chunked ppermute ring and ships
+    # the previous step's payload so the collective hides behind compute
+    # (DESIGN.md §14).
     transport: str = "bucketed"
     # gossip/consensus hyper-parameters; only read when transport="gossip"
     gossip: GossipConfig = GossipConfig()
+    # overlap ring/staleness knobs; only read when transport="overlap"
+    overlap: OverlapConfig = OverlapConfig()
     # federated cohort simulation (DESIGN.md §13): n_clients > 0 vmaps a
     # client cohort above the dp mesh with per-client EF/gamma state and
     # support-weighted aggregation of the decoded top-k payloads
@@ -261,6 +267,11 @@ class OptimizerConfig:
                 "federated cohort simulation does not compose with "
                 "transport='gossip' — the cohort has its own one-gather "
                 "collective schedule (DESIGN.md §13)")
+        if self.federated.enabled and self.transport == "overlap":
+            raise ValueError(
+                "federated cohort simulation does not compose with "
+                "transport='overlap' — the cohort gather carries per-client "
+                "rows on its own schedule (DESIGN.md §13/§14)")
 
 
 @dataclasses.dataclass(frozen=True)

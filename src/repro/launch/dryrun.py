@@ -29,6 +29,7 @@ from repro.compat import set_mesh
 import jax.numpy as jnp
 
 from repro.comm.gossip import GossipConfig
+from repro.comm.overlap import OverlapConfig
 from repro.comm.topology import TOPOLOGIES
 from repro.comm.transport import transport_names
 from repro.configs import ARCH_NAMES, SHAPES, get_config
@@ -109,9 +110,16 @@ def _coll_wire(kind: str, nbytes: int, n: int) -> float:
     return nbytes * frac                 # all-gather, all-to-all
 
 
-def parse_hlo(hlo_text: str) -> dict:
+def parse_hlo(hlo_text: str, *, ring_schedule: bool = False) -> dict:
     """Trip-count-aware per-chip totals: matmul FLOPs, buffer-traffic bytes,
-    collective wire bytes (per kind) — all from the partitioned HLO."""
+    collective wire bytes (per kind) — all from the partitioned HLO.
+
+    ``ring_schedule``: the permute ops form a send-right ring (the overlap
+    transport, DESIGN.md §14) rather than a neighbor-fanout graph (gossip):
+    every one of the ``n_chunks * (W-1)`` hops traverses the SAME physical
+    i -> i+1 link (per hop: payload/W of the gathered total, over W-1
+    steps), so the per-link figure keeps the FULL permute total instead of
+    dividing by the permute count."""
     # ---- split into computations -----------------------------------------
     comps: dict[str, list[str]] = {}
     entry = None
@@ -232,11 +240,15 @@ def parse_hlo(hlo_text: str) -> dict:
     # direction (the gossip transport issues ``degree`` of them per
     # exchange), so the per-step figure comparable across transports
     # divides the permute total by the permute count — one link's
-    # payload — while the star-shaped collectives pass through unchanged
+    # payload — while the star-shaped collectives pass through unchanged.
+    # The ring schedule is the exception: its permutes all share one
+    # physical link, so the full total IS the per-link figure.
     perm = out.get("collective-permute", 0.0)
     n_perm = agg["counts"].get("collective-permute", 0)
+    per_link_perm = perm if ring_schedule else \
+        (perm / n_perm if n_perm else 0.0)
     out["wire_bytes_per_link"] = (out["total_wire_bytes"] - perm) \
-        + (perm / n_perm if n_perm else 0.0)
+        + per_link_perm
     return {
         "collectives": out,
         "hlo_matmul_flops": agg["flops"],
@@ -252,7 +264,8 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
                     microbatches=None, ef_host_offload=False,
                     ef_dtype="float32", shard_local_topk=False,
                     local_steps=1, transport="bucketed", topology="ring",
-                    n_clients=0, aggregation="support"):
+                    n_clients=0, aggregation="support",
+                    overlap_chunks=1, overlap_delay=1):
     if microbatches is None:
         microbatches = 4 if shape.kind == "train" else 1
     if n_clients:
@@ -271,6 +284,8 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
             shard_local_topk=shard_local_topk, local_steps=local_steps,
             transport=transport,
             gossip=GossipConfig(topology=topology),
+            overlap=OverlapConfig(n_chunks=overlap_chunks,
+                                  delay=overlap_delay),
             federated=FederatedConfig(n_clients=n_clients,
                                       aggregation=aggregation)),
         microbatches=microbatches)
@@ -316,6 +331,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               kv_int8: bool = False, local_steps: int = 1,
               transport: str = "bucketed", topology: str = "ring",
               n_clients: int = 0, aggregation: str = "support",
+              overlap_chunks: int = 1, overlap_delay: int = 1,
               keep_hlo: bool = False) -> dict:
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
@@ -329,7 +345,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                      "seq_parallel": seq_parallel,
                      "microbatches": microbatches,
                      "transport": transport,
-                     "topology": topology}}
+                     "topology": topology,
+                     "overlap_chunks": overlap_chunks,
+                     "overlap_delay": overlap_delay}}
     shape = SHAPES[shape_name]
     cfg0 = get_config(arch)
     cfg, note = adapt_for_shape(cfg0, shape)
@@ -352,7 +370,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     run = make_run_config(cfg, shape, opt_kind, gamma, microbatches,
                           ef_host_offload, ef_dtype, shard_local_topk,
                           local_steps, transport, topology,
-                          n_clients, aggregation)
+                          n_clients, aggregation,
+                          overlap_chunks, overlap_delay)
     n_chips = mesh.size
 
     with set_mesh(mesh):
@@ -367,7 +386,9 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             batch_like = model.input_specs(shape)
             if n_clients:
                 batch_like = federate_input_specs(batch_like, n_clients)
-            opt_like = init_opt_state(params_like, run, W, abstract=True)
+            opt_like = init_opt_state(
+                params_like, run, W, abstract=True,
+                stacked_mask=model.stacked_mask(params_like))
             step = build_train_step(model, run, mesh)(params_like, batch_like)
             lowered = step.lower(params_like, opt_like, batch_like)
         elif shape.kind == "prefill":
@@ -411,7 +432,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             "alias_bytes": int(ma.alias_size_in_bytes),
         }
         hlo = compiled.as_text()
-        parsed = parse_hlo(hlo)
+        parsed = parse_hlo(hlo, ring_schedule=(transport == "overlap"))
         rec["collectives"] = parsed["collectives"]
         rec["flops_per_chip"] = parsed["hlo_matmul_flops"]
         rec["bytes_per_chip"] = parsed["hlo_traffic_bytes"]
@@ -451,6 +472,15 @@ def main() -> None:
     ap.add_argument("--topology", default="ring",
                     choices=sorted(TOPOLOGIES),
                     help="gossip mixing graph (transport=gossip)")
+    ap.add_argument("--overlap-chunks", type=int,
+                    default=OverlapConfig.n_chunks,
+                    help="transport=overlap: ring chunk count (DESIGN.md "
+                         "§14); the per-link accounting charges the FULL "
+                         "permute total — every hop shares one link")
+    ap.add_argument("--overlap-delay", type=int,
+                    default=OverlapConfig.delay, choices=[0, 1],
+                    help="transport=overlap: 1 = ship the previous step's "
+                         "payload (double-buffered), 0 = synchronous")
     ap.add_argument("--n-clients", type=int, default=0,
                     help="> 0: lower the federated cohort train step "
                          "(n-clients/W vmapped clients per dp worker)")
@@ -487,7 +517,9 @@ def main() -> None:
                             transport=args.transport,
                             topology=args.topology,
                             n_clients=args.n_clients,
-                            aggregation=args.aggregation)
+                            aggregation=args.aggregation,
+                            overlap_chunks=args.overlap_chunks,
+                            overlap_delay=args.overlap_delay)
         except Exception as e:  # record failures — they are bugs to fix
             rec = {"arch": arch, "shape": shape, "status": "FAIL",
                    "error": f"{type(e).__name__}: {e}",

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
 from repro.comm.gossip import GossipConfig
+from repro.comm.overlap import OverlapConfig
 from repro.comm.topology import TOPOLOGIES
 from repro.comm.transport import transport_names
 from repro.configs import get_config, get_smoke_config
@@ -112,7 +113,20 @@ def main() -> None:
                          "bucketed = ONE flat packed all_gather + batched "
                          "launches; perleaf = one collective per leaf "
                          "(bit-exact reference); gossip = serverless "
-                         "neighbor-ppermute consensus exchange")
+                         "neighbor-ppermute consensus exchange; overlap = "
+                         "chunked-ring, double-buffered exchange "
+                         "(DESIGN.md §14)")
+    # ---- overlapped exchange (transport=overlap, DESIGN.md §14) ----
+    ap.add_argument("--overlap-chunks", type=int,
+                    default=OverlapConfig.n_chunks,
+                    help="ring chunk count: the payload crosses each link "
+                         "as n_chunks independent collective_permute hops "
+                         "per ring step")
+    ap.add_argument("--overlap-delay", type=int,
+                    default=OverlapConfig.delay, choices=[0, 1],
+                    help="1 = double-buffered: ship the PREVIOUS step's "
+                         "payload so the collective overlaps this step's "
+                         "compute; 0 = synchronous (bit-exact vs bucketed)")
     # ---- gossip / consensus (transport=gossip, DESIGN.md §12) ----
     ap.add_argument("--topology", default=GossipConfig.topology,
                     choices=sorted(TOPOLOGIES),
@@ -192,6 +206,8 @@ def main() -> None:
                                 consensus_lr=args.consensus_lr,
                                 beta=args.consensus_beta,
                                 lr_max=args.consensus_lr_max),
+            overlap=OverlapConfig(n_chunks=args.overlap_chunks,
+                                  delay=args.overlap_delay),
             federated=FederatedConfig(
                 n_clients=args.n_clients,
                 clients_per_round=args.clients_per_round,
@@ -206,7 +222,8 @@ def main() -> None:
     with set_mesh(mesh):
         params = model.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, param_shardings(params, mesh))
-        opt_state = init_opt_state(params, run, W)
+        opt_state = init_opt_state(params, run, W,
+                                   stacked_mask=model.stacked_mask(params))
         opt_state = jax.device_put(
             opt_state, opt_state_shardings(opt_state, params, mesh, run))
 

@@ -29,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.comm.gossip import GossipCtx, GossipState
+from repro.comm.overlap import OverlapCtx, OverlapState, init_overlap_state
 from repro.comm.topology import build_topology
 from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
@@ -68,6 +69,8 @@ class DistOptState(NamedTuple):
     gossip: Any = ()         # GossipOptState under transport="gossip"
     fed: Any = ()            # ClientState when federated.n_clients > 0
                              # (leaves (n_clients, ...) over the dp axes)
+    overlap: Any = ()        # OverlapState under transport="overlap"
+                             # (leaves (W, ...): carried payload buffers)
 
 
 def _n_workers(mesh) -> int:
@@ -75,7 +78,13 @@ def _n_workers(mesh) -> int:
 
 
 def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
-                   abstract: bool = False) -> DistOptState:
+                   abstract: bool = False,
+                   stacked_mask: PyTree | None = None) -> DistOptState:
+    """``stacked_mask``: the per-leaf stacked flags the worker will pass to
+    ``worker_compress_aggregate`` — REQUIRED to match for
+    ``transport="overlap"`` (the carried payload buffer's geometry derives
+    from it; ``build_train_step`` passes ``model.stacked_mask``).  The
+    default reproduces dcsgd's ``leaf.ndim >= 2`` fallback."""
     opt = run_cfg.optimizer
     ef_dt = jnp.dtype(opt.ef_dtype)
 
@@ -95,8 +104,23 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
     fed_on = opt.federated.enabled
     needs_mem = opt.kind in ("csgd_asss", "nonadaptive") and not fed_on
     needs_gossip = needs_mem and opt.transport == "gossip"
+    needs_overlap = needs_mem and opt.transport == "overlap"
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
         (lambda s, d: jnp.zeros(s, d))
+
+    overlap = ()
+    if needs_overlap:
+        flat_p, treedef = jax.tree.flatten(params)
+        flags = ([leaf.ndim >= 2 for leaf in flat_p]
+                 if stacked_mask is None
+                 else treedef.flatten_up_to(stacked_mask))
+        ov = init_overlap_state([p.shape for p in flat_p], flags,
+                                opt.compressor, abstract=abstract)
+        overlap = jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct((n_workers,) + x.shape, x.dtype)
+                       if abstract else
+                       jnp.broadcast_to(x[None], (n_workers,) + x.shape)),
+            ov)
     return DistOptState(
         step=mk((), jnp.int32),
         alpha_prev=(mk((n_workers,), jnp.float32) if abstract else
@@ -115,6 +139,7 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
             if needs_gossip else ()),
         fed=(init_client_state(params, opt, opt.federated.n_clients,
                                abstract=abstract) if fed_on else ()),
+        overlap=overlap,
     )
 
 
@@ -157,6 +182,8 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
             memory=jax.tree.map(mem_sh, pspecs),
             gamma=vec, rounds=vec, alpha=vec)
             if opt_state.fed != () else ()),
+        overlap=(jax.tree.map(lambda _: vec, opt_state.overlap)
+                 if opt_state.overlap != () else ()),
     )
 
 
@@ -207,6 +234,28 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 "transport 'gossip' does not compose with shard_local_topk")
         topo = build_topology(opt.gossip.topology, W)
 
+    overlap_mode = opt.transport == "overlap"
+    if overlap_mode:
+        if opt.kind not in ("csgd_asss", "nonadaptive"):
+            raise ValueError(
+                f"transport 'overlap' needs a compressing optimizer "
+                f"(csgd_asss | nonadaptive), got kind={opt.kind!r}")
+        if opt.shard_local_topk:
+            raise ValueError(
+                "transport 'overlap' does not compose with "
+                "shard_local_topk (the carried payload geometry is the "
+                "whole-gradient bucket plan, not a model-shard's)")
+
+    # local_steps consumes exactly one microbatch per local step — a
+    # build-time contract, not a traced assert (asserts vanish under
+    # `python -O` and would otherwise fail late inside tracing)
+    if opt.local_steps > 1 and opt.kind in ("csgd_asss", "nonadaptive") \
+            and micro != opt.local_steps:
+        raise ValueError(
+            f"local_steps={opt.local_steps} requires microbatches == "
+            f"local_steps (got microbatches={micro}): each local Armijo "
+            f"step consumes exactly one microbatch of the global batch")
+
     fed = opt.federated
     fed_mode = fed.enabled
     if fed_mode:
@@ -248,7 +297,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         """H local Armijo-SGD steps, then ONE EF-compressed exchange of the
         accumulated model delta (paper §V future work; Qsparse-local [8])."""
         H = run_cfg.optimizer.local_steps
-        assert micro == H, "local_steps requires microbatches == local_steps"
+        # micro == H is enforced at build time (build_train_step above)
         mbs = jax.tree.map(
             lambda x: x.reshape(H, x.shape[0] // H, *x.shape[1:]), batch)
 
@@ -284,9 +333,26 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
             params, p_end)
         smask = model.stacked_mask(params)
-        updates, new_mem, wire, eff_wire, tel = worker_compress_aggregate(
-            delta, mem, jnp.float32(1.0), opt.compressor, dp,
-            stacked_mask=smask, gamma_t=gamma_t, transport=opt.transport)
+        if overlap_mode:
+            # THE overlap seam (DESIGN.md §14): the exchange ships the
+            # carried previous-segment payload, so its ring runs
+            # concurrently with this segment's H local Armijo-SGD steps
+            ctx = OverlapCtx(
+                cfg=opt.overlap,
+                state=jax.tree.map(lambda x: x[0], opt_state.overlap))
+            updates, new_mem, wire, eff_wire, tel, ov_state = \
+                worker_compress_aggregate(
+                    delta, mem, jnp.float32(1.0), opt.compressor, dp,
+                    stacked_mask=smask, gamma_t=gamma_t,
+                    transport=opt.transport, transport_ctx=ctx)
+            new_overlap = jax.tree.map(lambda x: x[None], ov_state)
+        else:
+            updates, new_mem, wire, eff_wire, tel = \
+                worker_compress_aggregate(
+                    delta, mem, jnp.float32(1.0), opt.compressor, dp,
+                    stacked_mask=smask, gamma_t=gamma_t,
+                    transport=opt.transport)
+            new_overlap = opt_state.overlap
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
@@ -303,6 +369,10 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             "ef_backlog": jax.lax.pmean(tel.ef_backlog, dp),
             "ef_cosine": jax.lax.pmean(tel.cosine, dp),
         }
+        if overlap_mode:
+            metrics["staleness"] = jax.lax.pmean(
+                jnp.float32(opt.overlap.delay)
+                * opt_state.overlap.seeded[0], dp)
         new_state = DistOptState(
             step=opt_state.step + 1,
             alpha_prev=(amax_f / opt.armijo.omega)[None],
@@ -311,6 +381,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             gamma=gamma_t[None],
             telemetry=jax.tree.map(lambda x: x[None], tel),
             cum_eff_bytes=cum_eff,
+            overlap=new_overlap,
         )
         return new_params, new_state, metrics
 
@@ -401,6 +472,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             telemetry=opt_state.telemetry,
             cum_eff_bytes=cum_eff,
             gossip=opt_state.gossip,
+            overlap=opt_state.overlap,
             fed=ClientState(
                 memory=new_mem,
                 gamma=jnp.where(pl > 0, gamma_t_c, fedst.gamma),
@@ -528,6 +600,15 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                         grads, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
                         transport=opt.transport, transport_ctx=ctx)
+            elif overlap_mode:
+                ctx = OverlapCtx(
+                    cfg=opt.overlap,
+                    state=jax.tree.map(lambda x: x[0], opt_state.overlap))
+                updates, new_mem, wire, eff_wire, tel, ov_state = \
+                    worker_compress_aggregate(
+                        grads, mem, eta, opt.compressor, dp,
+                        stacked_mask=smask, gamma_t=gamma_t,
+                        transport=opt.transport, transport_ctx=ctx)
             else:
                 # covers shard_local_topk on 0.4.x too: there the training
                 # body is already manual over 'model' (compat.
@@ -568,6 +649,16 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             new_params = base_params
         else:
             new_gossip = opt_state.gossip
+        if overlap_mode:
+            new_overlap = jax.tree.map(lambda x: x[None], ov_state)
+            # 1.0 once the carried payload is a real previous step (delay=1
+            # applies a one-step-stale aggregate); 0.0 on the warmup step
+            # and always under delay=0 (DESIGN.md §14)
+            metrics["staleness"] = jax.lax.pmean(
+                jnp.float32(opt.overlap.delay)
+                * opt_state.overlap.seeded[0], dp)
+        else:
+            new_overlap = opt_state.overlap
         new_state = DistOptState(
             step=opt_state.step + 1,
             alpha_prev=new_alpha[None],
@@ -577,6 +668,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             telemetry=jax.tree.map(lambda x: x[None], tel),
             cum_eff_bytes=cum_eff,
             gossip=new_gossip,
+            overlap=new_overlap,
         )
         return new_params, new_state, metrics
 
@@ -609,12 +701,16 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             fed=(ClientState(
                 memory=jax.tree.map(lambda _: lead, params_like),
                 gamma=lead, rounds=lead, alpha=lead)
-                if fed_mode else ()))
+                if fed_mode else ()),
+            overlap=(OverlapState(
+                payload=lead, dense=lead, eff_wire=lead, seeded=lead)
+                if overlap_mode else ()))
         metric_keys = ("loss", "grad_sqnorm", "alpha", "n_evals",
                        "wire_bytes", "effective_wire_bytes",
                        "cum_effective_wire_bytes", "ef_backlog",
                        "ef_cosine", "gamma") + \
-            (("participants",) if fed_mode else ())
+            (("participants",) if fed_mode else ()) + \
+            (("staleness",) if overlap_mode else ())
         metrics_spec = {k: rep for k in metric_keys}
         # Manual over dp, auto over 'model' (XLA partitions the TP math).
         # On 0.4.x partial-auto shard_map cannot contain a lax.scan
@@ -636,7 +732,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             pspecs = jax.tree.map(lambda _: P(), pspecs)
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
         opt_sh = opt_state_shardings(
-            init_opt_state(params_like, run_cfg, W, abstract=True),
+            init_opt_state(params_like, run_cfg, W, abstract=True,
+                           stacked_mask=model.stacked_mask(params_like)),
             params_like, mesh, run_cfg)
         bsh = jax.tree.map(
             lambda s: NamedSharding(mesh, s), batch_spec_of(batch_like),

@@ -121,6 +121,67 @@ def test_gossip_exchange_collective_counts(key, topology, degree):
     assert txt.count(AR) == 0, txt.count(AR)
 
 
+def _lower_overlap(tree, comp, n_chunks, delay, mesh_shape=(W_WORKERS,),
+                   axes=("data",)):
+    from repro.comm.overlap import (OverlapConfig, OverlapCtx,
+                                    init_overlap_state)
+
+    mesh = jax.make_mesh(mesh_shape, axes)
+    leaves = jax.tree.leaves(tree)
+    st = init_overlap_state([x.shape for x in leaves],
+                            [x.ndim >= 2 for x in leaves], comp,
+                            abstract=True)
+    st = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), st)
+    cfg = OverlapConfig(n_chunks=n_chunks, delay=delay)
+    mem = jax.tree.map(jnp.zeros_like, tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+
+    # the carried state must be a traced INPUT: a zero-constant closure
+    # would let XLA fold the delay=1 dense pmean away
+    def worker(g, m, eta, s):
+        return worker_compress_aggregate(
+            g, m, eta, comp, axes, transport="overlap",
+            transport_ctx=OverlapCtx(cfg=cfg, state=s))
+
+    f = shard_map(
+        worker, mesh=mesh,
+        in_specs=(spec, spec, P(), jax.tree.map(lambda _: P(), st)),
+        out_specs=(spec, spec, P(), P(), P(),
+                   jax.tree.map(lambda _: P(), st)),
+        axis_names=set(axes), check_vma=False)
+    return jax.jit(f).lower(tree, mem, jnp.float32(0.1), st).as_text()
+
+
+@pytest.mark.parametrize("mesh_shape,axes,n_chunks", [
+    ((W_WORKERS,), ("data",), 1),
+    ((W_WORKERS,), ("data",), 3),
+    ((W_WORKERS,), ("data",), 7),
+    ((4, 2), ("pod", "data"), 1),
+    ((4, 2), ("pod", "data"), 3),
+])
+@pytest.mark.parametrize("delay", [0, 1])
+def test_overlap_exchange_collective_counts(key, mesh_shape, axes,
+                                            n_chunks, delay):
+    """The overlap transport lowers to EXACTLY the ring schedule's
+    ``collective_permute`` count (``n_permutes``: chunk count x (W-1) per
+    dp axis, ring of rings) with ZERO all_gathers for the compressed
+    leaves — a flat gather sneaking back in would serialize the exchange
+    — and ONE all_reduce (the dense-leaf pmean)."""
+    from repro.comm.ring import n_permutes
+
+    comp = Compressor(gamma=0.05, method="block_topk", block=512,
+                      min_compress_size=64, value_bits=8)
+    tree = _tree(key)
+    leaves = jax.tree.leaves(tree)
+    plan = build_bucket_plan([x.shape for x in leaves],
+                             [x.ndim >= 2 for x in leaves], comp)
+    txt = _lower_overlap(tree, comp, n_chunks, delay, mesh_shape, axes)
+    want = n_permutes(mesh_shape, plan.total_words, n_chunks)
+    assert txt.count(CP) == want, (txt.count(CP), want)
+    assert txt.count(AG) == 0, txt.count(AG)
+    assert txt.count(AR) == 1, txt.count(AR)
+
+
 def test_exchange_all_dense_single_pmean(key):
     comp = Compressor(method="none")
     txt = _lower_exchange(_tree(key), comp, "bucketed")

@@ -117,6 +117,38 @@ def test_int8_kv_cache_decode_close(arch, key):
     assert jnp.array_equal(jnp.argmax(lg1, -1), jnp.argmax(lg8, -1))
 
 
+def test_local_steps_microbatch_mismatch_rejected_at_build_time():
+    """local_steps consumes exactly one microbatch per local Armijo step;
+    a mismatched microbatch count must fail in build_train_step with a
+    clear message, not as an opaque assert inside the traced worker."""
+    import pytest
+
+    from repro.configs import get_smoke_config
+    from repro.configs.base import OptimizerConfig, RunConfig, ShapeConfig
+    from repro.core import ArmijoConfig, Compressor
+    from repro.launch.train_step import build_train_step
+    from repro.models import build_model
+
+    cfg = get_smoke_config("qwen1.5-4b")
+    m = build_model(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def mkrun(local_steps, microbatches):
+        return RunConfig(
+            model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
+            optimizer=OptimizerConfig(
+                kind="csgd_asss", armijo=ArmijoConfig(),
+                compressor=Compressor(gamma=0.1, min_compress_size=64),
+                local_steps=local_steps),
+            microbatches=microbatches)
+
+    with pytest.raises(ValueError, match="microbatches == local_steps"):
+        build_train_step(m, mkrun(2, 4), mesh)
+    with pytest.raises(ValueError, match="local_steps=3"):
+        build_train_step(m, mkrun(3, 1), mesh)
+    build_train_step(m, mkrun(2, 2), mesh)       # matched: builds fine
+
+
 def test_local_steps_distributed():
     """Qsparse-local-style DCSGD-ASSS trains on an 8-device mesh."""
     import os

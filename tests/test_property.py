@@ -475,6 +475,82 @@ def test_bucket_roundtrip_property(seed, method, value_bits, adaptive):
     check_bucket_roundtrip(seed, method, value_bits, adaptive)
 
 
+# ---- chunked ring schedule (DESIGN.md §14) ------------------------------
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 16), st.integers(1, 40),
+       st.integers(0, 2000))
+def test_ring_gather_schedule_property(seed, W, n_chunks, total_words):
+    """For arbitrary (W, n_chunks, total_words) — including n_chunks that
+    do not divide the buffer and n_chunks > total_words — the simulated
+    ring schedule assembles, on EVERY worker, the bit-identical
+    (W, total_words) buffer the flat all_gather produces, covering each
+    slot exactly once (``ring_gather_reference`` raises otherwise).  The
+    SPMD path shares ``chunk_table``/``step_source`` with the simulator
+    and is pinned against ``lax.all_gather`` on real meshes in
+    tests/distributed/test_overlap_exchange.py."""
+    from repro.comm.ring import (chunk_table, n_permutes,
+                                 ring_gather_reference)
+
+    rng = np.random.default_rng(seed)
+    bufs = rng.integers(0, 2**32, (W, total_words), dtype=np.uint32)
+    out = ring_gather_reference(bufs, n_chunks)
+    np.testing.assert_array_equal(
+        out, np.broadcast_to(bufs[None], (W, W, total_words)))
+    # chunk table: contiguous, exhaustive, near-even word-aligned split
+    table = chunk_table(total_words, n_chunks)
+    assert sum(ln for _, ln in table) == total_words
+    off = 0
+    for o, ln in table:
+        assert o == off and ln >= 1
+        off += ln
+    if total_words:
+        assert len(table) == min(n_chunks, total_words)
+        lens = [ln for _, ln in table]
+        assert max(lens) - min(lens) <= 1
+    # the permute budget the HLO pins count: chunks x (W-1) per axis
+    want = len(table) * (W - 1) if total_words else 0
+    assert n_permutes((W,), total_words, n_chunks) == want
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(1, 17),
+       st.integers(64, 1024), st.sampled_from([4, 8, 16, 32]))
+def test_ring_carries_ragged_rows_property(seed, W, n_chunks, d,
+                                           value_bits):
+    """Ragged §9 payload rows (random per-worker valid counts in the
+    header word) survive the chunked ring bit-exactly: chunk boundaries
+    fall anywhere — mid-header, mid-field — yet every assembled row
+    decodes to exactly its source worker's (values, indices, count)."""
+    from repro.comm.ring import ring_gather_reference
+
+    comp = Compressor(gamma=0.05, max_gamma=0.05, method="block_topk",
+                      block=256, min_compress_size=1,
+                      value_bits=value_bits)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    assert spec.ragged
+    rng = np.random.default_rng(seed)
+    payloads, expect = [], []
+    for _ in range(W):
+        x = jnp.asarray(rng.standard_normal((1, d)).astype(np.float32))
+        vals, idx = block_extract_sparse(x, comp)
+        counts = jnp.asarray(rng.integers(1, spec.full_count + 1, 1),
+                             jnp.int32)
+        pay = wire_fmt.encode_rows(vals, idx, spec, counts=counts)
+        payloads.append(np.asarray(pay).reshape(-1))
+        expect.append(wire_fmt.decode_rows(pay, spec, return_counts=True))
+    out = ring_gather_reference(np.stack(payloads), n_chunks)
+    # worker 0's assembled buffer: one payload row per source worker
+    v2, i2, c2 = wire_fmt.decode_rows(jnp.asarray(out[0]), spec,
+                                      return_counts=True)
+    for src in range(W):
+        ve, ie, ce = expect[src]
+        np.testing.assert_array_equal(np.asarray(v2[src]),
+                                      np.asarray(ve[0]))
+        np.testing.assert_array_equal(np.asarray(i2[src]),
+                                      np.asarray(ie[0]))
+        np.testing.assert_array_equal(np.asarray(c2[src]),
+                                      np.asarray(ce[0]))
+
+
 # ---- gossip topology invariants (DESIGN.md §12) -------------------------
 
 @given(st.sampled_from(["ring", "torus", "exp"]),

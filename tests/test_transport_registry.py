@@ -13,13 +13,14 @@ from repro.comm.transport import (get_transport, register_transport,
 
 
 def test_registry_names_complete():
-    assert transport_names() == ("bucketed", "gossip", "perleaf")
+    assert transport_names() == ("bucketed", "gossip", "overlap", "perleaf")
 
 
 def test_registry_flags():
     assert not get_transport("bucketed").stateful
     assert not get_transport("perleaf").stateful
     assert get_transport("gossip").stateful
+    assert get_transport("overlap").stateful
     for name in transport_names():
         tp = get_transport(name)
         assert tp.name == name and callable(tp.exchange)
@@ -29,7 +30,7 @@ def test_registry_flags():
 def test_unknown_transport_message_lists_registered():
     msg = unknown_transport_message("nope")
     assert msg == ("unknown transport 'nope' "
-                   "(want 'bucketed' | 'gossip' | 'perleaf')")
+                   "(want 'bucketed' | 'gossip' | 'overlap' | 'perleaf')")
     with pytest.raises(ValueError, match="'bucketed' | 'gossip'"):
         get_transport("nope")
     with pytest.raises(ValueError, match="unknown transport"):
@@ -65,6 +66,28 @@ def test_reregistration_idempotent_and_conflict_checked():
         raise AssertionError
     with pytest.raises(ValueError, match="already registered"):
         register_transport("bucketed")(imposter)
+
+
+def test_overlap_config_validation():
+    from repro.comm.overlap import OverlapConfig
+
+    OverlapConfig()                              # defaults valid
+    OverlapConfig(n_chunks=7, delay=0)
+    with pytest.raises(ValueError, match="n_chunks"):
+        OverlapConfig(n_chunks=0)
+    with pytest.raises(ValueError, match="delay"):
+        OverlapConfig(delay=2)
+
+
+def test_overlap_rejects_federated_compose():
+    """The cohort gather carries per-client rows on its own schedule —
+    transport='overlap' must be rejected at config time, not deep in the
+    worker body (DESIGN.md §13/§14)."""
+    from repro.configs.base import FederatedConfig, OptimizerConfig
+
+    with pytest.raises(ValueError, match="overlap"):
+        OptimizerConfig(transport="overlap",
+                        federated=FederatedConfig(n_clients=8))
 
 
 def test_stateful_arity_enforced():

@@ -124,6 +124,34 @@ def test_encode_decode_roundtrip(key, value_bits, d):
                                   np.asarray(comp.quantize_values(vals)))
 
 
+@pytest.mark.parametrize("value_bits", [4, 8, 16, 32])
+@pytest.mark.parametrize("ragged", [False, True])
+def test_roundtrip_rows_matches_encode_decode(key, value_bits, ragged):
+    """``roundtrip_rows`` (the overlap transport's launch-free own-payload
+    view, DESIGN.md §14) is BIT-IDENTICAL to a literal
+    decode_rows(encode_rows(...)) at every value width, ragged counts
+    included — so the delay-1 EF residual equals the one a real decode of
+    the carried payload would produce."""
+    d = 1300
+    comp = Compressor(gamma=0.05, max_gamma=0.05 if ragged else 0.0,
+                      method="block_topk", block=256, min_compress_size=64,
+                      value_bits=value_bits)
+    x = jax.random.normal(key, (3, d))
+    vals, idx = block_extract_sparse(x, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    assert spec.ragged == ragged
+    counts = None
+    if ragged:
+        counts = jnp.asarray(
+            np.random.default_rng(value_bits).integers(
+                1, spec.full_count + 1, 3), jnp.int32)
+    ref = wire_fmt.decode_rows(
+        wire_fmt.encode_rows(vals, idx, spec, counts=counts), spec)
+    got = wire_fmt.roundtrip_rows(vals, idx, spec, counts=counts)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(ref[1]))
+
+
 def test_encode_decode_negative_values_sign_extension(key):
     """Two's-complement sub-byte fields: all-negative rows survive."""
     comp = Compressor(gamma=0.1, method="block_topk", block=256,

@@ -42,7 +42,11 @@ Two rule sets:
   roundtrip, while the overlap win it exists for needs a real network.
   The ``gossip_vs_bucketed_step_*`` records (DESIGN.md §12) ride the
   same pairing but are informational only — the serverless path's fixed
-  overhead is a design trade, not a regression.
+  overhead is a design trade, not a regression.  Likewise the
+  ``dense_vs_downlink_step_*`` records (DESIGN.md §15): the compressed
+  downlink's replicated server recompression is the agreed price of
+  halving the accounted per-link bytes, so its paired factor is printed
+  for the trajectory but never gated.
 
 Usage (the CI invocation)::
 
@@ -64,6 +68,7 @@ TEL_RATIO_PREFIX = "ef2pass_tel_ratio_"
 BUCKET_RATIO_PREFIX = "bucketed_vs_perleaf_step_"
 OVERLAP_RATIO_PREFIX = "bucketed_vs_overlap_step_"
 GOSSIP_RATIO_PREFIX = "gossip_vs_bucketed_step_"
+DOWNLINK_RATIO_PREFIX = "dense_vs_downlink_step_"
 FED_STEP_PREFIX = "fed_cohort_step_"
 
 
@@ -101,7 +106,8 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
 
     def is_ratio(k):
         return k[0].startswith((TEL_RATIO_PREFIX, BUCKET_RATIO_PREFIX,
-                                OVERLAP_RATIO_PREFIX, GOSSIP_RATIO_PREFIX))
+                                OVERLAP_RATIO_PREFIX, GOSSIP_RATIO_PREFIX,
+                                DOWNLINK_RATIO_PREFIX))
 
     shared = sorted(k for k in set(baseline) & set(fresh) if not is_ratio(k))
     for k in shared:
@@ -189,6 +195,14 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
     # are a design choice, not a regression signal)
     for (op, backend, shape), ratio in sorted(fresh.items()):
         if op.startswith(GOSSIP_RATIO_PREFIX):
+            print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
+                  f"(informational)")
+
+    # informational: compressed-downlink-vs-dense-return paired factor
+    # (DESIGN.md §15) — the replicated server recompression prices the
+    # accounted byte halving; a design trade, never gated
+    for (op, backend, shape), ratio in sorted(fresh.items()):
+        if op.startswith(DOWNLINK_RATIO_PREFIX):
             print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
                   f"(informational)")
 

@@ -334,6 +334,43 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
            min_us=ratio * 1e3)
     out["bucketed_vs_overlap"] = ratio
 
+    # compressed downlink vs dense return (DESIGN.md §15): the same
+    # bucketed exchange with the physically-simulated server bolted on —
+    # one extra compress + launch-free wire roundtrip per compressed
+    # leaf group, zero extra collectives (HLO-pinned in
+    # tests/distributed/test_hlo_collectives.py).  The paired
+    # dense_vs_downlink factor is informational in bench_diff: the
+    # replicated recompute is the price of halving the accounted link
+    # bytes, a design trade rather than a fusion claim.
+    from repro.comm.downlink import (DownlinkCtx, DownlinkResult,
+                                     DownlinkState, init_downlink_state)
+
+    dls = init_downlink_state([x.shape for x in flat],
+                              [x.ndim >= 2 for x in flat], comp,
+                              comp.gamma)
+    dl_spec = DownlinkState(memory=P(), gamma=P())
+    f_downlink = jax.jit(shard_map(
+        lambda g, m, e, s: worker_compress_aggregate(
+            g, m, e, comp, ("data",),
+            downlink_ctx=DownlinkCtx(state=s)),
+        mesh=mesh1, in_specs=(pspec1, pspec1, P(), dl_spec),
+        out_specs=(pspec1, pspec1) + (P(),) * 3
+        + (DownlinkResult(dl_spec, P(), P()),),
+        axis_names={"data"}))
+    us = timeit(f_downlink, tree, mem, eta, dls, n=n_heavy)
+    record("downlink_step", "compressed", tname, us,
+           f"worker_compress_aggregate + server recompression, "
+           f"{n_leaves + 3} leaves")
+    ratio = paired_ratio(lambda g, m, e, s: f_downlink(g, m, e, s),
+                         lambda g, m, e, s: f_bucketed(g, m, e),
+                         (tree, mem, eta, dls), n_pairs=16, repeats=5)
+    record(f"dense_vs_downlink_step_{tname}", "default", tname,
+           ratio * 1e3,
+           "paired downlink/dense-return wall-time ratio "
+           "(x1000, dimensionless)",
+           min_us=ratio * 1e3)
+    out["dense_vs_downlink"] = ratio
+
     # ---- federated cohort step (DESIGN.md §13) --------------------------
     # The vmap'd heterogeneous-client exchange, single device (dp_axes=
     # None: the whole cohort local, no collectives — what scales here is

@@ -62,6 +62,19 @@ drop-in; ``--overlap-chunks`` sets the ring section count::
     python examples/distributed_training.py --transport overlap \\
         --overlap-chunks 4 --overlap-delay 1
 
+**Compressed downlink** (DESIGN.md §15): ``--downlink compressed``
+closes the return direction — the replicated aggregate the bucketed
+gather decodes is re-compressed through the SAME wire format with a
+server-side error-feedback memory before workers apply it, so BOTH
+directions ship packed payload rows.  No extra collective: the server is
+physically simulated (every worker runs the identical compress/EF), only
+the accounting changes.  Watch the per-direction columns — ``up`` stays
+the uplink payload, ``down`` drops from dense f32 bytes to the payload
+budget at ``--downlink-gamma``::
+
+    python examples/distributed_training.py --downlink compressed \\
+        --downlink-gamma 0.05
+
 **Federated cohort simulation** (DESIGN.md §13): ``--n-clients N`` vmaps
 ``N / W`` simulated clients onto each dp worker — per-client EF memory,
 per-client gamma, non-IID Dirichlet-tilted shards, partial participation
@@ -103,7 +116,7 @@ from repro.configs import get_smoke_config
 from repro.configs.base import (FederatedConfig, OptimizerConfig,
                                 RunConfig, ShapeConfig)
 from repro.fed.sampling import participation_mask
-from repro.core import ArmijoConfig, Compressor
+from repro.core import ArmijoConfig, Compressor, GammaControllerConfig
 from repro.data.synthetic import TokenPipeline
 from repro.launch.train_step import (build_train_step, init_opt_state,
                                      opt_state_shardings)
@@ -112,7 +125,8 @@ from repro.sharding import param_shardings
 
 
 def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
-        gossip=GossipConfig(), overlap=OverlapConfig()):
+        gossip=GossipConfig(), overlap=OverlapConfig(),
+        downlink="dense", downlink_gamma=0.0):
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = get_smoke_config("yi-34b")
     model = build_model(cfg)
@@ -122,7 +136,10 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
                                   compressor=Compressor(gamma=gamma,
                                                         min_compress_size=64),
                                   eta=0.05, transport=transport,
-                                  gossip=gossip, overlap=overlap))
+                                  gossip=gossip, overlap=overlap,
+                                  downlink=downlink,
+                                  downlink_gamma=GammaControllerConfig(
+                                      gamma0=downlink_gamma)))
     # links per worker uplink: the gossip worker sends its payload to each
     # of `degree` neighbors; gather/pmean transports send to the W-1 others
     if kind in ("csgd_asss", "nonadaptive") and transport == "gossip":
@@ -150,10 +167,12 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
                 wire = float(m["wire_bytes"])
                 stale = (f" staleness={float(m['staleness']):.0f}"
                          if "staleness" in m else "")
+                down = (f" down/link={float(m['downlink_wire_bytes']):.3e}"
+                        if "downlink_wire_bytes" in m else "")
                 print(f"  [{kind:9s}] step {i:3d} loss={float(m['loss']):.4f}"
                       f" alpha={float(m['alpha']):.4f}"
-                      f" wire_bytes/link={wire:.3e}"
-                      f" uplink={n_links * wire:.3e}"
+                      f" up/link={wire:.3e}"
+                      f" uplink={n_links * wire:.3e}{down}"
                       f" backlog={float(m['ef_backlog']):.3f}"
                       f" cos={float(m['ef_cosine']):.3f}{stale}")
     return float(m["wire_bytes"])
@@ -231,6 +250,14 @@ def main():
                     help="1: ship the previous step's payload (overlapped,"
                          " one-step-stale aggregate); 0: bit-exact "
                          "bucketed drop-in")
+    ap.add_argument("--downlink", default="dense",
+                    choices=["dense", "compressed"],
+                    help="aggregate return direction (DESIGN.md §15): "
+                         "compressed = server-side EF re-compression "
+                         "through the same wire format, no extra "
+                         "collective")
+    ap.add_argument("--downlink-gamma", type=float, default=0.0,
+                    help="downlink compression level (0 = uplink gamma)")
     ap.add_argument("--n-clients", type=int, default=0,
                     help="> 0: federated cohort demo (DESIGN.md §13) — "
                          "support vs mean aggregation on non-IID shards")
@@ -262,9 +289,12 @@ def main():
     elif args.transport == "overlap":
         mode += (f", chunked-ring overlap ({args.overlap_chunks} chunks, "
                  f"delay {args.overlap_delay})")
+    if args.downlink == "compressed":
+        mode += ", compressed downlink (server-side EF)"
     print(f"== DCSGD-ASSS ({mode}) ==")
     wire_c = run("csgd_asss", steps=args.steps, transport=args.transport,
-                 gossip=gossip, overlap=overlap)
+                 gossip=gossip, overlap=overlap, downlink=args.downlink,
+                 downlink_gamma=args.downlink_gamma)
     print("== dense SGD baseline (uncompressed all-reduce) ==")
     wire_d = run("dense", steps=args.steps)
     print(f"\ncommunication saving: {wire_d / wire_c:.1f}x "

@@ -1,0 +1,244 @@
+"""Compressed downlink — server-side re-compression of the aggregate
+(DESIGN.md §15).
+
+The uplink is bit-packed to the byte (§8/§9/§11) but the aggregate
+historically returned to every worker as a dense mean — in the paper's
+communication model that direction costs full dense bytes per link.  This
+module closes the loop: after the bucketed gather decodes, the
+(deterministic, replicated) mean update is pushed through the SAME
+per-leaf :class:`~repro.comm.wire.WireSpec` geometry with its own
+**server-side** error-feedback memory, and each worker applies
+``decode(downlink payload)`` instead of the dense mean.
+
+Because the gathered aggregate is bit-identical on every worker, the
+server is *physically simulated*: every worker runs the identical
+compress/EF computation and no extra collective is issued (the §11
+schedule stays ONE all_gather + ONE pmean — HLO-pinned).  What changes is
+the *accounted* downlink direction: ``downlink="dense"`` charges the full
+dense aggregate bytes, ``downlink="compressed"`` charges the packed
+payload rows (ragged §9 counts at the downlink gamma).
+
+The server residual ``M_s' = (M_s + mean) - decode(payload)`` is carried
+in :class:`DownlinkState` (threaded through ``DistOptState.downlink``)
+so what the downlink compression drops this round is recycled into the
+next round's broadcast — the bidirectional-EF construction of
+"Acceleration for Compressed Gradient Descent" (arXiv 2002.11364) and
+AdaCGD (arXiv 2211.00188).  The decode semantics reuse
+:func:`repro.comm.wire.roundtrip_rows` (launch-free, bit-exact vs a
+literal decode of the packed payload), batched across same-spec leaves
+exactly like the overlap transport's delay-1 EF roundtrip.
+
+Leaves the uplink ships dense (below ``min_compress_size``) return dense
+on the downlink too, charged at the actual shipped f32 itemsize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import wire as wire_fmt
+from repro.comm.bucket import BucketPlan, build_bucket_plan
+from repro.core.leafmath import compress_leaf, leaf_count, scatter_layers
+
+__all__ = [
+    "DownlinkState",
+    "DownlinkCtx",
+    "DownlinkResult",
+    "MODES",
+    "downlink_plan",
+    "server_memory_size",
+    "init_downlink_state",
+    "dense_downlink_bytes",
+    "downlink_wire_bytes",
+    "apply_downlink",
+]
+
+MODES = ("dense", "compressed")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DownlinkState:
+    """Server-side carried state, replicated across workers.
+
+    ``memory``: the server EF residual, one flat f32 vector holding the
+    compressed leaves' (L, d) rows back to back in tree order (dense
+    leaves have no server memory — their aggregate returns exact).
+    ``gamma``: the downlink gamma_t this round's ragged counts were
+    masked at (advanced by the train step's downlink GammaController
+    round before the exchange; carried here so restarts resume the
+    schedule where it left off).
+    """
+
+    memory: jax.Array   # (server_size,) f32
+    gamma: jax.Array    # () f32
+
+
+@dataclasses.dataclass(frozen=True)
+class DownlinkCtx:
+    """This round's (traced) server state, handed to
+    ``worker_compress_aggregate(downlink_ctx=...)``."""
+
+    state: DownlinkState
+
+
+class DownlinkResult(NamedTuple):
+    """Trailing return element of a downlink-enabled exchange."""
+
+    state: DownlinkState
+    wire_bytes: jax.Array       # () f32 — static downlink budget
+    eff_wire_bytes: jax.Array   # () f32 — ragged content at downlink gamma
+
+
+def downlink_plan(shapes, stacked, comp) -> BucketPlan:
+    """The downlink reuses the uplink's §11 plan verbatim: same per-leaf
+    (L, d) geometry, same WireSpecs, same dense/compressed split."""
+    return build_bucket_plan([tuple(s) for s in shapes], list(stacked), comp)
+
+
+def server_memory_size(plan: BucketPlan) -> int:
+    """Flat f32 words of server EF memory: sum of L*d over compressed
+    leaves."""
+    return sum(ln.L * ln.d for ln in plan.leaves if not ln.dense)
+
+
+def init_downlink_state(shapes, stacked, comp, gamma0: float,
+                        abstract: bool = False) -> DownlinkState:
+    """Fresh (unbatched) server state for a gradient pytree with flat leaf
+    ``shapes`` and per-leaf ``stacked`` flags — the SAME flags the worker
+    passes to ``worker_compress_aggregate`` (``stacked_mask``), or the
+    server memory offsets will not line up (the exchange raises at trace
+    time on any size mismatch)."""
+    plan = downlink_plan(shapes, stacked, comp)
+    size = server_memory_size(plan)
+    if abstract:
+        return DownlinkState(
+            memory=jax.ShapeDtypeStruct((size,), jnp.float32),
+            gamma=jax.ShapeDtypeStruct((), jnp.float32))
+    return DownlinkState(memory=jnp.zeros((size,), jnp.float32),
+                         gamma=jnp.float32(gamma0))
+
+
+def dense_downlink_bytes(shapes) -> float:
+    """Per-link bytes the DENSE downlink charges: the full f32 aggregate
+    of every leaf (the reference the compressed downlink must beat)."""
+    total = 0
+    for s in shapes:
+        n = 1
+        for x in tuple(s):
+            n *= int(x)
+        total += n
+    return float(total * jnp.dtype(jnp.float32).itemsize)
+
+
+def downlink_wire_bytes(plan: BucketPlan) -> float:
+    """Static per-link downlink budget under ``downlink="compressed"``:
+    packed payload rows for compressed leaves + dense f32 for the rest."""
+    total = 0.0
+    f32 = jnp.dtype(jnp.float32).itemsize
+    for ln in plan.leaves:
+        if ln.dense:
+            n = 1
+            for s in ln.shape:
+                n *= int(s)
+            total += n * f32
+        else:
+            total += ln.L * ln.spec.row_bytes
+    return float(total)
+
+
+def apply_downlink(flat_updates, flat_s, comp, state: DownlinkState):
+    """One server round over the decoded mean updates (flat, tree order).
+
+    ``flat_updates``: the transport's f32 mean updates (dense leaves'
+    pmean included).  Returns ``(new_updates, new_state, wire, eff)``
+    where ``new_updates[i] = decode(server payload_i)`` for compressed
+    leaves (dense leaves pass through exact), ``new_state`` carries the
+    server EF residual, and the byte counters describe the downlink
+    direction per link (static budget / ragged content at
+    ``state.gamma``).  Pure and replicated: every worker computes the
+    identical result, so no collective is issued.
+    """
+    plan = downlink_plan([u.shape for u in flat_updates], flat_s, comp)
+    lanes = plan.leaves
+    n = len(lanes)
+    size = server_memory_size(plan)
+    if state.memory.shape != (size,):
+        raise ValueError(
+            f"DownlinkState.memory shape {state.memory.shape} does not "
+            f"match the plan's server size (({size},)) — init the state "
+            "with the same leaf shapes/stacked_mask/compressor the worker "
+            "uses (see init_downlink_state)")
+
+    f32 = jnp.dtype(jnp.float32).itemsize
+    acc = [None] * n          # (L, d) server accumulators
+    rows = [None] * n         # (vals, idx, counts) per compressed leaf
+    counts = [None] * n
+    mem_off = 0
+    for ln in lanes:
+        if ln.dense:
+            continue
+        i, L, d = ln.index, ln.L, ln.d
+        u2 = flat_updates[i].astype(jnp.float32).reshape(L, d)
+        m2 = state.memory[mem_off:mem_off + L * d].reshape(L, d)
+        mem_off += L * d
+        acc[i] = m2 + u2
+        vals, idx, _ = compress_leaf(acc[i], comp, ln.stacked)
+        counts[i] = leaf_count(comp, ln.spec, state.gamma, d)
+        rows[i] = (vals, idx,
+                   None if counts[i] is None
+                   else jnp.broadcast_to(counts[i], (L,)))
+
+    # decode(encode(...)) semantics without packed words, batched across
+    # same-spec leaves (ONE launch-free roundtrip per spec group — the
+    # overlap transport's delay-1 EF pattern, comm/overlap.py)
+    own_rt = [None] * n
+    by_spec: dict = {}
+    for ln in lanes:
+        if not ln.dense:
+            by_spec.setdefault(ln.spec, []).append(ln)
+    for gspec, group in by_spec.items():
+        vals = jnp.concatenate([rows[l.index][0] for l in group])
+        idxs = jnp.concatenate([rows[l.index][1] for l in group])
+        cts = None
+        if gspec.ragged:
+            cts = jnp.concatenate([
+                rows[l.index][2] if rows[l.index][2] is not None
+                else jnp.full((l.L,), gspec.full_count, jnp.int32)
+                for l in group])
+        rv, ri = wire_fmt.roundtrip_rows(vals, idxs, gspec, counts=cts)
+        off = 0
+        for l in group:
+            own_rt[l.index] = (rv[off:off + l.L], ri[off:off + l.L])
+            off += l.L
+
+    # per-leaf consumers, tree order (deterministic f32 byte accumulation,
+    # matching the uplink counters' convention)
+    new_updates = list(flat_updates)
+    mem_parts = []
+    wire = jnp.float32(0.0)
+    eff = jnp.float32(0.0)
+    for ln in lanes:
+        i = ln.index
+        if ln.dense:
+            u = flat_updates[i]
+            nbytes = jnp.float32(u.size * f32)
+            wire = wire + nbytes
+            eff = eff + nbytes
+            continue
+        spec, L, d = ln.spec, ln.L, ln.d
+        dv, di = own_rt[i]
+        dec = scatter_layers(dv, di, L, d, jnp.float32)
+        mem_parts.append((acc[i] - dec).reshape(-1))
+        new_updates[i] = dec.reshape(flat_updates[i].shape)
+        wire = wire + jnp.float32(L * spec.row_bytes)
+        eff = eff + (jnp.float32(L) * spec.effective_row_bytes(counts[i])
+                     if spec.ragged else jnp.float32(L * spec.row_bytes))
+
+    new_memory = (jnp.concatenate(mem_parts) if mem_parts
+                  else jnp.zeros((0,), jnp.float32))
+    new_state = DownlinkState(memory=new_memory, gamma=state.gamma)
+    return new_updates, new_state, wire, eff

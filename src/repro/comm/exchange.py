@@ -83,7 +83,11 @@ def effective_payload_bytes(payload: jax.Array, spec: WireSpec) -> jax.Array:
     rows = payload.reshape(-1, payload.shape[-1])
     if not spec.ragged:
         return jnp.float32(rows.shape[0] * spec.row_bytes)
-    counts = rows[:, 0].astype(jnp.int32)
+    # the gathered header word is worker-controlled garbage until proven
+    # otherwise — decode_rows tolerates any bit pattern (the count mask
+    # clamps), so the byte metric must too: an unclamped hostile count
+    # would inflate effective_wire_bytes beyond the static budget
+    counts = jnp.clip(rows[:, 0].astype(jnp.int32), 0, spec.full_count)
     return jnp.sum(spec.effective_row_bytes(counts))
 
 

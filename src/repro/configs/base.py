@@ -216,7 +216,7 @@ class FederatedConfig:
 
 @dataclasses.dataclass(frozen=True)
 class OptimizerConfig:
-    kind: str = "csgd_asss"       # csgd_asss | nonadaptive | sgd | sls | dense
+    kind: str = "csgd_asss"   # csgd_asss | nonadaptive | acgd | sgd | sls | dense
     armijo: ArmijoConfig = ArmijoConfig()
     compressor: Compressor = Compressor()
     # per-round compression-level controller (AdaCGD-style adaptive gamma;
@@ -226,7 +226,8 @@ class OptimizerConfig:
     # by coupling to the per-worker CompressionTelemetry (EF backlog /
     # decode cosine) that the train step threads through DistOptState.
     gamma_controller: GammaControllerConfig = GammaControllerConfig()
-    eta: float = 0.1              # for non-adaptive baselines
+    eta: float = 0.1              # for non-adaptive baselines + acgd
+    momentum: float = 0.9         # acgd: Nesterov mu (arXiv 2002.11364)
     ef_dtype: str = "float32"
     ef_host_offload: bool = False  # beyond-paper: EF memory in host RAM
     # beyond-paper: compress per (layer, model-shard) under a nested
@@ -258,10 +259,46 @@ class OptimizerConfig:
     # client cohort above the dp mesh with per-client EF/gamma state and
     # support-weighted aggregation of the decoded top-k payloads
     federated: FederatedConfig = FederatedConfig()
+    # downlink direction (DESIGN.md §15): "dense" returns the decoded
+    # aggregate as the full f32 mean (bit-exact reference, charged dense
+    # bytes per link); "compressed" re-compresses the replicated aggregate
+    # through the SAME WireSpec geometry with a server-side EF memory
+    # (repro/comm/downlink.py) — no extra collective, the §11 schedule
+    # stays ONE all_gather + ONE pmean.
+    downlink: str = "dense"
+    # ragged §9 valid counts of the downlink payload; fixed | linear only
+    # (the server has no Armijo search and no per-worker EF telemetry to
+    # couple to)
+    downlink_gamma: GammaControllerConfig = GammaControllerConfig()
 
     def __post_init__(self):
         from repro.comm.transport import validate_transport
         validate_transport(self.transport)
+        from repro.comm.downlink import MODES as DOWNLINK_MODES
+        if self.downlink not in DOWNLINK_MODES:
+            raise ValueError(f"unknown downlink mode {self.downlink!r} "
+                             f"(want one of {DOWNLINK_MODES})")
+        if self.downlink == "compressed":
+            if self.downlink_gamma.schedule not in ("fixed", "linear"):
+                raise ValueError(
+                    "downlink_gamma supports only the open-loop fixed | "
+                    "linear schedules — the simulated server has no Armijo "
+                    "search or per-worker EF telemetry to couple to "
+                    f"(got {self.downlink_gamma.schedule!r})")
+            if self.transport in ("gossip", "overlap"):
+                raise ValueError(
+                    "downlink='compressed' re-compresses a replicated "
+                    "global aggregate; transport="
+                    f"{self.transport!r} never materializes one "
+                    "(gossip mixes neighbors, overlap applies stale "
+                    "payloads — DESIGN.md §12/§14/§15)")
+            if self.federated.enabled:
+                raise ValueError(
+                    "downlink='compressed' does not compose with the "
+                    "federated cohort yet — the cohort's support-weighted "
+                    "aggregate is produced inside the fed worker "
+                    "(DESIGN.md §13), not by the §11 transport the "
+                    "downlink hooks")
         if self.federated.enabled and self.transport == "gossip":
             raise ValueError(
                 "federated cohort simulation does not compose with "

@@ -4,6 +4,7 @@ Public API:
   - Compressor, Sparse              (top_k / block-local compression)
   - ArmijoConfig, armijo_search     (scaled Armijo search, Algorithm 1)
   - CSGDConfig, csgd_asss, CSGD     (Algorithm 2)
+  - AcgdConfig, acgd, ACGD          (Nesterov-accelerated compressed GD)
   - NonAdaptiveCSGD, SGD, SLS       (paper baselines)
   - worker_compress_aggregate       (Algorithm 3 building block for shard_map)
 """
@@ -16,6 +17,7 @@ from .telemetry import (CompressionTelemetry, SearchTelemetry, TelemetrySums,
                         sparse_own_sums)
 from .gamma import GammaControllerConfig, gamma_init, gamma_update
 from .csgd import CSGD, CSGDConfig, CSGDState, StepAux, csgd_asss
+from .acgd import ACGD, AcgdAux, AcgdConfig, AcgdState, acgd
 from .baselines import NonAdaptiveCSGD, SGD, SLS
 from .dcsgd import worker_compress_aggregate, dense_aggregate
 from .error_feedback import (init_ef, init_ef_quantized, quantize_ef,
@@ -32,6 +34,7 @@ __all__ = [
     "sparse_own_sums",
     "GammaControllerConfig", "gamma_init", "gamma_update",
     "CSGD", "CSGDConfig", "CSGDState", "StepAux", "csgd_asss",
+    "ACGD", "AcgdAux", "AcgdConfig", "AcgdState", "acgd",
     "NonAdaptiveCSGD", "SGD", "SLS",
     "worker_compress_aggregate", "dense_aggregate",
     "init_ef", "init_ef_quantized", "quantize_ef", "dequantize_ef",

@@ -70,6 +70,7 @@ def worker_compress_aggregate(
     telemetry_axes: AxisNames | None = None,
     transport: str = "bucketed",
     transport_ctx: Any | None = None,
+    downlink_ctx: Any | None = None,
 ) -> tuple:
     """Steps 3-7 of Algorithm 3 for a whole gradient pytree.
 
@@ -114,6 +115,16 @@ def worker_compress_aggregate(
     transports (``"gossip"``: a :class:`repro.comm.gossip.GossipCtx`) and
     rejected by stateless ones.  Stateful transports make this function
     return a SIXTH element, the transport's new carried state.
+
+    ``downlink_ctx`` (DESIGN.md §15): a
+    :class:`repro.comm.downlink.DownlinkCtx` carrying the server-side EF
+    state — the replicated decoded mean is re-compressed through the same
+    §8/§9 wire format before workers apply it (``decode(downlink
+    payload)`` instead of the dense mean), with no extra collective.
+    Only composes with the stateless global-aggregate transports
+    (bucketed/perleaf); appends a trailing
+    :class:`~repro.comm.downlink.DownlinkResult` element ``(new server
+    state, downlink wire bytes, downlink effective bytes)``.
     """
     tp = get_transport(transport)
     if tp.stateful and transport_ctx is None:
@@ -122,6 +133,11 @@ def worker_compress_aggregate(
     if not tp.stateful and transport_ctx is not None:
         raise ValueError(f"transport {transport!r} is stateless; "
                          "transport_ctx must be None")
+    if downlink_ctx is not None and tp.stateful:
+        raise ValueError(
+            f"downlink_ctx needs a replicated global aggregate to "
+            f"re-compress; transport {transport!r} is stateful "
+            "(gossip/overlap have no single server-side mean)")
     W = _dp_size(dp_axes)
     flat_g, treedef = jax.tree.flatten(grads)
     flat_m = treedef.flatten_up_to(memory)
@@ -142,9 +158,17 @@ def worker_compress_aggregate(
     if telemetry_axes is not None:
         # sums are additive; ratios are not — reduce BEFORE finalizing
         sums = jax.tree.map(lambda x: jax.lax.psum(x, telemetry_axes), sums)
+    dl_result = None
+    if downlink_ctx is not None:
+        from repro.comm.downlink import DownlinkResult, apply_downlink
+        updates, dl_state, down_wire, down_eff = apply_downlink(
+            updates, flat_s, comp, downlink_ctx.state)
+        dl_result = DownlinkResult(dl_state, down_wire, down_eff)
     out = (treedef.unflatten(updates), treedef.unflatten(new_mem), wire,
            eff_wire, sums.finalize())
-    return out + (new_state,) if tp.stateful else out
+    if tp.stateful:
+        out = out + (new_state,)
+    return out + (dl_result,) if dl_result is not None else out
 
 
 def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
@@ -362,8 +386,14 @@ def _bucketed_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
 
 def dense_aggregate(grads: PyTree, eta: jax.Array,
                     dp_axes: AxisNames) -> tuple[PyTree, jax.Array]:
-    """Baseline: dense pmean of eta*grad over dp axes (uncompressed wire)."""
+    """Baseline: dense pmean of eta*grad over dp axes (uncompressed wire).
+
+    The bytes charged are the itemsize of the f32 buffer the pmean
+    actually moves — the same ``size * dtype.itemsize`` basis the
+    transports charge their dense leaves, so the two accountings cannot
+    drift (they used to: this path hard-coded 4 bytes/element)."""
     upd = jax.tree.map(
         lambda g: jax.lax.pmean(eta * g.astype(jnp.float32), dp_axes), grads)
-    wire = jnp.float32(sum(g.size * 4 for g in jax.tree.leaves(grads)))
+    wire = jnp.float32(sum(u.size * u.dtype.itemsize
+                           for u in jax.tree.leaves(upd)))
     return upd, wire

@@ -106,6 +106,16 @@ class GammaControllerConfig:
         g0 = self.gamma0 or comp.gamma
         gmax = min(self.gamma_max or budget, budget)
         gmin = self.gamma_min or g0 / 8.0
+        if gmin > gmax:
+            # an inverted [gmin, gmax] band would make every
+            # jnp.clip(gamma, gmin, gmax) in gamma_update silently return
+            # gmax — the user asked for a floor the wire cannot carry
+            raise ValueError(
+                f"gamma_min={gmin} exceeds the resolved gamma_max={gmax} "
+                f"(compressor budget {budget}): the controller band is "
+                f"inverted and jnp.clip would pin gamma to gamma_max — "
+                f"lower gamma_min or raise the compressor's "
+                f"gamma/max_gamma budget")
         g0 = min(max(g0, gmin), gmax)
         return g0, gmin, gmax
 

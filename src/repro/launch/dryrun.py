@@ -37,6 +37,7 @@ from repro.configs.base import (FederatedConfig, OptimizerConfig, RunConfig,
                                 ShapeConfig)
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
+from repro.core.gamma import GammaControllerConfig
 from repro.launch.mesh import make_production_mesh
 from repro.launch.train_step import (build_decode_step, build_prefill_step,
                                      build_train_step, init_opt_state)
@@ -265,7 +266,8 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
                     ef_dtype="float32", shard_local_topk=False,
                     local_steps=1, transport="bucketed", topology="ring",
                     n_clients=0, aggregation="support",
-                    overlap_chunks=1, overlap_delay=1):
+                    overlap_chunks=1, overlap_delay=1,
+                    downlink="dense", downlink_gamma=0.0):
     if microbatches is None:
         microbatches = 4 if shape.kind == "train" else 1
     if n_clients:
@@ -287,7 +289,9 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
             overlap=OverlapConfig(n_chunks=overlap_chunks,
                                   delay=overlap_delay),
             federated=FederatedConfig(n_clients=n_clients,
-                                      aggregation=aggregation)),
+                                      aggregation=aggregation),
+            downlink=downlink,
+            downlink_gamma=GammaControllerConfig(gamma0=downlink_gamma)),
         microbatches=microbatches)
 
 
@@ -332,6 +336,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               transport: str = "bucketed", topology: str = "ring",
               n_clients: int = 0, aggregation: str = "support",
               overlap_chunks: int = 1, overlap_delay: int = 1,
+              downlink: str = "dense", downlink_gamma: float = 0.0,
               keep_hlo: bool = False) -> dict:
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
@@ -347,7 +352,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                      "transport": transport,
                      "topology": topology,
                      "overlap_chunks": overlap_chunks,
-                     "overlap_delay": overlap_delay}}
+                     "overlap_delay": overlap_delay,
+                     "downlink": downlink}}
     shape = SHAPES[shape_name]
     cfg0 = get_config(arch)
     cfg, note = adapt_for_shape(cfg0, shape)
@@ -371,7 +377,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                           ef_host_offload, ef_dtype, shard_local_topk,
                           local_steps, transport, topology,
                           n_clients, aggregation,
-                          overlap_chunks, overlap_delay)
+                          overlap_chunks, overlap_delay,
+                          downlink, downlink_gamma)
     n_chips = mesh.size
 
     with set_mesh(mesh):
@@ -391,6 +398,28 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 stacked_mask=model.stacked_mask(params_like))
             step = build_train_step(model, run, mesh)(params_like, batch_like)
             lowered = step.lower(params_like, opt_like, batch_like)
+            if opt_kind in ("csgd_asss", "nonadaptive", "acgd"):
+                # per-direction split (DESIGN.md §15): the collectives
+                # parsed from HLO below carry only the UPLINK — the
+                # downlink is physically simulated (replicated compute,
+                # no collective), so its per-link bytes are accounted
+                # from the same static plan the server uses
+                from repro.comm.downlink import (dense_downlink_bytes,
+                                                 downlink_plan,
+                                                 downlink_wire_bytes)
+                flat_p, treedef = jax.tree.flatten(params_like)
+                flags = treedef.flatten_up_to(
+                    model.stacked_mask(params_like))
+                plan = downlink_plan([p.shape for p in flat_p], flags,
+                                     run.optimizer.compressor)
+                dense_b = dense_downlink_bytes([p.shape for p in flat_p])
+                rec["downlink"] = {
+                    "mode": downlink,
+                    "bytes_per_link": (downlink_wire_bytes(plan)
+                                       if downlink == "compressed"
+                                       else dense_b),
+                    "dense_bytes_per_link": dense_b,
+                }
         elif shape.kind == "prefill":
             batch_like = model.input_specs(shape)
             step = build_prefill_step(model, run, mesh, shape,
@@ -450,7 +479,8 @@ def main() -> None:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--opt", default="csgd_asss",
-                    choices=["csgd_asss", "nonadaptive", "sgd", "dense", "sls"])
+                    choices=["csgd_asss", "nonadaptive", "acgd", "sgd",
+                             "dense", "sls"])
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--ef-host-offload", action="store_true")
@@ -487,6 +517,14 @@ def main() -> None:
     ap.add_argument("--aggregation", default="support",
                     choices=["support", "mean"],
                     help="cohort aggregation (federated mode)")
+    ap.add_argument("--downlink", default="dense",
+                    choices=["dense", "compressed"],
+                    help="aggregate return direction (DESIGN.md §15): "
+                         "compressed = server-side EF re-compression, "
+                         "accounted per link in the record's 'downlink' "
+                         "block (no collective — it is simulated)")
+    ap.add_argument("--downlink-gamma", type=float, default=0.0,
+                    help="downlink compression level (0 = uplink gamma)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -519,17 +557,23 @@ def main() -> None:
                             n_clients=args.n_clients,
                             aggregation=args.aggregation,
                             overlap_chunks=args.overlap_chunks,
-                            overlap_delay=args.overlap_delay)
+                            overlap_delay=args.overlap_delay,
+                            downlink=args.downlink,
+                            downlink_gamma=args.downlink_gamma)
         except Exception as e:  # record failures — they are bugs to fix
             rec = {"arch": arch, "shape": shape, "status": "FAIL",
                    "error": f"{type(e).__name__}: {e}",
                    "trace": traceback.format_exc()[-2000:]}
         status = rec["status"]
         colls = rec.get("collectives", {})
+        dl = rec.get("downlink", {})
+        down = (f"down/link={dl['bytes_per_link']:.3e} "
+                if dl else "")
         print(f"[{status:7s}] {arch:24s} {shape:12s} "
               f"flops/chip={rec.get('flops_per_chip', 0):.3e} "
               f"wire={colls.get('total_wire_bytes', 0):.3e} "
-              f"wire/link={colls.get('wire_bytes_per_link', 0):.3e} "
+              f"up/link={colls.get('wire_bytes_per_link', 0):.3e} "
+              f"{down}"
               f"compile={rec.get('compile_s', 0)}s", flush=True)
         records.append(rec)
 

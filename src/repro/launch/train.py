@@ -62,7 +62,8 @@ def main() -> None:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--mesh", default="2x1")
     ap.add_argument("--opt", default="csgd_asss",
-                    choices=["csgd_asss", "nonadaptive", "sgd", "dense", "sls"])
+                    choices=["csgd_asss", "nonadaptive", "acgd", "sgd",
+                             "dense", "sls"])
     ap.add_argument("--gamma", type=float, default=0.01)
     ap.add_argument("--compress-method", default="topk",
                     choices=["topk", "block_topk", "none"],
@@ -97,9 +98,10 @@ def main() -> None:
     ap.add_argument("--no-kernel", action="store_true",
                     help="block_topk via pure jnp (kernel escape hatch)")
     ap.add_argument("--eta", type=float, default=0.1)
-    # (momentum is a single-node CSGDConfig option — see repro.core.csgd;
-    # the distributed worker implements the paper's Algorithm 3 + the
-    # local-steps extension.)
+    ap.add_argument("--momentum", type=float, default=0.9,
+                    help="acgd: Nesterov mu (arXiv 2002.11364); heavy-ball "
+                         "momentum for single-node CSGD lives in "
+                         "repro.core.csgd")
     ap.add_argument("--local-steps", type=int, default=1)
     ap.add_argument("--value-bits", type=int, default=32,
                     choices=[32, 16, 8, 4],
@@ -142,6 +144,21 @@ def main() -> None:
                     default=GossipConfig.lr_max,
                     help="consensus step cap (the fixed-step baseline)")
     ap.add_argument("--shard-local-topk", action="store_true")
+    # ---- compressed downlink (DESIGN.md §15) ----
+    ap.add_argument("--downlink", default="dense",
+                    choices=["dense", "compressed"],
+                    help="return direction of the aggregate: 'dense' ships "
+                         "the full f32 mean (bit-exact reference); "
+                         "'compressed' re-compresses it through the same "
+                         "wire format with server-side error feedback — "
+                         "no extra collective")
+    ap.add_argument("--downlink-gamma", type=float, default=0.0,
+                    help="downlink compression level (0 = the uplink "
+                         "compressor's gamma)")
+    ap.add_argument("--downlink-gamma-schedule", default="fixed",
+                    choices=["fixed", "linear"],
+                    help="open-loop downlink gamma schedule (the simulated "
+                         "server has no telemetry to couple to)")
     # ---- federated cohort simulation (DESIGN.md §13) ----
     ap.add_argument("--n-clients", type=int, default=0,
                     help="> 0: federated cohort simulation — vmap "
@@ -198,7 +215,7 @@ def main() -> None:
                 ramp_steps=args.gamma_ramp_steps,
                 ef_target=args.ef_target,
                 ef_band=args.ef_band),
-            eta=args.eta, ef_dtype=args.ef_dtype,
+            eta=args.eta, momentum=args.momentum, ef_dtype=args.ef_dtype,
             shard_local_topk=args.shard_local_topk,
             local_steps=args.local_steps,
             transport=args.transport,
@@ -216,7 +233,11 @@ def main() -> None:
                 straggler_rate=args.straggler_rate,
                 aggregation=args.aggregation,
                 dirichlet_alpha=args.dirichlet_alpha,
-                seed=args.fed_seed)),
+                seed=args.fed_seed),
+            downlink=args.downlink,
+            downlink_gamma=GammaControllerConfig(
+                schedule=args.downlink_gamma_schedule,
+                gamma0=args.downlink_gamma)),
         microbatches=args.microbatches)
 
     with set_mesh(mesh):
@@ -290,10 +311,13 @@ def main() -> None:
                 m["step"] = step
                 m["wall_s"] = round(time.time() - t_start, 1)
                 log.append(m)
+                down = (f"down={m['downlink_effective_wire_bytes']:.3e}B "
+                        if "downlink_effective_wire_bytes" in m else "")
                 print(f"step {step:5d} loss={m['loss']:.4f} "
                       f"alpha={m['alpha']:.4g} evals={m['n_evals']:.2f} "
-                      f"wire={m['wire_bytes']:.3e}B "
+                      f"up={m['wire_bytes']:.3e}B "
                       f"eff={m.get('effective_wire_bytes', 0.0):.3e}B "
+                      f"{down}"
                       f"cum={m.get('cum_effective_wire_bytes', 0.0):.3e}B "
                       f"gamma={m.get('gamma', args.gamma):.4g} "
                       f"backlog={m.get('ef_backlog', 0.0):.3g} "

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comm.downlink import (DownlinkCtx, DownlinkState,
+                                 init_downlink_state)
 from repro.comm.gossip import GossipCtx, GossipState
 from repro.comm.overlap import OverlapCtx, OverlapState, init_overlap_state
 from repro.comm.topology import build_topology
@@ -71,6 +73,10 @@ class DistOptState(NamedTuple):
                              # (leaves (n_clients, ...) over the dp axes)
     overlap: Any = ()        # OverlapState under transport="overlap"
                              # (leaves (W, ...): carried payload buffers)
+    downlink: Any = ()       # DownlinkState under downlink="compressed"
+                             # (leaves (W, ...): replicated server EF/gamma)
+    velocity: Any = ()       # Nesterov buffers under kind="acgd"
+                             # (per-worker leaves (W, *param_shape) f32)
 
 
 def _n_workers(mesh) -> int:
@@ -102,25 +108,43 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
         return jnp.broadcast_to(p[None], shape).astype(p.dtype)
 
     fed_on = opt.federated.enabled
-    needs_mem = opt.kind in ("csgd_asss", "nonadaptive") and not fed_on
+    needs_mem = opt.kind in ("csgd_asss", "nonadaptive", "acgd") \
+        and not fed_on
     needs_gossip = needs_mem and opt.transport == "gossip"
     needs_overlap = needs_mem and opt.transport == "overlap"
+    needs_downlink = needs_mem and opt.downlink == "compressed"
+    needs_vel = opt.kind == "acgd" and not fed_on
     mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else \
         (lambda s, d: jnp.zeros(s, d))
 
-    overlap = ()
-    if needs_overlap:
+    def broadcast_w(tree):
+        """(W,)-leading replication of an unbatched carried-state pytree
+        (the gossip_params_leaf convention)."""
+        return jax.tree.map(
+            lambda x: (jax.ShapeDtypeStruct((n_workers,) + x.shape, x.dtype)
+                       if abstract else
+                       jnp.broadcast_to(x[None], (n_workers,) + x.shape)),
+            tree)
+
+    def flat_geometry():
         flat_p, treedef = jax.tree.flatten(params)
         flags = ([leaf.ndim >= 2 for leaf in flat_p]
                  if stacked_mask is None
                  else treedef.flatten_up_to(stacked_mask))
-        ov = init_overlap_state([p.shape for p in flat_p], flags,
-                                opt.compressor, abstract=abstract)
-        overlap = jax.tree.map(
-            lambda x: (jax.ShapeDtypeStruct((n_workers,) + x.shape, x.dtype)
-                       if abstract else
-                       jnp.broadcast_to(x[None], (n_workers,) + x.shape)),
-            ov)
+        return [p.shape for p in flat_p], flags
+
+    overlap = ()
+    if needs_overlap:
+        shapes, flags = flat_geometry()
+        overlap = broadcast_w(init_overlap_state(
+            shapes, flags, opt.compressor, abstract=abstract))
+    downlink = ()
+    if needs_downlink:
+        shapes, flags = flat_geometry()
+        downlink = broadcast_w(init_downlink_state(
+            shapes, flags, opt.compressor,
+            opt.downlink_gamma.resolve(opt.compressor)[0],
+            abstract=abstract))
     return DistOptState(
         step=mk((), jnp.int32),
         alpha_prev=(mk((n_workers,), jnp.float32) if abstract else
@@ -140,6 +164,13 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
         fed=(init_client_state(params, opt, opt.federated.n_clients,
                                abstract=abstract) if fed_on else ()),
         overlap=overlap,
+        downlink=downlink,
+        velocity=(jax.tree.map(
+            lambda p: (jax.ShapeDtypeStruct((n_workers,) + tuple(p.shape),
+                                            jnp.float32) if abstract else
+                       jnp.zeros((n_workers,) + tuple(p.shape),
+                                 jnp.float32)),
+            params) if needs_vel else ()),
     )
 
 
@@ -184,6 +215,11 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
             if opt_state.fed != () else ()),
         overlap=(jax.tree.map(lambda _: vec, opt_state.overlap)
                  if opt_state.overlap != () else ()),
+        downlink=(jax.tree.map(lambda _: vec, opt_state.downlink)
+                  if opt_state.downlink != () else ()),
+        velocity=(jax.tree.map(
+            lambda ps: compat.named_sharding(mesh, P(dp_spec, *ps)), pspecs)
+            if opt_state.velocity != () else ()),
     )
 
 
@@ -204,15 +240,44 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             f"optimizer (csgd_asss | sls), got kind={opt.kind!r} — use "
             f"'fixed' or 'linear'")
     if opt.gamma_controller.schedule == "ef-coupled" and \
-            opt.kind not in ("csgd_asss", "nonadaptive"):
+            opt.kind not in ("csgd_asss", "nonadaptive", "acgd"):
         raise ValueError(
             f"gamma schedule 'ef-coupled' needs a compressing optimizer "
-            f"(csgd_asss | nonadaptive) — only those produce the "
+            f"(csgd_asss | nonadaptive | acgd) — only those produce the "
             f"CompressionTelemetry it couples to, got kind={opt.kind!r}")
     dp = dp_axes_of(mesh)
     dp_spec = dp if len(dp) > 1 else dp[0]
     W = _n_workers(mesh)
     micro = run_cfg.microbatches
+
+    compressing = opt.kind in ("csgd_asss", "nonadaptive", "acgd")
+    acgd_mode = opt.kind == "acgd"
+    if acgd_mode and opt.local_steps > 1:
+        raise ValueError(
+            "kind='acgd' does not compose with local_steps > 1 — the "
+            "Nesterov velocity advances once per exchange round, not per "
+            "local Armijo step (use kind='csgd_asss' for local steps)")
+
+    downlink_mode = opt.downlink == "compressed"
+    if downlink_mode:
+        # (gossip/overlap/federated composition is already rejected by
+        # OptimizerConfig.__post_init__ — no replicated global aggregate)
+        if not compressing:
+            raise ValueError(
+                f"downlink='compressed' re-compresses the compressed "
+                f"exchange's aggregate (DESIGN.md §15); kind={opt.kind!r} "
+                f"ships a dense pmean with no server to simulate — use "
+                f"csgd_asss | nonadaptive | acgd")
+        if opt.shard_local_topk:
+            raise ValueError(
+                "downlink='compressed' does not compose with "
+                "shard_local_topk — the server plan is the whole-gradient "
+                "bucket geometry, not a model shard's")
+        if opt.local_steps > 1:
+            raise ValueError(
+                "downlink='compressed' does not compose with "
+                "local_steps > 1 yet — the local-steps exchange applies "
+                "the dense mean delta directly")
 
     gossip_mode = opt.transport == "gossip"
     topo = None
@@ -568,8 +633,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             eta = jnp.float32(opt.eta)
 
         # ---- aggregate (compressed or dense) ----------------------------
-        if opt.kind in ("csgd_asss", "nonadaptive"):
+        if compressing:
             smask = model.stacked_mask(params)
+            if acgd_mode:
+                # Nesterov round (arXiv 2002.11364 composed with EF —
+                # core/acgd.py): the exchange ships the lookahead descent
+                # direction mu*v' + g instead of the raw gradient
+                vel = jax.tree.map(
+                    lambda v, g: opt.momentum * v + g.astype(jnp.float32),
+                    jax.tree.map(lambda x: x[0], opt_state.velocity),
+                    grads)
+                send = jax.tree.map(
+                    lambda v, g: opt.momentum * v + g.astype(jnp.float32),
+                    vel, grads)
+                new_velocity = jax.tree.map(lambda x: x[None], vel)
+            else:
+                send = grads
+                new_velocity = opt_state.velocity
+            dl_res = None
             if opt.shard_local_topk and compat.PARTIAL_AUTO_SAFE:
                 # per-(layer, model-shard) top_k: nested manual-'model'
                 # region so selection runs on the local gradient shard and
@@ -588,7 +669,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                     in_specs=(pspecs, pspecs, P(), P()),
                     out_specs=(pspecs, pspecs, P(), P(), P()),
                     axis_names={"model"}, check_vma=False)
-                updates, new_mem, wire, eff_wire, tel = inner(grads, mem,
+                updates, new_mem, wire, eff_wire, tel = inner(send, mem,
                                                               eta, gamma_t)
             elif gossip_mode:
                 ctx = GossipCtx(
@@ -597,7 +678,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                                        opt_state.gossip.state))
                 updates, new_mem, wire, eff_wire, tel, gos_state = \
                     worker_compress_aggregate(
-                        grads, mem, eta, opt.compressor, dp,
+                        send, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
                         transport=opt.transport, transport_ctx=ctx)
             elif overlap_mode:
@@ -606,9 +687,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                     state=jax.tree.map(lambda x: x[0], opt_state.overlap))
                 updates, new_mem, wire, eff_wire, tel, ov_state = \
                     worker_compress_aggregate(
-                        grads, mem, eta, opt.compressor, dp,
+                        send, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
                         transport=opt.transport, transport_ctx=ctx)
+            elif downlink_mode:
+                # server round (DESIGN.md §15): advance the downlink gamma
+                # schedule, then re-compress the replicated aggregate
+                # through the server-side EF — same collectives, the dense
+                # return direction becomes packed payload rows
+                dl_prev = jax.tree.map(lambda x: x[0], opt_state.downlink)
+                dl_gamma = gamma_update(opt.downlink_gamma, opt.compressor,
+                                        dl_prev.gamma, opt_state.step)
+                ctx = DownlinkCtx(state=DownlinkState(
+                    memory=dl_prev.memory, gamma=dl_gamma))
+                updates, new_mem, wire, eff_wire, tel, dl_res = \
+                    worker_compress_aggregate(
+                        send, mem, eta, opt.compressor, dp,
+                        stacked_mask=smask, gamma_t=gamma_t,
+                        transport=opt.transport, downlink_ctx=ctx)
             else:
                 # covers shard_local_topk on 0.4.x too: there the training
                 # body is already manual over 'model' (compat.
@@ -619,7 +715,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 # shard-local selection degenerates to the direct call.
                 updates, new_mem, wire, eff_wire, tel = \
                     worker_compress_aggregate(
-                        grads, mem, eta, opt.compressor, dp,
+                        send, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
                         transport=opt.transport)
             new_mem = jax.tree.map(lambda x: x[None], new_mem)
@@ -627,10 +723,25 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             updates, wire = dense_aggregate(grads, eta, dp)
             eff_wire = wire
             new_mem = opt_state.memory
+            new_velocity = opt_state.velocity
+            dl_res = None
             tel = tel_prev              # no compression: health unchanged
         cum_eff = opt_state.cum_eff_bytes + jax.lax.pmean(eff_wire, dp)
         metrics["wire_bytes"] = jax.lax.pmean(wire, dp)
         metrics["effective_wire_bytes"] = jax.lax.pmean(eff_wire, dp)
+        if dl_res is not None:
+            # replicated by construction (every worker simulates the same
+            # server); pmean keeps the metric convention uniform.  The
+            # uplink counters above stay uplink-only — these keys carry
+            # the return direction, and cum_eff prices both.
+            metrics["downlink_wire_bytes"] = jax.lax.pmean(
+                dl_res.wire_bytes, dp)
+            metrics["downlink_effective_wire_bytes"] = jax.lax.pmean(
+                dl_res.eff_wire_bytes, dp)
+            cum_eff = cum_eff + jax.lax.pmean(dl_res.eff_wire_bytes, dp)
+            new_downlink = jax.tree.map(lambda x: x[None], dl_res.state)
+        else:
+            new_downlink = opt_state.downlink
         metrics["cum_effective_wire_bytes"] = cum_eff
         metrics["ef_backlog"] = jax.lax.pmean(tel.ef_backlog, dp)
         metrics["ef_cosine"] = jax.lax.pmean(tel.cosine, dp)
@@ -669,6 +780,8 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             cum_eff_bytes=cum_eff,
             gossip=new_gossip,
             overlap=new_overlap,
+            downlink=new_downlink,
+            velocity=new_velocity,
         )
         return new_params, new_state, metrics
 
@@ -690,8 +803,7 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         state_in = DistOptState(
             step=rep, alpha_prev=lead,
             memory=(jax.tree.map(lambda _: lead, params_like)
-                    if opt.kind in ("csgd_asss", "nonadaptive")
-                    and not fed_mode else ()),
+                    if compressing and not fed_mode else ()),
             n_evals_ema=lead, gamma=lead,
             telemetry=tel_spec, cum_eff_bytes=rep,
             gossip=(GossipOptState(
@@ -704,13 +816,19 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 if fed_mode else ()),
             overlap=(OverlapState(
                 payload=lead, dense=lead, eff_wire=lead, seeded=lead)
-                if overlap_mode else ()))
+                if overlap_mode else ()),
+            downlink=(DownlinkState(memory=lead, gamma=lead)
+                      if downlink_mode and not fed_mode else ()),
+            velocity=(jax.tree.map(lambda _: lead, params_like)
+                      if acgd_mode and not fed_mode else ()))
         metric_keys = ("loss", "grad_sqnorm", "alpha", "n_evals",
                        "wire_bytes", "effective_wire_bytes",
                        "cum_effective_wire_bytes", "ef_backlog",
                        "ef_cosine", "gamma") + \
             (("participants",) if fed_mode else ()) + \
-            (("staleness",) if overlap_mode else ())
+            (("staleness",) if overlap_mode else ()) + \
+            (("downlink_wire_bytes", "downlink_effective_wire_bytes")
+             if downlink_mode and not fed_mode else ())
         metrics_spec = {k: rep for k in metric_keys}
         # Manual over dp, auto over 'model' (XLA partitions the TP math).
         # On 0.4.x partial-auto shard_map cannot contain a lax.scan

@@ -87,6 +87,50 @@ def test_exchange_collective_counts(key, method):
     assert ref.count(AR) == n_dense
 
 
+def _lower_downlink_exchange(tree, comp):
+    from repro.comm.downlink import (DownlinkCtx, DownlinkResult,
+                                     DownlinkState, init_downlink_state)
+
+    mesh = jax.make_mesh((W_WORKERS,), ("data",))
+    leaves = jax.tree.leaves(tree)
+    dls = init_downlink_state([x.shape for x in leaves],
+                              [x.ndim >= 2 for x in leaves], comp,
+                              comp.gamma)
+    mem = jax.tree.map(jnp.zeros_like, tree)
+    spec = jax.tree.map(lambda _: P(), tree)
+    dl_spec = DownlinkState(memory=P(), gamma=P())
+
+    # the server state must be a traced INPUT (same reasoning as the
+    # overlap lowering below: a constant would let XLA fold the EF away)
+    def worker(g, m, eta, s):
+        return worker_compress_aggregate(
+            g, m, eta, comp, ("data",),
+            downlink_ctx=DownlinkCtx(state=s))
+
+    f = shard_map(
+        worker, mesh=mesh,
+        in_specs=(spec, spec, P(), dl_spec),
+        out_specs=(spec, spec, P(), P(), P(),
+                   DownlinkResult(dl_spec, P(), P())),
+        axis_names={"data"}, check_vma=False)
+    return jax.jit(f).lower(tree, mem, jnp.float32(0.1), dls).as_text()
+
+
+@pytest.mark.parametrize("method", ["block_topk", "topk"])
+def test_downlink_exchange_adds_no_collective(key, method):
+    """DESIGN.md §15: the compressed downlink is a physically simulated
+    server — replicated recompute, ZERO additional collectives.  The
+    lowered downlink exchange must show the exact same budget as the
+    plain bucketed exchange: ONE flat all_gather, ONE dense pmean."""
+    comp = Compressor(gamma=0.05, method=method, block=512,
+                      min_compress_size=64, value_bits=8)
+    tree = _tree(key)
+    txt = _lower_downlink_exchange(tree, comp)
+    assert txt.count(AG) == 1, txt.count(AG)
+    assert txt.count(AR) == 1, txt.count(AR)
+    assert txt.count(CP) == 0, txt.count(CP)
+
+
 def _lower_gossip(tree, comp, topology):
     from repro.comm.gossip import GossipConfig, GossipCtx, GossipState
     from repro.comm.topology import build_topology
@@ -189,7 +233,7 @@ def test_exchange_all_dense_single_pmean(key):
     assert txt.count(AR) == 1
 
 
-def _lower_train_step(transport):
+def _lower_train_step(transport, downlink="dense"):
     from repro.configs import get_smoke_config
     from repro.configs.base import (OptimizerConfig, RunConfig,
                                     ShapeConfig)
@@ -208,7 +252,8 @@ def _lower_train_step(transport):
     run = RunConfig(
         model=cfg, shape=ShapeConfig("t", 32, 8, "train"),
         optimizer=OptimizerConfig(kind="csgd_asss", armijo=ArmijoConfig(),
-                                  compressor=comp, transport=transport))
+                                  compressor=comp, transport=transport,
+                                  downlink=downlink))
     with set_mesh(mesh):
         params = m.init(jax.random.PRNGKey(0))
         params = jax.device_put(params, param_shardings(params, mesh))
@@ -232,6 +277,14 @@ def test_train_step_all_gather_budget():
 
     ref, _ = _lower_train_step("perleaf")
     assert ref.count(AG) == len(plan.compressed_ids) > 2
+
+
+def test_train_step_downlink_keeps_collective_budget():
+    """End to end with ``downlink="compressed"``: the all_gather budget
+    stays the bucket plan's gather count (<= 2) — the server-side
+    recompression must never lower to an extra collective."""
+    txt, plan = _lower_train_step("bucketed", downlink="compressed")
+    assert 1 <= txt.count(AG) == plan.n_gathers <= 2, txt.count(AG)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,175 @@
+"""ACGD (core/acgd.py, arXiv 2002.11364 composed with EF): config
+validation, single-step algebra, byte accounting, and the ISSUE 9 golden
+convergence pairing vs the paper's scaled-step CSGD-ASSS.
+
+Golden contract: same seeded interpolated quadratic, same compressor and
+wire budget, Polyak tail average — ACGD's fixed-step Nesterov recursion
+must land within the established 5% + noise-floor bound of the
+Armijo-scaled run (``loss_a <= 1.05 * loss_c + 5e-4``, see
+tests/test_gamma.py module docstring for the calibration of the absolute
+term), and strictly beat its own momentum-free ablation so the
+acceleration itself is pinned, not just the EF pipeline.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ArmijoConfig, Compressor, CSGDConfig,
+                        GammaControllerConfig, csgd_asss)
+from repro.core.acgd import ACGD, AcgdConfig, AcgdState, acgd
+from repro.data.synthetic import interpolated_regression
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+def test_config_validates_momentum_band():
+    for bad in (-0.1, 1.0, 1.5):
+        with pytest.raises(ValueError, match="momentum"):
+            AcgdConfig(momentum=bad)
+    # closed-left/open-right band: 0 (plain compressed GD) is legal
+    assert AcgdConfig(momentum=0.0).momentum == 0.0
+    assert AcgdConfig(momentum=0.99).momentum == 0.99
+
+
+def test_config_rejects_armijo_coupled_schedule():
+    with pytest.raises(ValueError, match="armijo-coupled"):
+        AcgdConfig(gamma_ctrl=GammaControllerConfig(
+            schedule="armijo-coupled"))
+    # open-loop and telemetry-coupled schedules are fine
+    AcgdConfig(compressor=Compressor(gamma=0.02, max_gamma=0.08),
+               gamma_ctrl=GammaControllerConfig(schedule="ef-coupled"))
+
+
+# ---------------------------------------------------------------------------
+# single-step algebra
+# ---------------------------------------------------------------------------
+
+
+def _quad_loss(w):
+    return 0.5 * jnp.sum(w ** 2)
+
+
+def test_step_nesterov_and_ef_identity(key):
+    """One jitted step reproduces the update equations exactly:
+    v1 = mu*g, d1 = mu*v1 + g, sent + resid == eta*d1 (EF identity from a
+    zero memory), params -= sent, velocity == v1."""
+    cfg = AcgdConfig(compressor=Compressor(gamma=0.25, method="topk",
+                                           min_compress_size=1),
+                     eta=0.1, momentum=0.8)
+    opt = ACGD(cfg)
+    w0 = jax.random.normal(key, (64,))
+    st = opt.init(w0)
+    assert isinstance(st, AcgdState) and int(st.step) == 0
+    w1, st1, aux = jax.jit(opt.step, static_argnums=0)(_quad_loss, w0, st)
+
+    g = np.asarray(w0)                       # grad of 0.5||w||^2
+    v1 = cfg.momentum * np.zeros_like(g) + g
+    d1 = cfg.momentum * v1 + g
+    acc = cfg.eta * d1
+    sent = np.asarray(w0 - w1)               # applied update IS the wire
+    resid = np.asarray(st1.memory)
+    np.testing.assert_allclose(sent + resid, acc, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(st1.velocity), v1, rtol=1e-6)
+    # top-k at gamma=0.25 really dropped coordinates into the memory
+    assert np.count_nonzero(resid) == 48
+    assert int(st1.step) == 1
+    assert float(aux.loss) == pytest.approx(float(_quad_loss(w0)))
+
+
+def test_bytes_accounting_static_and_adaptive(key):
+    w0 = jax.random.normal(key, (1024,))
+    static = AcgdConfig(compressor=Compressor(gamma=0.05,
+                                              min_compress_size=1))
+    opt = ACGD(static)
+    _, st1, aux = opt.step(_quad_loss, w0, opt.init(w0))
+    assert float(aux.eff_wire_bytes) == float(aux.wire_bytes)
+    assert float(st1.cum_eff_bytes) == float(aux.eff_wire_bytes)
+
+    adaptive = AcgdConfig(
+        compressor=Compressor(gamma=0.01, max_gamma=0.05,
+                              min_compress_size=1),
+        gamma_ctrl=GammaControllerConfig(schedule="fixed", gamma0=0.01))
+    opt = ACGD(adaptive)
+    _, st1, aux = opt.step(_quad_loss, w0, opt.init(w0))
+    # ragged counts at gamma0 < max_gamma: strictly under the static budget
+    assert float(aux.eff_wire_bytes) < float(aux.wire_bytes)
+    _, st2, aux2 = opt.step(_quad_loss, w0, st1)
+    assert float(st2.cum_eff_bytes) == pytest.approx(
+        float(aux.eff_wire_bytes) + float(aux2.eff_wire_bytes))
+
+
+# ---------------------------------------------------------------------------
+# golden convergence pairing vs scaled-step CSGD (fixed seeds)
+# ---------------------------------------------------------------------------
+
+SEED = 0
+D = 256
+N = 512
+STEPS = 900
+BATCH = 32
+GAMMA = 0.04
+ETA = 0.02
+MU = 0.5
+
+
+def _run(opt, steps=STEPS, tail=400):
+    A, b, _ = interpolated_regression(N, D, feature_std=1.0, seed=SEED)
+
+    def bl(w, idx):
+        r = A[idx] @ w - b[idx]
+        return jnp.mean(r ** 2)
+
+    @jax.jit
+    def full_loss(w):
+        return jnp.mean((A @ w - b) ** 2)
+
+    @jax.jit
+    def step(w, s, idx):
+        return opt.step(lambda ww: bl(ww, idx), w, s)
+
+    w = jnp.zeros(D)
+    st = opt.init(w)
+    rng = np.random.default_rng(SEED)
+    wbar = np.zeros(D)
+    navg = 0
+    for t in range(steps):
+        idx = jnp.asarray(rng.integers(0, N, BATCH))
+        w, st, aux = step(w, st, idx)
+        if t >= steps - tail:            # Polyak tail average
+            wbar += np.asarray(w)
+            navg += 1
+    return float(full_loss(jnp.asarray(wbar / navg))), \
+        float(aux.cum_eff_bytes)
+
+
+def test_golden_acgd_vs_scaled_step_csgd():
+    comp = Compressor(gamma=GAMMA, min_compress_size=1)
+    loss_c, bytes_c = _run(csgd_asss(CSGDConfig(
+        armijo=ArmijoConfig(sigma=0.1, a_scale=0.3), compressor=comp)))
+    loss_a, bytes_a = _run(acgd(AcgdConfig(
+        compressor=comp, eta=ETA, momentum=MU)))
+
+    # both reach the interpolation floor at all
+    assert np.isfinite(loss_c) and loss_c < 1e-3, loss_c
+    assert np.isfinite(loss_a) and loss_a < 1e-3, loss_a
+    # the ISSUE 9 acceptance contract
+    assert loss_a <= 1.05 * loss_c + 5e-4, (loss_a, loss_c)
+    # identical compressor + fixed gamma -> identical wire budget: the
+    # pairing compares convergence at EQUAL communication
+    assert bytes_a == pytest.approx(bytes_c)
+
+
+def test_golden_momentum_ablation():
+    """Same eta, mu=0 (plain fixed-step compressed GD with EF): the
+    Nesterov recursion must strictly improve the tail loss — pins the
+    acceleration itself, not just the shared EF pipeline."""
+    comp = Compressor(gamma=GAMMA, min_compress_size=1)
+    loss_acc, _ = _run(acgd(AcgdConfig(compressor=comp, eta=ETA,
+                                       momentum=MU)))
+    loss_plain, _ = _run(acgd(AcgdConfig(compressor=comp, eta=ETA,
+                                         momentum=0.0)))
+    assert np.isfinite(loss_plain), loss_plain
+    assert loss_acc < loss_plain, (loss_acc, loss_plain)

@@ -326,6 +326,46 @@ def test_transport_parity_bit_exact(key, comp, gamma_t):
                                               np.asarray(v), err_msg=name)
 
 
+def test_dense_byte_accounting_unified(key):
+    """One accounting basis for every dense-shipping path (ISSUE 9 bugfix):
+    byte counters charge ``size * itemsize`` of the f32 buffer the pmean
+    actually moves — for ``dense_aggregate`` (which used to hard-code
+    4 bytes/element) and for the transports' dense leaves alike, so the
+    downlink's up/down byte split cannot drift between the two."""
+    from repro.compat import shard_map
+    from repro.core.dcsgd import dense_aggregate
+    tree = {
+        "w": jax.random.normal(key, (2, 128)).astype(jnp.bfloat16),
+        "t": jnp.ones((50,), jnp.float16),
+    }
+    f32 = jnp.dtype(jnp.float32).itemsize
+    n_elem = sum(x.size for x in jax.tree.leaves(tree))
+    expect = float(n_elem * f32)
+    # the inputs are half-width on purpose: the charged basis must be the
+    # shipped f32 accumulate, NOT the input-grad itemsize
+    assert expect != sum(x.size * x.dtype.itemsize
+                         for x in jax.tree.leaves(tree))
+
+    mesh = jax.make_mesh((1,), ("data",))
+    spec = jax.tree.map(lambda _: P(), tree)
+    upd, wire = jax.jit(shard_map(
+        lambda g: dense_aggregate(g, jnp.float32(0.1), ("data",)),
+        mesh=mesh, in_specs=(spec,), out_specs=(spec, P()),
+        axis_names={"data"}))(tree)
+    assert all(u.dtype == jnp.float32 for u in jax.tree.leaves(upd))
+    assert float(wire) == expect
+
+    # transports: min_compress_size above every leaf size ships all leaves
+    # dense through the pmean branch — same basis for wire AND effective
+    comp = Compressor(gamma=0.05, method="block_topk", block=512,
+                      min_compress_size=10**6, value_bits=8)
+    tree32 = jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+    for transport in ("perleaf", "bucketed"):
+        _, _, wire_t, eff_t, _ = _run_worker(tree32, comp, transport)
+        assert float(wire_t) == expect, transport
+        assert float(eff_t) == expect, transport
+
+
 def test_transport_rejects_unknown():
     tree = {"v": jnp.zeros((3000,))}
     with pytest.raises(ValueError, match="transport"):

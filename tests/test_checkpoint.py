@@ -1,0 +1,134 @@
+"""Full ``DistOptState`` checkpoint round-trips (ISSUE 9 satellite).
+
+Every optional substate the train step can carry — gossip, overlap,
+federated, downlink, acgd velocity — must survive ``ckpt.save`` /
+``ckpt.restore`` bit-exactly AND restore into the abstract
+``init_opt_state(..., abstract=True)`` skeleton (the resume path: the
+launcher builds the tree_like without materializing a state).  A substate
+that falls out of the NamedTuple flattening, or whose abstract skeleton
+drifts from the concrete one, fails the leaf-count/shape asserts here
+before it silently truncates a resumed run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.configs.base import (FederatedConfig, OptimizerConfig, RunConfig,
+                                ShapeConfig)
+from repro.core import Compressor, GammaControllerConfig
+from repro.launch.train_step import init_opt_state
+
+W = 8
+
+
+def _params(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "w": jax.random.normal(ks[0], (2, 256)),
+        "b": jax.random.normal(ks[1], (300,)),
+        "tiny": jax.random.normal(ks[2], (40,)),
+    }
+
+
+def _run_cfg(**opt_kw):
+    from repro.configs.base import smoke_variant
+    from repro.configs import get_config
+    base = dict(kind="csgd_asss",
+                compressor=Compressor(gamma=0.1, min_compress_size=64))
+    base.update(opt_kw)
+    return RunConfig(model=smoke_variant(get_config("qwen1.5-4b")),
+                     shape=ShapeConfig("t", 32, 8, "train"),
+                     optimizer=OptimizerConfig(**base))
+
+
+def _fill_unique(tree):
+    """Give every leaf a distinct, position-dependent value so a restore
+    that permutes or drops leaves cannot pass the equality check."""
+    leaves, treedef = jax.tree.flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        base = jnp.arange(leaf.size, dtype=jnp.float32).reshape(leaf.shape)
+        out.append((base * 0.01 + i).astype(leaf.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+VARIANTS = {
+    "baseline": {},
+    "gossip": dict(transport="gossip"),
+    "overlap": dict(transport="overlap"),
+    "federated": dict(federated=FederatedConfig(n_clients=4)),
+    "downlink": dict(downlink="compressed",
+                     downlink_gamma=GammaControllerConfig(gamma0=0.05),
+                     compressor=Compressor(gamma=0.1, max_gamma=0.1,
+                                           min_compress_size=64)),
+    "acgd_downlink": dict(kind="acgd", downlink="compressed",
+                          compressor=Compressor(gamma=0.1,
+                                                min_compress_size=64)),
+}
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_dist_opt_state_roundtrip(tmp_path, key, variant):
+    run = _run_cfg(**VARIANTS[variant])
+    params = _params(key)
+    state = _fill_unique(init_opt_state(params, run, W))
+    # the variant actually carries its substate (guards against a config
+    # change silently disabling what this test is meant to cover)
+    if variant == "gossip":
+        assert state.gossip != ()
+    if variant == "overlap":
+        assert state.overlap != ()
+    if variant == "federated":
+        assert state.fed != () and state.memory == ()
+    if "downlink" in variant:
+        assert state.downlink != ()
+    if variant.startswith("acgd"):
+        assert state.velocity != ()
+
+    d = str(tmp_path / variant)
+    ckpt.save(d, 7, state, metadata={"variant": variant})
+    restored, meta = ckpt.restore(d, state)
+    assert meta["variant"] == variant
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(state),
+                                   jax.tree.leaves(restored))):
+        assert a.dtype == b.dtype, i
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{variant} leaf {i}")
+
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_restore_into_abstract_skeleton(tmp_path, key, variant):
+    """The resume path: tree_like comes from ``abstract=True`` — it must
+    agree with the concrete state leaf-for-leaf (count, shape, dtype)."""
+    run = _run_cfg(**VARIANTS[variant])
+    params = _params(key)
+    state = _fill_unique(init_opt_state(params, run, W))
+    skel = init_opt_state(jax.eval_shape(lambda: params), run, W,
+                          abstract=True)
+    c_leaves = jax.tree.leaves(state)
+    s_leaves = jax.tree.leaves(skel)
+    assert len(c_leaves) == len(s_leaves), variant
+    for i, (c, s) in enumerate(zip(c_leaves, s_leaves)):
+        assert tuple(c.shape) == tuple(s.shape), (variant, i)
+        assert c.dtype == s.dtype, (variant, i)
+    assert jax.tree.structure(state) == jax.tree.structure(skel)
+
+    d = str(tmp_path / variant)
+    ckpt.save(d, 3, state)
+    restored, _ = ckpt.restore(d, skel)
+    for a, b in zip(c_leaves, jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_rejects_mismatched_skeleton(tmp_path, key):
+    """Loading a downlink checkpoint into a dense-downlink skeleton must
+    fail loudly (leaf-count assert), not silently drop the server EF."""
+    params = _params(key)
+    state = init_opt_state(params, _run_cfg(**VARIANTS["downlink"]), W)
+    d = str(tmp_path / "mismatch")
+    ckpt.save(d, 1, state)
+    plain = init_opt_state(params, _run_cfg(), W, abstract=True)
+    with pytest.raises(AssertionError):
+        ckpt.restore(d, plain)

@@ -45,6 +45,25 @@ def test_resolve_defaults_from_compressor():
     assert GammaControllerConfig().resolve(Compressor(gamma=0.05))[2] == 0.05
 
 
+def test_resolve_rejects_inverted_band():
+    """An explicit gamma_min above the resolved gamma_max used to pass
+    resolve() silently and pin every jnp.clip to gamma_max — the user's
+    floor was unsatisfiable.  resolve() must raise instead."""
+    comp = Compressor(gamma=0.02, max_gamma=0.08)
+    with pytest.raises(ValueError, match="gamma_min"):
+        GammaControllerConfig(gamma_min=0.5).resolve(comp)
+    # the same inversion via an explicit gamma_max under the floor
+    with pytest.raises(ValueError, match="gamma_min"):
+        GammaControllerConfig(gamma_min=0.06, gamma_max=0.04).resolve(comp)
+    # gamma_init goes through resolve, so the train-step init fails too
+    with pytest.raises(ValueError, match="gamma_min"):
+        gamma_init(GammaControllerConfig(gamma_min=0.5), comp)
+    # boundary: gamma_min == gamma_max is a valid (degenerate) band
+    g0, gmin, gmax = GammaControllerConfig(
+        gamma_min=0.08, gamma_max=0.08).resolve(comp)
+    assert g0 == gmin == gmax == 0.08
+
+
 def test_fixed_schedule_is_constant():
     comp = Compressor(gamma=0.03, max_gamma=0.06)
     cfg = GammaControllerConfig(schedule="fixed")

@@ -310,6 +310,44 @@ def test_ragged_roundtrip_random_counts(method, value_bits):
                                       np.asarray(idx[r])[valid])
 
 
+def test_effective_bytes_clamps_hostile_count_header():
+    """Byte-metric counterpart of the decode clamp below: the gathered
+    count header is worker-controlled garbage until proven otherwise.
+    decode_rows masks any bit pattern into [0, k]; the pricing in
+    effective_payload_bytes used to trust the raw header, so a hostile
+    count (0xFFFFFFFF, or any value above full_count) inflated
+    effective_wire_bytes beyond the static budget — it must clamp to the
+    same [0, full_count] range."""
+    from repro.comm.exchange import effective_payload_bytes
+    comp = _ragged_comp(value_bits=32)
+    d = 1024
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, d))
+    vals, idx = block_extract_sparse(x, comp)
+    spec = wire_fmt.WireSpec.for_row(comp, d)
+    payload = wire_fmt.encode_rows(vals, idx, spec)
+    budget = float(payload.shape[0] * spec.row_bytes)
+    full_pricing = float(jnp.sum(spec.effective_row_bytes(
+        jnp.full((2,), spec.full_count, jnp.int32))))
+    header_only = float(jnp.sum(spec.effective_row_bytes(
+        jnp.zeros(2, jnp.int32))))
+    # positive overflow clamps to full_count; bit patterns that read as
+    # negative int32 (0xFFFFFFFF == -1, 0x80000000 == INT32_MIN) clamp to 0
+    for garbage, expect in (
+        (spec.full_count + 10_000, full_pricing),
+        (0x7FFFFFFF, full_pricing),
+        (0xFFFFFFFF, header_only),
+        (0x80000000, header_only),
+    ):
+        hacked = payload.at[:, 0].set(jnp.uint32(garbage))
+        eff = float(effective_payload_bytes(hacked, spec))
+        assert eff <= budget, (garbage, eff, budget)
+        assert eff == pytest.approx(expect), (garbage, eff, expect)
+    # a zeroed header prices only the per-row header overhead
+    zeroed = payload.at[:, 0].set(jnp.uint32(0))
+    assert float(effective_payload_bytes(zeroed, spec)) == pytest.approx(
+        float(jnp.sum(spec.effective_row_bytes(jnp.zeros(2, jnp.int32)))))
+
+
 def test_decode_honors_count_not_payload_tail():
     """The fixed-k_max buffer is ragged-IN-CONTENT: rewriting the count
     header below the encoded count masks entries that were genuinely

@@ -40,6 +40,10 @@ Two rule sets:
   1.0x).  The stale ``delay=1`` mode is timed as an ungated
   ``exchange_step`` record: its single-device cost is the EF-current
   roundtrip, while the overlap win it exists for needs a real network.
+  The ``guarded_vs_unguarded_step_*`` records (DESIGN.md §16) gate the
+  hostile-wire claim at ``--guard-factor`` (default 1.05x): the
+  always-on decode verdicts + quarantine must stay ~free on a clean
+  wire vs the same exchange traced with ``guards_disabled()``.
   The ``gossip_vs_bucketed_step_*`` records (DESIGN.md §12) ride the
   same pairing but are informational only — the serverless path's fixed
   overhead is a design trade, not a regression.  Likewise the
@@ -69,6 +73,7 @@ BUCKET_RATIO_PREFIX = "bucketed_vs_perleaf_step_"
 OVERLAP_RATIO_PREFIX = "bucketed_vs_overlap_step_"
 GOSSIP_RATIO_PREFIX = "gossip_vs_bucketed_step_"
 DOWNLINK_RATIO_PREFIX = "dense_vs_downlink_step_"
+GUARD_RATIO_PREFIX = "guarded_vs_unguarded_step_"
 FED_STEP_PREFIX = "fed_cohort_step_"
 
 
@@ -93,7 +98,8 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
          factor: float, tel_factor: float, min_ms: float = 0.25,
          cross_run_fail: bool = True,
          bucket_factor: float = 1.0,
-         overlap_factor: float = 1.0) -> list[str]:
+         overlap_factor: float = 1.0,
+         guard_factor: float = 1.05) -> list[str]:
     """Returns the list of failure messages (empty = pass).
 
     ``min_ms``: noise floor for the cross-run rule — keys where both
@@ -107,7 +113,7 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
     def is_ratio(k):
         return k[0].startswith((TEL_RATIO_PREFIX, BUCKET_RATIO_PREFIX,
                                 OVERLAP_RATIO_PREFIX, GOSSIP_RATIO_PREFIX,
-                                DOWNLINK_RATIO_PREFIX))
+                                DOWNLINK_RATIO_PREFIX, GUARD_RATIO_PREFIX))
 
     shared = sorted(k for k in set(baseline) & set(fresh) if not is_ratio(k))
     for k in shared:
@@ -190,6 +196,27 @@ def diff(baseline: dict[tuple, float], fresh: dict[tuple, float],
             f"no {OVERLAP_RATIO_PREFIX}* records in the fresh run — the "
             f"overlap-transport claim went unmeasured")
 
+    # within-run: guarded-vs-unguarded decode ratio (DESIGN.md §16) — the
+    # always-on verdict/quarantine layer must stay ~free on a clean wire
+    n_guard = 0
+    for (op, backend, shape), ratio in sorted(fresh.items()):
+        if not op.startswith(GUARD_RATIO_PREFIX):
+            continue
+        n_guard += 1
+        flag = "GUARDS NOT FREE" if ratio > guard_factor else "ok"
+        print(f"  {op:36s} {str(shape):18s} paired ratio {ratio:5.3f}x "
+              f"(limit {guard_factor}x) {flag}")
+        if ratio > guard_factor:
+            failures.append(
+                f"{op}{shape}: guarded decode costs {ratio:.3f}x the "
+                f"unguarded exchange (> {guard_factor}x) — the hostile-"
+                f"wire defenses (DESIGN.md §16) are no longer ~free on "
+                f"the clean-wire fast path")
+    if n_guard == 0:
+        failures.append(
+            f"no {GUARD_RATIO_PREFIX}* records in the fresh run — the "
+            f"guards-are-free claim went unmeasured")
+
     # informational: gossip-vs-bucketed paired overhead (DESIGN.md §12) —
     # printed for the trajectory, never gated (cross-transport thresholds
     # are a design choice, not a regression signal)
@@ -239,6 +266,10 @@ def main() -> int:
                     help="within-run overlap(delay=0)-vs-bucketed "
                          "transport threshold (the ring schedule must "
                          "not be slower)")
+    ap.add_argument("--guard-factor", type=float, default=1.05,
+                    help="within-run guarded-vs-unguarded decode "
+                         "threshold (the §16 verdict/quarantine layer "
+                         "must stay ~free on a clean wire)")
     ap.add_argument("--min-ms", type=float, default=0.25,
                     help="cross-run noise floor (see diff())")
     ap.add_argument("--cross-run", choices=["fail", "warn"], default="fail",
@@ -249,12 +280,14 @@ def main() -> int:
     print(f"bench diff: {args.baseline} -> {args.fresh} "
           f"(factor {args.factor}x, tel {args.tel_factor}x, "
           f"bucket {args.bucket_factor}x, overlap {args.overlap_factor}x, "
+          f"guard {args.guard_factor}x, "
           f"floor {args.min_ms} ms, cross-run={args.cross_run})")
     failures = diff(_load(args.baseline), _load(args.fresh),
                     args.factor, args.tel_factor, min_ms=args.min_ms,
                     cross_run_fail=args.cross_run == "fail",
                     bucket_factor=args.bucket_factor,
-                    overlap_factor=args.overlap_factor)
+                    overlap_factor=args.overlap_factor,
+                    guard_factor=args.guard_factor)
     if failures:
         print("\nFAIL:")
         for f in failures:

@@ -264,6 +264,30 @@ def main(smoke: bool = False, out_path: str | None = None) -> dict:
            min_us=ratio * 1e3)
     out["bucketed_vs_perleaf"] = ratio
 
+    # guarded vs unguarded decode (DESIGN.md §16): the always-on verdict/
+    # quarantine layer vs the same exchange traced with the guards
+    # compiled out (``guards_disabled()`` is a trace-time switch, so the
+    # unguarded arm must compile INSIDE the context).  Hard-gated at
+    # 1.05x by bench_diff: the hostile-wire defenses must stay ~free on
+    # the clean-wire fast path.
+    from repro.comm import faults
+
+    with faults.guards_disabled():
+        f_unguarded = _make_step("bucketed")
+        jax.block_until_ready(f_unguarded(tree, mem, eta))
+    us = timeit(f_unguarded, tree, mem, eta, n=n_heavy)
+    record("exchange_step", "unguarded", tname, us,
+           f"worker_compress_aggregate, guards compiled out, "
+           f"{n_leaves + 3} leaves")
+    ratio = paired_ratio(f_bucketed, f_unguarded, (tree, mem, eta),
+                         n_pairs=16, repeats=5)
+    record(f"guarded_vs_unguarded_step_{tname}", "default", tname,
+           ratio * 1e3,
+           "paired guarded/unguarded wall-time ratio "
+           "(x1000, dimensionless)",
+           min_us=ratio * 1e3)
+    out["guarded_vs_unguarded"] = ratio
+
     # gossip vs bucketed on the same pytree (DESIGN.md §12): the single-
     # worker ring(1) graph is degree 0, so this prices the serverless
     # path's fixed overhead — same selection/encode stage plus the

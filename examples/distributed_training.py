@@ -93,6 +93,28 @@ The training CLI exposes the full surface::
     PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \\
         --mesh 4x2 --n-clients 64 --clients-per-round 48 \\
         --dirichlet-alpha 0.3 --aggregation support --straggler-rate 0.1
+
+**Hostile-wire robustness** (DESIGN.md §16): ``--fault-demo`` runs the
+same compressed exchange with a seeded fault campaign corrupting worker
+0's gathered payload rows (bit flips, poisoned ragged counts, NaN/Inf
+scale fields) for a 5-step burst.  The defensive decode layer verdicts
+every row, quarantines the invalid ones (zeroed, with the mean's
+denominator adjusted), and freezes the victim's EF residual for the
+round — watch the ``quar`` column light up during the burst while the
+loss keeps descending.  The step-level circuit breaker backs the
+verdicts up: any non-finite round skips the parameter write bit-exactly
+(``skips`` column) and ``--max-consecutive-skips`` consecutive skips
+raise ``DivergenceError`` naming the last good step.  The training CLI
+carries the full surface::
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \\
+        --mesh 4x2 --fault-nonfinite 0.5 --fault-worker 0 \\
+        --fault-start-step 10 --fault-steps 5 --fault-seed 7
+
+``--no-quarantine`` disables the verdict layer (corrupt rows flow into
+the mean — the breaker alone keeps parameters finite) and
+``--max-consecutive-skips 0`` disables the breaker; with both off a
+burst is pinned divergent by tests/test_golden_convergence.py.
 """
 import argparse
 import os
@@ -108,6 +130,7 @@ import jax.numpy as jnp
 from repro.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.comm.faults import FaultConfig
 from repro.comm.gossip import GossipConfig
 from repro.comm.overlap import OverlapConfig
 from repro.comm.topology import TOPOLOGIES, build_topology
@@ -126,7 +149,7 @@ from repro.sharding import param_shardings
 
 def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
         gossip=GossipConfig(), overlap=OverlapConfig(),
-        downlink="dense", downlink_gamma=0.0):
+        downlink="dense", downlink_gamma=0.0, faults=FaultConfig()):
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     cfg = get_smoke_config("yi-34b")
     model = build_model(cfg)
@@ -139,7 +162,8 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
                                   gossip=gossip, overlap=overlap,
                                   downlink=downlink,
                                   downlink_gamma=GammaControllerConfig(
-                                      gamma0=downlink_gamma)))
+                                      gamma0=downlink_gamma),
+                                  faults=faults))
     # links per worker uplink: the gossip worker sends its payload to each
     # of `degree` neighbors; gather/pmean transports send to the W-1 others
     if kind in ("csgd_asss", "nonadaptive") and transport == "gossip":
@@ -169,12 +193,15 @@ def run(kind: str, steps=15, gamma=0.02, transport="bucketed",
                          if "staleness" in m else "")
                 down = (f" down/link={float(m['downlink_wire_bytes']):.3e}"
                         if "downlink_wire_bytes" in m else "")
+                hostile = (f" quar={float(m['rows_quarantined']):.0f}"
+                           f" skips={float(m['steps_skipped']):.0f}"
+                           if faults.enabled else "")
                 print(f"  [{kind:9s}] step {i:3d} loss={float(m['loss']):.4f}"
                       f" alpha={float(m['alpha']):.4f}"
                       f" up/link={wire:.3e}"
                       f" uplink={n_links * wire:.3e}{down}"
                       f" backlog={float(m['ef_backlog']):.3f}"
-                      f" cos={float(m['ef_cosine']):.3f}{stale}")
+                      f" cos={float(m['ef_cosine']):.3f}{stale}{hostile}")
     return float(m["wire_bytes"])
 
 
@@ -263,6 +290,11 @@ def main():
                          "support vs mean aggregation on non-IID shards")
     ap.add_argument("--clients-per-round", type=int, default=0,
                     help="participating clients per round (0: all)")
+    ap.add_argument("--fault-demo", action="store_true",
+                    help="hostile-wire demo (DESIGN.md §16): inject a "
+                         "seeded 5-step fault burst into worker 0's "
+                         "gathered rows and watch the quarantine/breaker "
+                         "columns")
     ap.add_argument("--steps", type=int, default=15)
     args = ap.parse_args()
 
@@ -277,6 +309,15 @@ def main():
                                "mean", steps=args.steps)
         print(f"\nfinal loss: support={loss_s:.4f} mean={loss_m:.4f} "
               f"(mean averages absent coordinates' zeros)")
+        return
+    if args.fault_demo:
+        burst = FaultConfig(seed=7, p_bitflip=0.2, p_count=0.2,
+                            p_nonfinite=0.4, worker=0,
+                            start_step=5, n_steps=5)
+        print("== DCSGD-ASSS under a 5-step hostile-wire burst on worker "
+              "0 (steps 5-9; quarantine + breaker armed) ==")
+        run("csgd_asss", steps=args.steps, transport=args.transport,
+            faults=burst)
         return
     gossip = GossipConfig(topology=args.topology,
                           consensus_lr=args.consensus_lr)

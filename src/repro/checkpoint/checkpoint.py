@@ -7,14 +7,25 @@ Layout::
         arrays.npz         (flattened leaves, keyed leaf_<i>)
         COMMITTED          (written last -> partial checkpoints are ignored)
 
+Crash-safety (DESIGN.md §16): every file lands via tmp-file +
+``os.replace`` and the whole step directory is assembled under a ``.tmp``
+suffix, renamed into place only after the COMMITTED marker exists — a
+kill at ANY point leaves either the previous committed checkpoint or a
+``.tmp`` directory that discovery ignores.  The previous checkpoint is
+never touched while the new one is being written, and ``restore`` falls
+back to the next older committed step (with a logged warning) when the
+newest one turns out to be corrupt on disk.
+
 No external deps (orbax is not available offline).  Works for params,
 optimizer state and data-pipeline cursors alike.
 """
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
+import zipfile
 from typing import Any
 
 import jax
@@ -23,14 +34,34 @@ import numpy as np
 
 PyTree = Any
 
+logger = logging.getLogger(__name__)
+
+# exactly the errors a torn/corrupt on-disk checkpoint produces: missing
+# files, truncated npz (zipfile/EOF), garbage json, missing leaf keys.
+# AssertionError is deliberately NOT here — a skeleton/shape mismatch is
+# a caller bug, not disk corruption, and must propagate.
+CORRUPTION_ERRORS = (OSError, ValueError, zipfile.BadZipFile, KeyError,
+                     EOFError)
+
 
 def _treedef_repr(tree) -> str:
     return str(jax.tree.structure(tree))
 
 
+def _write_atomic(path: str, writer) -> None:
+    """Write via ``writer(tmp_path)`` then ``os.replace`` into place, so
+    a crash mid-write never leaves a half-written file at ``path``."""
+    tmp = path + ".tmp"
+    writer(tmp)
+    os.replace(tmp, path)
+
+
 def save(directory: str, step: int, tree: PyTree,
          metadata: dict | None = None, keep: int = 3) -> str:
-    """Atomically save ``tree`` at ``step``; prunes to ``keep`` newest."""
+    """Atomically save ``tree`` at ``step``; prunes to ``keep`` newest.
+
+    The previous committed checkpoint stays intact (and discoverable)
+    until this one's COMMITTED marker is in place."""
     path = os.path.join(directory, f"step_{step:010d}")
     tmp = path + ".tmp"
     if os.path.exists(tmp):
@@ -40,7 +71,13 @@ def save(directory: str, step: int, tree: PyTree,
     leaves, treedef = jax.tree.flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(leaf)
               for i, leaf in enumerate(leaves)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    def write_arrays(p):
+        # np.savez appends ".npz" to bare paths — hand it a file object
+        # so the tmp-file name survives for os.replace
+        with open(p, "wb") as f:
+            np.savez(f, **arrays)
+
+    _write_atomic(os.path.join(tmp, "arrays.npz"), write_arrays)
     manifest = {
         "step": step,
         "n_leaves": len(leaves),
@@ -49,13 +86,31 @@ def save(directory: str, step: int, tree: PyTree,
         "shapes": [list(np.asarray(leaf).shape) for leaf in leaves],
         "metadata": metadata or {},
     }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    with open(os.path.join(tmp, "COMMITTED"), "w") as f:
-        f.write("ok")
+
+    def write_manifest(p):
+        with open(p, "w") as f:
+            json.dump(manifest, f, indent=1)
+
+    _write_atomic(os.path.join(tmp, "manifest.json"), write_manifest)
+
+    def write_marker(p):
+        with open(p, "w") as f:
+            f.write("ok")
+
+    _write_atomic(os.path.join(tmp, "COMMITTED"), write_marker)
     if os.path.exists(path):
-        shutil.rmtree(path)
-    os.rename(tmp, path)
+        # re-saving the SAME step: the old dir must move out of the way
+        # (dir-over-dir rename is not atomic); park it under .old first
+        # so a crash between the two renames still leaves a committed
+        # copy discoverable by the fallback scan below
+        old = path + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+    else:
+        os.rename(tmp, path)
     _prune(directory, keep)
     return path
 
@@ -73,6 +128,7 @@ def all_steps(directory: str) -> list[int]:
     out = []
     for name in os.listdir(directory):
         if name.startswith("step_") and not name.endswith(".tmp") and \
+                not name.endswith(".old") and \
                 os.path.exists(os.path.join(directory, name, "COMMITTED")):
             out.append(int(name[5:]))
     return sorted(out)
@@ -83,13 +139,9 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
-def restore(directory: str, tree_like: PyTree,
-            step: int | None = None) -> tuple[PyTree, dict]:
-    """Restore into the structure of ``tree_like`` (shapes are verified)."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+def _load_step(directory: str, step: int, tree_like: PyTree):
+    """Load one committed step; raises CORRUPTION_ERRORS on torn files
+    and AssertionError on a skeleton mismatch (which must propagate)."""
     path = os.path.join(directory, f"step_{step:010d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -104,3 +156,35 @@ def restore(directory: str, tree_like: PyTree,
         assert tuple(arr.shape) == expect, (i, arr.shape, expect)
         leaves.append(jnp.asarray(arr))
     return jax.tree.unflatten(treedef, leaves), manifest["metadata"]
+
+
+def restore(directory: str, tree_like: PyTree,
+            step: int | None = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``tree_like`` (shapes are verified).
+
+    With ``step=None`` (resume-from-latest), a checkpoint whose files
+    turn out corrupt on disk is skipped with a logged warning and the
+    next older committed step is tried — a torn write must not strand an
+    otherwise-resumable run.  An explicitly requested ``step`` raises
+    instead of silently answering with different data.
+    """
+    if step is not None:
+        return _load_step(directory, step, tree_like)
+    candidates = sorted(all_steps(directory), reverse=True)
+    if not candidates:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    last_err = None
+    for s in candidates:
+        try:
+            return _load_step(directory, s, tree_like)
+        except AssertionError:
+            raise                      # caller bug, not disk corruption
+        except CORRUPTION_ERRORS as e:
+            logger.warning(
+                "checkpoint step_%010d in %s is corrupt (%s: %s) — "
+                "falling back to the next older committed step",
+                s, directory, type(e).__name__, e)
+            last_err = e
+    raise FileNotFoundError(
+        f"every committed checkpoint in {directory} is corrupt "
+        f"(last error: {type(last_err).__name__}: {last_err})")

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from . import faults
 from . import wire as wire_fmt
 from .wire import WireSpec
 
@@ -241,7 +242,7 @@ def encode_buckets(plan: BucketPlan, rows, *,
 
 
 def decode_buckets(plan: BucketPlan, gathered: jax.Array, *,
-                   impl: str | None = None):
+                   impl: str | None = None, with_verdicts: bool = False):
     """Decode an all-gathered (W, total_words) flat buffer back to
     per-leaf ((W, L, k) f32 values, (W, L, k) i32 flat indices) pairs —
     a list aligned with ``plan.leaves`` (None for dense lanes), each
@@ -250,6 +251,14 @@ def decode_buckets(plan: BucketPlan, gathered: jax.Array, *,
     Ragged rows are decoded by their OWN header count (workers carry
     heterogeneous k_t); the count mask the per-leaf kernels apply
     in-launch is applied per leaf after the batched stream unpack.
+
+    This is the wire boundary: an active fault-injection campaign
+    (comm/faults.py) corrupts each lane's gathered rows here, before
+    unpack.  With ``with_verdicts`` a second aligned list of per-lane
+    ``(W, L)`` bool validity verdicts (DESIGN.md §16) is returned and
+    invalid rows come back already quarantined (zero value at index 0);
+    on a clean wire every verdict is True and the decode is bit-exact
+    vs ``with_verdicts=False``.
     """
     W = gathered.shape[0]
     lanes = {ln.index: ln for ln in plan.leaves}
@@ -258,7 +267,8 @@ def decode_buckets(plan: BucketPlan, gathered: jax.Array, *,
         if ln.dense:
             continue
         seg = gathered[:, ln.word_off:ln.word_off + ln.words]
-        pay[ln.index] = seg.reshape(W * ln.L, ln.spec.row_words)
+        rows = seg.reshape(W * ln.L, ln.spec.row_words)
+        pay[ln.index] = faults.maybe_corrupt(rows, ln.spec, ln.index, ln.L)
 
     ifields: dict[int, jax.Array] = {}
     vfields: dict[int, jax.Array] = {}
@@ -277,6 +287,8 @@ def decode_buckets(plan: BucketPlan, gathered: jax.Array, *,
             vgroup, lanes[b.leaf_ids[0]].spec.value_bits, impl))
 
     out = [None] * len(plan.leaves)
+    verdicts = [None] * len(plan.leaves)
+    by_spec: dict = {}
     for ln in plan.leaves:
         if ln.dense:
             continue
@@ -292,6 +304,37 @@ def decode_buckets(plan: BucketPlan, gathered: jax.Array, *,
             else None
         vals, idx = wire_fmt.fields_to_rows(ifld, vfld, scale_words,
                                             counts, spec)
-        out[i] = (vals.reshape(W, ln.L, spec.k),
-                  idx.reshape(W, ln.L, spec.k))
-    return out
+        if with_verdicts:
+            by_spec.setdefault(spec, []).append((ln, vals, idx))
+        else:
+            out[i] = (vals.reshape(W, ln.L, spec.k),
+                      idx.reshape(W, ln.L, spec.k))
+    if not with_verdicts:
+        return out
+    # verdict + quarantine batch per WireSpec group, not per lane: every
+    # lane with the same row layout rides ONE fused launch (same
+    # coalescing argument as the bucket gather itself), keeping the §16
+    # guards inside the 1.05x guarded-vs-unguarded bench gate.  Row order
+    # is tree order within the concatenation, so slicing back per lane is
+    # bit-exact vs the per-lane calls.
+    for spec, members in by_spec.items():
+        if len(members) > 1:
+            cat_pay = jnp.concatenate(
+                [pay[ln.index] for ln, _, _ in members])
+            cat_vals = jnp.concatenate([v for _, v, _ in members])
+            cat_idx = jnp.concatenate([x for _, _, x in members])
+        else:
+            ln0 = members[0][0]
+            cat_pay, cat_vals, cat_idx = (pay[ln0.index], members[0][1],
+                                          members[0][2])
+        v = wire_fmt.row_verdict(cat_pay, spec, cat_vals, cat_idx)
+        cat_vals, cat_idx = wire_fmt.quarantine_rows(cat_vals, cat_idx, v)
+        off = 0
+        for ln, _, _ in members:
+            rows = W * ln.L
+            verdicts[ln.index] = v[off:off + rows].reshape(W, ln.L)
+            out[ln.index] = (
+                cat_vals[off:off + rows].reshape(W, ln.L, spec.k),
+                cat_idx[off:off + rows].reshape(W, ln.L, spec.k))
+            off += rows
+    return out, verdicts

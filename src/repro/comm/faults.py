@@ -1,0 +1,273 @@
+"""Seeded hostile-wire fault injection + the "faulty" transport wrapper
+(DESIGN.md §16).
+
+The §8/§9 wire format is only *garbage-tolerant* by construction
+(index/count clamping); this module makes hostility a first-class, fully
+reproducible test axis.  A :class:`FaultConfig` names per-fault-class
+rates and a deterministic ``(seed, step, lane, row)`` keying; the
+injector corrupts **gathered payload rows at the wire boundary** — after
+the collective, before decode — exactly where a flaky NIC, a bad DMA, or
+a crashed peer would.  Fault classes:
+
+* ``bitflip``    — XOR one uniformly-chosen bit anywhere in the row
+  (header, scale, index or value words).
+* ``count``      — replace a ragged count header with ``0xFFFFFFFF``
+  (decodes to -1: truncated) or ``2*full_count + 7`` (overflowed, would
+  unmask garbage tail fields as live values).
+* ``nonfinite``  — write NaN/Inf bit patterns into the first value word
+  (f32/bf16 rows) or the quantization-scale word (sub-byte rows), the
+  spot where corruption poisons every dequantized value.
+* ``zero_row``   — zero the whole row: a dropped/silent worker.  Note an
+  all-zero row *decodes cleanly* (count 0, scale 0, values 0) — it
+  degrades the aggregate rather than poisoning it, so the verdict layer
+  deliberately does NOT quarantine it.
+
+Injection is wired through the §12 transport registry as a *wrapper*
+transport: ``transport="faulty"`` takes a :class:`FaultCtx` naming the
+wrapped inner transport (bucketed / perleaf / gossip / overlap) and its
+own ctx, and simply runs the inner exchange inside the
+:func:`active_faults` trace-time context — the decode paths
+(comm/bucket.py, dcsgd's per-leaf reference) consult the context via
+:func:`maybe_corrupt`.  With no active context ``maybe_corrupt`` is a
+Python-level identity, so the faults-off step traces byte-identical HLO
+(zero added collectives, zero added ops — the bit-exactness guarantee).
+
+The **verdict layer** (``wire.row_verdict`` + quarantine) is independent
+of injection and on by default; :func:`guards_active` returns False only
+inside :func:`guards_disabled` (the unguarded bench/divergence-pin path)
+or when the active ``FaultConfig`` sets ``quarantine=False``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.transport import get_transport, register_transport
+
+_RATE_FIELDS = ("p_bitflip", "p_count", "p_nonfinite", "p_zero_row")
+
+# f32 / packed-bf16-pair bit patterns for the nonfinite fault class
+_F32_NAN = 0x7FC00000
+_F32_INF = 0x7F800000
+_BF16_NAN_PAIR = 0x7FC07FC0
+_BF16_INF_PAIR = 0x7F807F80
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Static, hashable description of one injection campaign.
+
+    ``worker`` targets one slot of the gathered leading axis (the dp
+    worker for all_gather transports, the cohort client slot for fed,
+    ring slot for gossip — slot 0 is self); ``-1`` targets every row.
+    ``start_step``/``n_steps`` bound the burst (``n_steps=-1``: open
+    ended).  ``quarantine=False`` keeps injecting but disables the
+    verdict layer — the "what if we had no guards" ablation arm.
+    """
+
+    seed: int = 0
+    p_bitflip: float = 0.0
+    p_count: float = 0.0
+    p_nonfinite: float = 0.0
+    p_zero_row: float = 0.0
+    worker: int = -1
+    start_step: int = 0
+    n_steps: int = -1
+    quarantine: bool = True
+
+    def __post_init__(self):
+        for f in _RATE_FIELDS:
+            v = getattr(self, f)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultConfig.{f} must be in [0, 1], "
+                                 f"got {v!r}")
+        if self.start_step < 0:
+            raise ValueError("FaultConfig.start_step must be >= 0")
+
+    @property
+    def enabled(self) -> bool:
+        """True iff any fault class has a nonzero rate."""
+        return any(getattr(self, f) > 0.0 for f in _RATE_FIELDS)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultCtx:
+    """``transport_ctx`` of the "faulty" wrapper transport: the campaign,
+    the traced round index, and the wrapped inner transport (+ its own
+    ctx when the inner transport is itself stateful)."""
+
+    cfg: FaultConfig
+    step: object               # traced int32 round index
+    inner: str                 # wrapped transport name
+    inner_ctx: object = None   # inner transport's own ctx (stateful only)
+
+
+# ---------------------------------------------------------------------------
+# trace-time context plumbing
+# ---------------------------------------------------------------------------
+# Set while the jitted exchange traces (worker_fn traces once per compile,
+# so a with-block around the inner exchange call scopes exactly the decode
+# sites we want).  Never touched at runtime.
+
+@dataclasses.dataclass
+class _ActiveFaults:
+    cfg: FaultConfig
+    step: object
+
+
+_ACTIVE: list[_ActiveFaults] = []
+_GUARDS_OFF: list[bool] = []
+
+
+@contextlib.contextmanager
+def active_faults(cfg: FaultConfig, step):
+    """Trace-time scope: decode sites reached inside inject faults keyed
+    on ``(cfg.seed, step, lane, row)``."""
+    _ACTIVE.append(_ActiveFaults(cfg, step))
+    try:
+        yield
+    finally:
+        _ACTIVE.pop()
+
+
+@contextlib.contextmanager
+def guards_disabled():
+    """Trace-time scope: disable the decode verdict/quarantine layer (the
+    unguarded bench arm and the pinned no-quarantine divergence test)."""
+    _GUARDS_OFF.append(True)
+    try:
+        yield
+    finally:
+        _GUARDS_OFF.pop()
+
+
+def guards_active() -> bool:
+    """Should decode sites compute verdicts and quarantine?  True by
+    default (defensive decode is always on); False inside
+    :func:`guards_disabled` or when an active campaign opts out."""
+    if _GUARDS_OFF:
+        return False
+    if _ACTIVE and not _ACTIVE[-1].cfg.quarantine:
+        return False
+    return True
+
+
+def injection_active() -> bool:
+    return bool(_ACTIVE) and _ACTIVE[-1].cfg.enabled
+
+
+# ---------------------------------------------------------------------------
+# the injector
+# ---------------------------------------------------------------------------
+
+def maybe_corrupt(rows: jax.Array, spec, lane: int,
+                  rows_per_worker: int) -> jax.Array:
+    """Corrupt gathered payload ``rows`` ((R, row_words) uint32) per the
+    active campaign; Python-level identity when none is active.
+
+    Randomness is ``fold_in(fold_in(key(seed), lane), step)`` then
+    per-row uniform draws — deterministic in ``(seed, step, lane, row)``
+    and independent of mesh shape, so the same campaign replays exactly
+    across (8,) and (4,2) meshes.  ``rows_per_worker`` maps row index to
+    gathered slot (``row // rows_per_worker``) for ``cfg.worker``
+    targeting.
+    """
+    if not _ACTIVE:
+        return rows
+    st = _ACTIVE[-1]
+    cfg = st.cfg
+    if not cfg.enabled:
+        return rows
+    R, words = rows.shape
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), lane)
+    key = jax.random.fold_in(key, jnp.asarray(st.step, jnp.int32))
+    u = jax.random.uniform(key, (R, 6))
+    kf = jax.random.split(key, 2)
+
+    step = jnp.asarray(st.step, jnp.int32)
+    in_window = step >= cfg.start_step
+    if cfg.n_steps >= 0:
+        in_window &= step < cfg.start_step + cfg.n_steps
+    if cfg.worker >= 0:
+        slot = jnp.arange(R, dtype=jnp.int32) // rows_per_worker
+        active = in_window & (slot == cfg.worker)
+    else:
+        active = jnp.broadcast_to(in_window, (R,))
+
+    # -- bitflip: XOR one uniform bit of one uniform word ------------------
+    if cfg.p_bitflip > 0.0:
+        hit = active & (u[:, 0] < cfg.p_bitflip)
+        w_sel = jax.random.randint(kf[0], (R,), 0, words)
+        b_sel = jax.random.randint(kf[1], (R,), 0, 32)
+        flip = jnp.where(hit, jnp.uint32(1) << b_sel.astype(jnp.uint32),
+                         jnp.uint32(0))
+        col = jnp.arange(words, dtype=jnp.int32)[None, :] == w_sel[:, None]
+        rows = rows ^ jnp.where(col, flip[:, None], jnp.uint32(0))
+
+    # -- count header: truncated (-1) or overflowed ------------------------
+    if cfg.p_count > 0.0 and spec.ragged:
+        hit = active & (u[:, 1] < cfg.p_count)
+        bad = jnp.where(u[:, 2] < 0.5,
+                        jnp.uint32(0xFFFFFFFF),
+                        jnp.uint32(2 * spec.full_count + 7))
+        rows = rows.at[:, 0].set(jnp.where(hit, bad, rows[:, 0]))
+
+    # -- nonfinite value/scale word ----------------------------------------
+    if cfg.p_nonfinite > 0.0:
+        hit = active & (u[:, 3] < cfg.p_nonfinite)
+        if spec.value_bits <= 8:
+            # poison the quantization scale: every dequantized value NaNs
+            tw = spec.header_words - 1
+            bad = jnp.where(u[:, 4] < 0.5, jnp.uint32(_F32_NAN),
+                            jnp.uint32(_F32_INF))
+        else:
+            # poison the first value word (live whenever count >= 1)
+            tw = spec.header_words + spec.index_words
+            if spec.value_bits == 16:
+                bad = jnp.where(u[:, 4] < 0.5, jnp.uint32(_BF16_NAN_PAIR),
+                                jnp.uint32(_BF16_INF_PAIR))
+            else:
+                bad = jnp.where(u[:, 4] < 0.5, jnp.uint32(_F32_NAN),
+                                jnp.uint32(_F32_INF))
+        rows = rows.at[:, tw].set(jnp.where(hit, bad, rows[:, tw]))
+
+    # -- dropped worker: whole row zeroed (wins over the others) -----------
+    if cfg.p_zero_row > 0.0:
+        hit = active & (u[:, 5] < cfg.p_zero_row)
+        rows = jnp.where(hit[:, None], jnp.uint32(0), rows)
+
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# the wrapper transport
+# ---------------------------------------------------------------------------
+
+@register_transport(
+    "faulty", stateful=True,
+    description="fault-injection wrapper: runs the FaultCtx.inner "
+                "transport with seeded wire corruption active (§16)")
+def faulty_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
+                    W, *, ctx: FaultCtx):
+    """Run ``ctx.inner``'s exchange inside the injection scope.
+
+    Stateless inner transports are padded with an empty ``()`` carried
+    state so the wrapper keeps the uniform stateful 6-tuple arity.
+    """
+    if ctx.inner == "faulty":
+        raise ValueError("faulty transport cannot wrap itself")
+    inner = get_transport(ctx.inner)
+    with active_faults(ctx.cfg, ctx.step):
+        if inner.stateful:
+            if ctx.inner_ctx is None:
+                raise ValueError(
+                    f"faulty wrapper around stateful transport "
+                    f"{ctx.inner!r} needs FaultCtx.inner_ctx")
+            return inner.exchange(flat_g, flat_m, flat_s, eta, comp,
+                                  dp_axes, gamma_t, W, ctx=ctx.inner_ctx)
+        out = inner.exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes,
+                             gamma_t, W)
+        return (*out, ())

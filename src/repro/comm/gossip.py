@@ -46,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.core.leafmath import scatter_layers, select_and_encode
 from repro.core.telemetry import TelemetrySums, sparse_own_sums
+from . import faults
 from .bucket import build_bucket_plan, decode_buckets, encode_buckets
 from .exchange import check_bucket_payload
 from .topology import TOPOLOGIES, Topology
@@ -166,8 +167,13 @@ def gossip_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
     all_rows = jnp.stack(rows)                    # (degree+1, words)
 
     decoded = [None] * n
+    verdicts = [None] * n
     if plan.total_words:
-        decoded = decode_buckets(plan, all_rows[:, :plan.total_words])
+        if faults.guards_active():
+            decoded, verdicts = decode_buckets(
+                plan, all_rows[:, :plan.total_words], with_verdicts=True)
+        else:
+            decoded = decode_buckets(plan, all_rows[:, :plan.total_words])
     mix_dense = [None] * n
     if dense_ids:
         dcat = jax.lax.bitcast_convert_type(
@@ -207,7 +213,17 @@ def gossip_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
             continue
         spec, L, d = lane.spec, lane.L, lane.d
         g_vals, g_idx = decoded[i]                # (degree+1, L, k)
-        mix = scatter_layers(g_vals, g_idx, L, d, jnp.float32) / (deg + 1)
+        total = scatter_layers(g_vals, g_idx, L, d, jnp.float32)
+        if verdicts[i] is None:
+            mix = total / (deg + 1)
+        else:
+            # §16 quarantine: invalid neighbor rows arrive zeroed; the
+            # Metropolis denominator shrinks to the valid-row count.
+            # Quarantine guarantees zero total when support is zero, so
+            # /max(s,1) answers 0 without the fed helper's extra `where`
+            # pass (bit-exact to /(deg+1) on a clean wire)
+            n_valid = jnp.sum(verdicts[i].astype(jnp.float32), axis=0)
+            mix = total / jnp.maximum(n_valid[:, None], 1.0)
         own_vals, own_idx = g_vals[0], g_idx[0]
         own_dense = scatter_layers(own_vals, own_idx, L, d, jnp.float32)
         e = mix - own_dense
@@ -215,6 +231,13 @@ def gossip_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
             r = sel.resid[i] + (sel.sent[i] - own_dense)
         else:
             r = sel.acc2[i] - own_dense
+        quar = jnp.float32(0.0)
+        if verdicts[i] is not None:
+            # own row (slot 0) quarantined: freeze this leaf's EF
+            own_ok = verdicts[i][0]                          # (L,)
+            m2f = m.astype(jnp.float32).reshape(L, d)
+            r = jnp.where(own_ok[:, None], r, m2f)
+            quar = jnp.float32(verdicts[i].size) - jnp.sum(n_valid)
         new_mem[i] = r.reshape(m.shape).astype(m.dtype)
         own_upd[i], gerr[i] = own_dense, e
         wire = wire + jnp.float32(L * spec.row_bytes)
@@ -224,7 +247,7 @@ def gossip_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
         own_sq, own_dot = sparse_own_sums(own_vals, own_idx, sel.g2f[i])
         sums = sums.add(g_sq=sel.leaf_g_sq[i], acc_sq=sel.leaf_acc_sq[i],
                         resid_sq=jnp.sum(r * r), own_sq=own_sq,
-                        own_dot_g=own_dot)
+                        own_dot_g=own_dot, quar_rows=quar)
         err_sq = err_sq + jnp.sum(e * e)
         n_tot += L * d
 

@@ -40,6 +40,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.comm import faults
 from repro.comm import wire as wire_fmt
 from repro.comm.bucket import (BucketPlan, build_bucket_plan, decode_buckets,
                                encode_buckets)
@@ -207,10 +208,15 @@ def overlap_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
     ship_dense = state.dense if stale else dense_cat
 
     decoded = [None] * n
+    verdicts = [None] * n
     if plan.total_words:
         all_pay = gather_packed(ship_pay, dp_axes,
                                 ring_chunks=cfg.n_chunks)  # (W, total)
-        decoded = decode_buckets(plan, all_pay)
+        if faults.guards_active():
+            decoded, verdicts = decode_buckets(plan, all_pay,
+                                               with_verdicts=True)
+        else:
+            decoded = decode_buckets(plan, all_pay)
 
     dense_mean = [None] * n
     if dense_ids:
@@ -272,12 +278,22 @@ def overlap_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
             continue
         spec, L, d = lane.spec, lane.L, lane.d
         g_vals, g_idx = decoded[i]
-        mean_dense = scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
+        total = scatter_layers(g_vals, g_idx, L, d, jnp.float32)
+        if verdicts[i] is None:
+            mean_dense = total / W
+        else:
+            # §16 quarantine: invalid gathered rows arrive zeroed; divide
+            # by the per-layer valid-row count instead of W (the fed
+            # support-weighted division — bit-exact to /W when clean)
+            from repro.fed.aggregate import support_weighted_mean
+            n_valid = jnp.sum(verdicts[i].astype(jnp.float32), axis=0)
+            mean_dense = support_weighted_mean(total, n_valid[:, None])
 
         # EF against the CURRENT own payload: at delay=0 the gathered
         # buffer IS current — slice own rows exactly like the bucketed
         # consumer; at delay=1 the gather carries old rows, so roundtrip
-        # the encoder's own fields instead (bit-exact, launch-free)
+        # the encoder's own fields instead (bit-exact, launch-free —
+        # and never wire-corrupted, so no own-row quarantine applies)
         if stale:
             own_vals, own_idx = own_rt[i]
         else:
@@ -290,6 +306,15 @@ def overlap_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
             r = sel.resid[i] + (sel.sent[i] - own_dense)
         else:
             r = sel.acc2[i] - own_dense
+        quar = jnp.float32(0.0)
+        if verdicts[i] is not None:
+            if not stale:
+                # own row quarantined at the wire: freeze this leaf's EF
+                own_ok = jax.lax.dynamic_index_in_dim(
+                    verdicts[i], w_idx, 0, keepdims=False)       # (L,)
+                m2f = m.astype(jnp.float32).reshape(L, d)
+                r = jnp.where(own_ok[:, None], r, m2f)
+            quar = jnp.sum(1.0 - verdicts[i].astype(jnp.float32))
 
         updates.append(mean_dense.reshape(g.shape))
         new_mem.append(r.reshape(m.shape).astype(m.dtype))
@@ -300,7 +325,7 @@ def overlap_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
         own_sq, own_dot = sparse_own_sums(own_vals, own_idx, sel.g2f[i])
         sums = sums.add(g_sq=sel.leaf_g_sq[i], acc_sq=sel.leaf_acc_sq[i],
                         resid_sq=jnp.sum(r * r), own_sq=own_sq,
-                        own_dot_g=own_dot)
+                        own_dot_g=own_dot, quar_rows=quar)
 
     # wire bytes are static per plan (the full buffer crosses the wire
     # every step, carried or not); effective bytes describe the buffer

@@ -81,6 +81,7 @@ def _ensure_registered() -> None:
     registers ``gossip``.  By the time any *call* into the registry
     happens those imports are cheap no-ops or resolve cleanly.
     """
+    import repro.comm.faults      # noqa: F401  (registers "faulty")
     import repro.comm.gossip      # noqa: F401  (registers "gossip")
     import repro.comm.overlap     # noqa: F401  (registers "overlap")
     import repro.core.dcsgd       # noqa: F401  (registers "bucketed"/"perleaf")

@@ -317,6 +317,65 @@ def roundtrip_rows(vals: jax.Array, idx: jax.Array, spec: WireSpec, *,
     return fields_to_rows(ifields, vfields, scale_words, counts, spec)
 
 
+def row_verdict(payload: jax.Array, spec: WireSpec, vals: jax.Array,
+                idx: jax.Array) -> jax.Array:
+    """Per-row validity verdict of a decoded payload (DESIGN.md §16).
+
+    ``payload``: the (R, row_words) uint32 rows the fields came from;
+    ``vals``/``idx``: their decode.  Returns (R,) bool — True iff the row
+    is safe to aggregate:
+
+    * every decoded value is finite — checked per element for the
+      bitcast widths (16/32-bit NaN/Inf rides the value fields
+      directly); for sub-byte quantized widths finiteness is implied by
+      the scale word alone (``vals = q * scale`` with ``|q| < 2^bits``),
+      so the per-element sweep is replaced by one per-row scale bound:
+      ``|scale| <= f32_max / 2^(bits-1)`` — rejecting NaN/Inf scales AND
+      the absurd-magnitude finite scales whose dequantized product would
+      overflow to Inf (an honest encoder's scale is ``max|row| / q_max``,
+      many orders of magnitude under the bound),
+    * the count header (ragged specs) is in ``[0, full_count]`` — a
+      truncated/overflowed count would otherwise unmask garbage tail
+      fields as live values,
+    * every index is in ``[0, d)`` or carries value 0 (padding/masked
+      entries legitimately hold clamped or zero indices; a *live* value
+      at an out-of-range index means a corrupt index section even though
+      the scatter-add would silently drop it).
+
+    Honest encodes satisfy all of it by construction, so the verdict is
+    identically True on a clean wire — the quarantine path below is then
+    a bit-exact no-op (the faults-off guarantee).  The element checks
+    are deliberately fused into ONE reduction pass: this runs on every
+    decode, guarded by the bench_diff 1.05x guarded-vs-unguarded gate.
+    """
+    ok_elems = (idx >= 0) & (idx < spec.d) | (vals == 0.0)
+    if spec.value_bits > 8:
+        ok_elems &= jnp.isfinite(vals)
+    ok = jnp.all(ok_elems, axis=-1)
+    if spec.ragged:
+        counts = payload[:, 0].astype(jnp.int32)
+        ok &= (counts >= 0) & (counts <= spec.full_count)
+    if spec.value_bits <= 8:
+        scale = lax.bitcast_convert_type(
+            payload[:, spec.header_words - 1], jnp.float32)
+        q_max = float(1 << (spec.value_bits - 1))
+        ok &= jnp.abs(scale) <= float(jnp.finfo(jnp.float32).max) / q_max
+    return ok
+
+
+def quarantine_rows(vals: jax.Array, idx: jax.Array,
+                    verdict: jax.Array):
+    """Zero invalid rows out of a decode: values -> 0.0, indices -> 0, so
+    a quarantined row scatter-adds exactly nothing anywhere.  Valid rows
+    pass through bit-untouched (including any harmless out-of-range
+    padding indices the scatter drops), keeping the faults-off path
+    bit-exact.  The caller adjusts the aggregation denominator from the
+    verdict (support-weighted division, fed/aggregate.py)."""
+    keep = verdict[:, None]
+    return (jnp.where(keep, vals, 0.0),
+            jnp.where(keep, idx, jnp.int32(0)))
+
+
 def decode_rows(payload: jax.Array, spec: WireSpec, *,
                 impl: str | None = None, return_counts: bool = False):
     """Decode a packed (R, row_words) uint32 payload back to

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.comm.faults import FaultConfig
 from repro.comm.gossip import GossipConfig
 from repro.comm.overlap import OverlapConfig
 from repro.core.armijo import ArmijoConfig
@@ -270,6 +271,17 @@ class OptimizerConfig:
     # (the server has no Armijo search and no per-worker EF telemetry to
     # couple to)
     downlink_gamma: GammaControllerConfig = GammaControllerConfig()
+    # hostile-wire robustness (DESIGN.md §16): seeded fault-injection
+    # campaign applied at the gathered-payload boundary.  All rates 0.0
+    # (the default) means no injection; the defensive decode verdicts and
+    # the step-level circuit breaker stay armed either way.
+    faults: FaultConfig = FaultConfig()
+    # circuit breaker: a non-finite round (loss or decoded update) skips
+    # the parameter write with all carried optimizer state bit-frozen;
+    # this many CONSECUTIVE skips raise DivergenceError on the host
+    # (repro/core/health.py).  0 disables the gate (legacy behavior:
+    # non-finite rounds write through).
+    max_consecutive_skips: int = 25
 
     def __post_init__(self):
         from repro.comm.transport import validate_transport
@@ -309,6 +321,29 @@ class OptimizerConfig:
                 "federated cohort simulation does not compose with "
                 "transport='overlap' — the cohort gather carries per-client "
                 "rows on its own schedule (DESIGN.md §13/§14)")
+        if self.max_consecutive_skips < 0:
+            raise ValueError(
+                f"max_consecutive_skips must be >= 0 (0 disables the "
+                f"breaker), got {self.max_consecutive_skips}")
+        if self.faults.enabled:
+            if self.kind not in ("csgd_asss", "nonadaptive", "acgd"):
+                raise ValueError(
+                    f"fault injection corrupts the packed uplink wire "
+                    f"(DESIGN.md §16); kind={self.kind!r} ships a dense "
+                    f"pmean with no wire to corrupt — use csgd_asss | "
+                    f"nonadaptive | acgd")
+            if self.downlink == "compressed":
+                raise ValueError(
+                    "fault injection does not compose with "
+                    "downlink='compressed' — the 'faulty' wrapper is a "
+                    "stateful transport and the downlink hook requires a "
+                    "stateless one (DESIGN.md §15/§16)")
+            if self.shard_local_topk:
+                raise ValueError(
+                    "fault injection does not compose with "
+                    "shard_local_topk — fault sites are keyed by whole-"
+                    "gradient leaf index, not a model shard's lane set "
+                    "(DESIGN.md §16)")
 
 
 @dataclasses.dataclass(frozen=True)

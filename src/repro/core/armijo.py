@@ -113,7 +113,13 @@ def armijo_search(
 
     def cond(state):
         alpha, f_try, n = state
-        ok = f_try <= f0 - cfg.sigma * alpha * grad_sqnorm
+        # a NaN/Inf candidate loss must read as a REJECTED trial, not an
+        # accepted one: NaN makes `<=` false (keeps backtracking, which
+        # is right) but Inf-f0 arithmetic or a -Inf f_try could satisfy
+        # the inequality — the explicit isfinite guard pins the step off
+        # any non-finite loss surface (DESIGN.md §16)
+        ok = jnp.isfinite(f_try) & \
+            (f_try <= f0 - cfg.sigma * alpha * grad_sqnorm)
         return jnp.logical_and(~ok,
                                jnp.logical_and(n < cfg.max_backtracks,
                                                alpha > cfg.alpha_min))
@@ -131,7 +137,8 @@ def armijo_search(
     # matches [15] and the paper's cost claim; see DESIGN.md §7).
     init = (alpha_max, trial(alpha_max), jnp.int32(1))
     alpha, f_try, n = jax.lax.while_loop(cond, body, init)
-    accepted = f_try <= f0 - cfg.sigma * alpha * grad_sqnorm
+    accepted = jnp.isfinite(f_try) & \
+        (f_try <= f0 - cfg.sigma * alpha * grad_sqnorm)
     eta = cfg.scale_for(gamma) * alpha
     return ArmijoResult(alpha=alpha, eta=eta, f0=f0,
                         n_evals=n, accepted=accepted)

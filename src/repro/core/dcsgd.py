@@ -38,6 +38,7 @@ from typing import Any, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.comm import faults
 from repro.comm import wire as wire_fmt
 from repro.comm.bucket import (build_bucket_plan, decode_buckets,
                                encode_buckets)
@@ -172,7 +173,8 @@ def worker_compress_aggregate(
 
 
 def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
-                          dp_axes, use_fused, sent, resid, acc2):
+                          dp_axes, use_fused, sent, resid, acc2,
+                          verdict=None):
     """Post-gather per-leaf consumer — THE definition of the transport
     parity contract, shared by both schedules: the mean update, this
     worker's EF residual (own rows sliced from the gathered decode — no
@@ -180,11 +182,28 @@ def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
     decoded-side telemetry sums.
 
     Returns ``(upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq,
-    own_dot_g)``; masked-beyond-k_t entries are absent from the decoded
-    own rows, so — like quantization error and tie drops — they land in
-    the residual.
+    own_dot_g, quar_rows)``; masked-beyond-k_t entries are absent from
+    the decoded own rows, so — like quantization error and tie drops —
+    they land in the residual.
+
+    ``verdict`` ((W, L) bool, DESIGN.md §16): per-row decode validity.
+    Invalid rows arrive already quarantined (zero mass), so the mean's
+    denominator switches from W to the per-layer valid-row count — the
+    fed support-weighted division, bit-exact to ``/ W`` when every row
+    is valid — and an invalid OWN row freezes this leaf's EF residual
+    for the round (the payload never reached anyone intact; re-sending
+    the whole accumulator next round is the EF-correct response).
     """
-    mean_dense = _scatter_layers(g_vals, g_idx, L, d, jnp.float32) / W
+    total = _scatter_layers(g_vals, g_idx, L, d, jnp.float32)
+    if verdict is None:
+        mean_dense = total / W
+    else:
+        # the §13 support-weighted division without its 0/0 `where`:
+        # quarantined rows scatter zero mass, so an all-invalid layer has
+        # an all-zero total and /max(s,1) already answers 0 — one fewer
+        # (L, d) pass on the always-on clean path (1.05x bench gate)
+        n_valid = jnp.sum(verdict.astype(jnp.float32), axis=0)     # (L,)
+        mean_dense = total / jnp.maximum(n_valid[:, None], 1.0)
     wire_add = jnp.float32(L * spec.row_bytes)
     eff_add = (jnp.float32(L) * spec.effective_row_bytes(count)
                if spec.ragged else jnp.float32(L * spec.row_bytes))
@@ -197,11 +216,18 @@ def _consume_decoded_leaf(g, m, g2f, g_vals, g_idx, spec, L, d, count, W,
         r = resid + (sent - own_dense)
     else:
         r = acc2 - own_dense
+    quar = jnp.float32(0.0)
+    if verdict is not None:
+        own_ok = jax.lax.dynamic_index_in_dim(verdict, w_idx, 0,
+                                              keepdims=False)       # (L,)
+        m2f = m.astype(jnp.float32).reshape(L, d)
+        r = jnp.where(own_ok[:, None], r, m2f)
+        quar = jnp.float32(verdict.size) - jnp.sum(n_valid)
     # telemetry: the decoded-side sums touch only the k wire entries;
     # sum m'^2 fuses into the residual's own materialization above
     leaf_own_sq, leaf_dot = sparse_own_sums(own_vals, own_idx, g2f)
     return (mean_dense.reshape(g.shape), r.reshape(m.shape).astype(m.dtype),
-            wire_add, eff_add, jnp.sum(r * r), leaf_own_sq, leaf_dot)
+            wire_add, eff_add, jnp.sum(r * r), leaf_own_sq, leaf_dot, quar)
 
 
 @register_transport("perleaf", description=(
@@ -216,7 +242,7 @@ def _perleaf_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
     wire = jnp.float32(0.0)
     eff_wire = jnp.float32(0.0)
     sums = TelemetrySums.zero()
-    for g, m, stacked in zip(flat_g, flat_m, flat_s):
+    for leaf_i, (g, m, stacked) in enumerate(zip(flat_g, flat_m, flat_s)):
         g2 = _leaf_2d(g, stacked)
         L, d = g2.shape
         if comp.ships_dense(d):
@@ -269,23 +295,30 @@ def _perleaf_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
         check_payload(payload, spec, comp, d)
 
         all_pay = gather_packed(payload, dp_axes)        # (W, L, words)
-        g_vals, g_idx = wire_fmt.decode_rows(
-            all_pay.reshape(-1, spec.row_words), spec)
+        all_rows = faults.maybe_corrupt(
+            all_pay.reshape(-1, spec.row_words), spec, leaf_i, L)
+        g_vals, g_idx = wire_fmt.decode_rows(all_rows, spec)
+        verdict = None
+        if faults.guards_active():
+            verdict = wire_fmt.row_verdict(all_rows, spec, g_vals, g_idx)
+            g_vals, g_idx = wire_fmt.quarantine_rows(g_vals, g_idx,
+                                                     verdict)
+            verdict = verdict.reshape(W, L)
         g_vals = g_vals.reshape(W, L, spec.k)
         g_idx = g_idx.reshape(W, L, spec.k)
-        upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq, own_dot = \
-            _consume_decoded_leaf(
+        (upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq, own_dot,
+         quar) = _consume_decoded_leaf(
                 g, m, g2f, g_vals, g_idx, spec, L, d, count, W, dp_axes,
                 use_fused, sent if use_fused else None,
                 resid if use_fused else None,
-                None if use_fused else acc2)
+                None if use_fused else acc2, verdict=verdict)
         updates.append(upd)
         new_mem.append(mem_leaf)
         wire = wire + wire_add
         eff_wire = eff_wire + eff_add
         sums = sums.add(g_sq=leaf_g_sq, acc_sq=leaf_acc_sq,
                         resid_sq=resid_sq, own_sq=own_sq,
-                        own_dot_g=own_dot)
+                        own_dot_g=own_dot, quar_rows=quar)
 
     return updates, new_mem, wire, eff_wire, sums
 
@@ -326,11 +359,16 @@ def _bucketed_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
 
     # ---- ONE flat all_gather for every compressed leaf ------------------
     decoded = [None] * n
+    verdicts = [None] * n
     if plan.total_words:
         payload = encode_buckets(plan, sel.enc_rows)
         check_bucket_payload(payload, plan, comp)
         all_pay = gather_packed(payload, dp_axes)     # (W, total_words)
-        decoded = decode_buckets(plan, all_pay)
+        if faults.guards_active():
+            decoded, verdicts = decode_buckets(plan, all_pay,
+                                               with_verdicts=True)
+        else:
+            decoded = decode_buckets(plan, all_pay)
 
     # ---- ONE pmean folds every dense small leaf -------------------------
     dense_acc = [None] * n
@@ -369,17 +407,18 @@ def _bucketed_exchange(flat_g, flat_m, flat_s, eta, comp, dp_axes, gamma_t,
             continue
         spec, L, d = lane.spec, lane.L, lane.d
         g_vals, g_idx = decoded[i]
-        upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq, own_dot = \
-            _consume_decoded_leaf(
+        (upd, mem_leaf, wire_add, eff_add, resid_sq, own_sq, own_dot,
+         quar) = _consume_decoded_leaf(
                 g, m, g2f[i], g_vals, g_idx, spec, L, d, counts[i], W,
-                dp_axes, use_fused, sent[i], resid[i], acc2[i])
+                dp_axes, use_fused, sent[i], resid[i], acc2[i],
+                verdict=verdicts[i])
         updates.append(upd)
         new_mem.append(mem_leaf)
         wire = wire + wire_add
         eff_wire = eff_wire + eff_add
         sums = sums.add(g_sq=leaf_g_sq[i], acc_sq=leaf_acc_sq[i],
                         resid_sq=resid_sq, own_sq=own_sq,
-                        own_dot_g=own_dot)
+                        own_dot_g=own_dot, quar_rows=quar)
 
     return updates, new_mem, wire, eff_wire, sums
 

@@ -1,0 +1,117 @@
+"""Step-level health state and the divergence circuit breaker
+(DESIGN.md §16).
+
+The quarantine layer (comm/faults.py + wire.row_verdict) defends the
+*wire*; this module defends the *step*: a fused all-finite check over the
+round's updates and pmean'd loss gates the parameter write.  A failing
+check SKIPS the step — parameters, EF memory, velocity, gamma, and every
+carried transport state freeze bit-exactly while the step counter and
+telemetry advance — and consecutive skips beyond
+``OptimizerConfig.max_consecutive_skips`` raise :class:`DivergenceError`
+on the host, naming the last step that wrote parameters so a checkpoint
+rollback knows where to aim.
+
+The skip decision is computed from REPLICATED quantities only (the
+pmean'd loss plus the decoded-aggregate updates, which every worker
+derives from the same gathered payload), so gating adds ZERO collectives
+and the gated state stays replicated — the HLO-pinned faults-off
+guarantee.  On the gossip transport updates are per-worker by design;
+there the breaker couples through the pmean'd loss alone (a NaN loss on
+ANY worker poisons the mean, tripping a fleet-wide skip one round after
+a per-worker blowup at the latest).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+class DivergenceError(RuntimeError):
+    """Raised (host-side) when the consecutive-skip threshold trips."""
+
+    def __init__(self, step: int, last_good_step: int,
+                 consecutive: int, threshold: int):
+        self.step = int(step)
+        self.last_good_step = int(last_good_step)
+        self.consecutive = int(consecutive)
+        self.threshold = int(threshold)
+        super().__init__(
+            f"divergence at step {self.step}: {self.consecutive} "
+            f"consecutive non-finite steps skipped (threshold "
+            f"{self.threshold}); last good step was "
+            f"{self.last_good_step} — roll back to a checkpoint at or "
+            f"before it")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class HealthState:
+    """Per-worker step-health counters (``DistOptState.health``)."""
+
+    steps_skipped: jax.Array      # i32 — total gated-off steps
+    consecutive_skips: jax.Array  # i32 — current skip run length
+    last_good_step: jax.Array     # i32 — last step that wrote params (-1
+                                  #       before the first good step)
+    rows_quarantined: jax.Array   # f32 — cumulative §16 quarantined rows
+
+    @classmethod
+    def init(cls, batch_shape: tuple[int, ...] = (),
+             abstract: bool = False) -> "HealthState":
+        def leaf(v, dt):
+            if abstract:
+                return jax.ShapeDtypeStruct(batch_shape, dt)
+            return jnp.full(batch_shape, v, dt)
+        return cls(steps_skipped=leaf(0, jnp.int32),
+                   consecutive_skips=leaf(0, jnp.int32),
+                   last_good_step=leaf(-1, jnp.int32),
+                   rows_quarantined=leaf(0.0, jnp.float32))
+
+
+def all_finite(*trees) -> jax.Array:
+    """Scalar bool: every leaf of every tree is all-finite.  One fused
+    reduction chain, no collectives — operands are already replicated."""
+    ok = jnp.bool_(True)
+    for t in trees:
+        for leaf in jax.tree.leaves(t):
+            ok &= jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def advance_health(health: HealthState, step_ok: jax.Array, step,
+                   quarantined) -> HealthState:
+    """Next round's counters given this round's gate verdict.
+
+    ``step_ok``: scalar bool (True = parameters were written);
+    ``step``: the i32 round index that just ran; ``quarantined``: this
+    round's §16 row count.
+    """
+    skipped = jnp.where(step_ok, 0, 1).astype(jnp.int32)
+    return HealthState(
+        steps_skipped=health.steps_skipped + skipped,
+        consecutive_skips=jnp.where(step_ok, jnp.int32(0),
+                                    health.consecutive_skips + 1),
+        last_good_step=jnp.where(step_ok, jnp.asarray(step, jnp.int32),
+                                 health.last_good_step),
+        rows_quarantined=health.rows_quarantined
+        + jnp.asarray(quarantined, jnp.float32))
+
+
+def check_divergence(metrics, max_consecutive_skips: int) -> None:
+    """Host-side breaker: raise :class:`DivergenceError` when a metrics
+    dict (one logged step: ``consecutive_skips``, ``last_good_step``,
+    ``step``) shows the threshold tripped.  A no-op when the breaker is
+    disabled (``max_consecutive_skips <= 0``) or the keys are absent."""
+    if max_consecutive_skips <= 0:
+        return
+    consec = metrics.get("consecutive_skips")
+    if consec is None:
+        return
+    consec = int(consec)
+    if consec >= max_consecutive_skips:
+        raise DivergenceError(
+            step=int(metrics.get("step", -1)),
+            last_good_step=int(metrics.get("last_good_step", -1)),
+            consecutive=consec,
+            threshold=max_consecutive_skips)

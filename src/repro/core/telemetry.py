@@ -62,6 +62,8 @@ class CompressionTelemetry:
     cosine: jax.Array        # cos(decode(own), g)       (in [-1, 1])
     decode_error: jax.Array  # ||acc - decode(own)|| / ||acc||
     eff_gamma: jax.Array     # 1 - decode_error^2 (empirical contraction)
+    rows_quarantined: jax.Array = 0.0  # decoded rows failing the §16
+                                       # validity verdict this round
 
     @classmethod
     def init(cls, batch_shape: tuple[int, ...] = (), abstract: bool = False):
@@ -72,7 +74,8 @@ class CompressionTelemetry:
                 return jax.ShapeDtypeStruct(batch_shape, jnp.float32)
             return jnp.full(batch_shape, v, jnp.float32)
         return cls(ef_backlog=leaf(0.0), cosine=leaf(1.0),
-                   decode_error=leaf(0.0), eff_gamma=leaf(1.0))
+                   decode_error=leaf(0.0), eff_gamma=leaf(1.0),
+                   rows_quarantined=leaf(0.0))
 
     def pmean(self, axis_names) -> "CompressionTelemetry":
         """Mean over the mesh axes — the permutation-invariant aggregate
@@ -96,20 +99,23 @@ class TelemetrySums:
     resid_sq: jax.Array   # sum ||m'||^2       (the new EF memory)
     own_sq: jax.Array     # sum ||decode(own)||^2
     own_dot_g: jax.Array  # sum <decode(own), g>
+    quar_rows: jax.Array = 0.0  # gathered rows quarantined by the §16 verdict
 
     @classmethod
     def zero(cls) -> "TelemetrySums":
         z = jnp.float32(0.0)
-        return cls(g_sq=z, acc_sq=z, resid_sq=z, own_sq=z, own_dot_g=z)
+        return cls(g_sq=z, acc_sq=z, resid_sq=z, own_sq=z, own_dot_g=z,
+                   quar_rows=z)
 
     def add(self, *, g_sq, acc_sq, resid_sq, own_sq,
-            own_dot_g) -> "TelemetrySums":
+            own_dot_g, quar_rows=0.0) -> "TelemetrySums":
         return TelemetrySums(
             g_sq=self.g_sq + g_sq,
             acc_sq=self.acc_sq + acc_sq,
             resid_sq=self.resid_sq + resid_sq,
             own_sq=self.own_sq + own_sq,
-            own_dot_g=self.own_dot_g + own_dot_g)
+            own_dot_g=self.own_dot_g + own_dot_g,
+            quar_rows=self.quar_rows + quar_rows)
 
     def add_dense(self, acc: jax.Array, g: jax.Array) -> "TelemetrySums":
         """Contribution of an uncompressed (dense-shipped) leaf: decode ==
@@ -132,6 +138,7 @@ class TelemetrySums:
             cosine=cosine,
             decode_error=decode_err,
             eff_gamma=1.0 - resid_sq / (self.acc_sq + _TINY),
+            rows_quarantined=self.quar_rows,
         )
 
 

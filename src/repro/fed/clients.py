@@ -35,6 +35,7 @@ from typing import Any, NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.comm import faults
 from repro.comm.bucket import (build_bucket_plan, decode_buckets,
                                encode_buckets)
 from repro.comm.exchange import check_bucket_payload, gather_packed
@@ -130,6 +131,7 @@ def cohort_compress_aggregate(
     stacked_mask: PyTree | None = None,
     aggregation: str = "support",
     impl: str | None = None,
+    return_quarantined: bool = False,
 ) -> tuple:
     """The cohort round: per-client select/encode under ``vmap``, ONE
     gather of every client's payload, support-weighted decode.
@@ -153,6 +155,15 @@ def cohort_compress_aggregate(
     participants transmit, so it is ``n_participants *``
     :func:`per_client_wire_bytes`; ``effective_wire_bytes`` is the
     participant sum of per-client §9 ragged byte costs.
+
+    Decoded rows pass the §16 validity verdict (quarantined rows carry
+    zero mass, so the nonzero-support division excludes them
+    automatically; under ``aggregation="mean"`` they degrade toward zero
+    instead), and a client whose OWN row was quarantined keeps its EF
+    memory frozen for the round exactly like a non-participant — the
+    payload never reached the cohort intact.  With
+    ``return_quarantined`` a fifth element is appended: this worker's
+    f32 count of quarantined gathered rows this round.
     """
     validate_aggregation(aggregation)
     # vmap-safe selection: see module docstring
@@ -214,6 +225,7 @@ def cohort_compress_aggregate(
 
     # ---- ONE gather: the whole cohort's payload block -------------------
     decoded = [None] * n
+    verdicts = [None] * n
     if plan.total_words:
         check_bucket_payload(payload_c[0], plan, comp)
         if dp_axes is None:
@@ -221,7 +233,11 @@ def cohort_compress_aggregate(
         else:
             all_pay = gather_packed(payload_c, dp_axes).reshape(
                 N, plan.total_words)
-        decoded = decode_buckets(plan, all_pay, impl=impl)
+        if faults.guards_active():
+            decoded, verdicts = decode_buckets(plan, all_pay, impl=impl,
+                                               with_verdicts=True)
+        else:
+            decoded = decode_buckets(plan, all_pay, impl=impl)
 
     w_idx = dp_index(dp_axes) if dp_axes is not None else 0
 
@@ -254,6 +270,7 @@ def cohort_compress_aggregate(
         off += size
 
     # ---- compressed leaves: support-weighted aggregate + per-client EF --
+    quar = jnp.float32(0.0)
     for lane in lanes:
         if lane.dense:
             continue
@@ -270,9 +287,18 @@ def cohort_compress_aggregate(
             own_vals, own_idx)                           # (C, L, d)
         m3 = flat_m[i].astype(jnp.float32).reshape(C, L, d)
         keep = pl.reshape(C, 1, 1) > 0.0
+        if verdicts[i] is not None:
+            # a quarantined own row freezes that client's EF for the
+            # round, like a non-participant (§16)
+            own_ok = jax.lax.dynamic_slice_in_dim(
+                verdicts[i], w_idx * C, C, 0)            # (C, L)
+            keep = keep & own_ok[:, :, None]
+            quar = quar + jnp.sum(
+                1.0 - verdicts[i].astype(jnp.float32))
         r = jnp.where(keep, acc_c[i] - own_dense, m3)
         new_mem[i] = r.reshape(flat_m[i].shape).astype(flat_m[i].dtype)
 
     wire = n_part * jnp.float32(per_client_wire_bytes(plan))
-    return (treedef.unflatten(updates), treedef.unflatten(new_mem),
-            wire, eff_wire)
+    out = (treedef.unflatten(updates), treedef.unflatten(new_mem),
+           wire, eff_wire)
+    return out + (quar,) if return_quarantined else out

@@ -28,6 +28,7 @@ import jax
 from repro.compat import set_mesh
 import jax.numpy as jnp
 
+from repro.comm.faults import FaultConfig
 from repro.comm.gossip import GossipConfig
 from repro.comm.overlap import OverlapConfig
 from repro.comm.topology import TOPOLOGIES
@@ -267,7 +268,7 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
                     local_steps=1, transport="bucketed", topology="ring",
                     n_clients=0, aggregation="support",
                     overlap_chunks=1, overlap_delay=1,
-                    downlink="dense", downlink_gamma=0.0):
+                    downlink="dense", downlink_gamma=0.0, faults=None):
     if microbatches is None:
         microbatches = 4 if shape.kind == "train" else 1
     if n_clients:
@@ -291,7 +292,8 @@ def make_run_config(cfg, shape, opt_kind="csgd_asss", gamma=0.01,
             federated=FederatedConfig(n_clients=n_clients,
                                       aggregation=aggregation),
             downlink=downlink,
-            downlink_gamma=GammaControllerConfig(gamma0=downlink_gamma)),
+            downlink_gamma=GammaControllerConfig(gamma0=downlink_gamma),
+            faults=faults if faults is not None else FaultConfig()),
         microbatches=microbatches)
 
 
@@ -337,7 +339,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               n_clients: int = 0, aggregation: str = "support",
               overlap_chunks: int = 1, overlap_delay: int = 1,
               downlink: str = "dense", downlink_gamma: float = 0.0,
-              keep_hlo: bool = False) -> dict:
+              faults=None, keep_hlo: bool = False) -> dict:
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "opt": opt_kind if shape_name == "train_4k" else "-",
@@ -378,7 +380,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                           local_steps, transport, topology,
                           n_clients, aggregation,
                           overlap_chunks, overlap_delay,
-                          downlink, downlink_gamma)
+                          downlink, downlink_gamma, faults)
     n_chips = mesh.size
 
     with set_mesh(mesh):
@@ -525,6 +527,21 @@ def main() -> None:
                          "block (no collective — it is simulated)")
     ap.add_argument("--downlink-gamma", type=float, default=0.0,
                     help="downlink compression level (0 = uplink gamma)")
+    # ---- hostile-wire robustness (DESIGN.md §16) ----
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--fault-bitflip", type=float, default=0.0,
+                    help="per-row wire bit-flip probability — lowers the "
+                         "train step through the 'faulty' transport wrapper "
+                         "so the injected-HLO collective schedule can be "
+                         "audited")
+    ap.add_argument("--fault-count", type=float, default=0.0,
+                    help="per-row corrupt ragged-count probability")
+    ap.add_argument("--fault-nonfinite", type=float, default=0.0,
+                    help="per-row NaN/Inf scale-or-value probability")
+    ap.add_argument("--fault-zero-row", type=float, default=0.0,
+                    help="per-row whole-row zeroing probability")
+    ap.add_argument("--fault-worker", type=int, default=-1,
+                    help="gathered row-slot to target (-1 = all)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -559,7 +576,14 @@ def main() -> None:
                             overlap_chunks=args.overlap_chunks,
                             overlap_delay=args.overlap_delay,
                             downlink=args.downlink,
-                            downlink_gamma=args.downlink_gamma)
+                            downlink_gamma=args.downlink_gamma,
+                            faults=FaultConfig(
+                                seed=args.fault_seed,
+                                p_bitflip=args.fault_bitflip,
+                                p_count=args.fault_count,
+                                p_nonfinite=args.fault_nonfinite,
+                                p_zero_row=args.fault_zero_row,
+                                worker=args.fault_worker))
         except Exception as e:  # record failures — they are bugs to fix
             rec = {"arch": arch, "shape": shape, "status": "FAIL",
                    "error": f"{type(e).__name__}: {e}",

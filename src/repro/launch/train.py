@@ -24,6 +24,7 @@ from repro.compat import set_mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.checkpoint import checkpoint as ckpt
+from repro.comm.faults import FaultConfig
 from repro.comm.gossip import GossipConfig
 from repro.comm.overlap import OverlapConfig
 from repro.comm.topology import TOPOLOGIES
@@ -34,6 +35,7 @@ from repro.configs.base import (FederatedConfig, OptimizerConfig, RunConfig,
 from repro.core.armijo import ArmijoConfig
 from repro.core.compression import Compressor
 from repro.core.gamma import GammaControllerConfig
+from repro.core.health import check_divergence
 from repro.data.synthetic import TokenPipeline
 from repro.fed.sampling import participation_mask
 from repro.launch.train_step import (build_train_step, init_opt_state,
@@ -187,6 +189,39 @@ def main() -> None:
                          "Dirichlet(alpha) unigram tilt (data/synthetic.py)")
     ap.add_argument("--fed-seed", type=int, default=0,
                     help="seed for participation sampling + client shards")
+    # ---- hostile-wire robustness (DESIGN.md §16) ----
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the (seed, step, worker)-deterministic "
+                         "fault-injection stream")
+    ap.add_argument("--fault-bitflip", type=float, default=0.0,
+                    help="per-row probability of flipping one random wire "
+                         "bit in the gathered payload")
+    ap.add_argument("--fault-count", type=float, default=0.0,
+                    help="per-row probability of a truncated/overflowed "
+                         "ragged count header")
+    ap.add_argument("--fault-nonfinite", type=float, default=0.0,
+                    help="per-row probability of a NaN/Inf scale or value "
+                         "field")
+    ap.add_argument("--fault-zero-row", type=float, default=0.0,
+                    help="per-row probability of zeroing the whole row "
+                         "(dropped-worker model: decodes as a VALID empty "
+                         "contribution)")
+    ap.add_argument("--fault-worker", type=int, default=-1,
+                    help="gathered row-slot to target (-1 = all workers)")
+    ap.add_argument("--fault-start-step", type=int, default=0,
+                    help="first step of the fault burst")
+    ap.add_argument("--fault-steps", type=int, default=-1,
+                    help="burst length in steps (-1 = open-ended)")
+    ap.add_argument("--no-quarantine", action="store_true",
+                    help="disable the defensive decode verdicts (corrupt "
+                         "rows flow into the mean; the step-level breaker "
+                         "is the only remaining defense)")
+    ap.add_argument("--max-consecutive-skips", type=int,
+                    default=OptimizerConfig.max_consecutive_skips,
+                    help="step-level circuit breaker: this many consecutive "
+                         "non-finite (skipped) rounds raise "
+                         "DivergenceError naming the last good step "
+                         "(0 disables the gate)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -237,7 +272,17 @@ def main() -> None:
             downlink=args.downlink,
             downlink_gamma=GammaControllerConfig(
                 schedule=args.downlink_gamma_schedule,
-                gamma0=args.downlink_gamma)),
+                gamma0=args.downlink_gamma),
+            faults=FaultConfig(seed=args.fault_seed,
+                               p_bitflip=args.fault_bitflip,
+                               p_count=args.fault_count,
+                               p_nonfinite=args.fault_nonfinite,
+                               p_zero_row=args.fault_zero_row,
+                               worker=args.fault_worker,
+                               start_step=args.fault_start_step,
+                               n_steps=args.fault_steps,
+                               quarantine=not args.no_quarantine),
+            max_consecutive_skips=args.max_consecutive_skips),
         microbatches=args.microbatches)
 
     with set_mesh(mesh):
@@ -306,6 +351,14 @@ def main() -> None:
                 step_fn = step_fn.lower(params, opt_state, batch).compile()
                 print(f"compiled train_step in {time.time()-t0:.1f}s")
             params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if run.optimizer.max_consecutive_skips > 0:
+                # host-side breaker: DivergenceError is a typed Python
+                # exception, impossible to raise from inside jit
+                check_divergence(
+                    {"step": step,
+                     "consecutive_skips": metrics["consecutive_skips"],
+                     "last_good_step": metrics["last_good_step"]},
+                    run.optimizer.max_consecutive_skips)
             if step % args.log_every == 0 or step == args.steps - 1:
                 m = {k: float(v) for k, v in metrics.items()}
                 m["step"] = step
@@ -321,7 +374,12 @@ def main() -> None:
                       f"cum={m.get('cum_effective_wire_bytes', 0.0):.3e}B "
                       f"gamma={m.get('gamma', args.gamma):.4g} "
                       f"backlog={m.get('ef_backlog', 0.0):.3g} "
-                      f"cos={m.get('ef_cosine', 1.0):.3f}", flush=True)
+                      f"cos={m.get('ef_cosine', 1.0):.3f}"
+                      + (f" skips={m['steps_skipped']:.0f}"
+                         f" quar={m['rows_quarantined']:.0f}"
+                         if m.get("steps_skipped", 0.0)
+                         or m.get("rows_quarantined", 0.0) else ""),
+                      flush=True)
             if args.ckpt_dir and step and step % args.ckpt_every == 0:
                 ckpt.save(args.ckpt_dir, step, (params, opt_state),
                           metadata={"step": step})

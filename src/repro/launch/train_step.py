@@ -30,6 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import compat
 from repro.comm.downlink import (DownlinkCtx, DownlinkState,
                                  init_downlink_state)
+from repro.comm.faults import FaultCtx, active_faults
 from repro.comm.gossip import GossipCtx, GossipState
 from repro.comm.overlap import OverlapCtx, OverlapState, init_overlap_state
 from repro.comm.topology import build_topology
@@ -37,6 +38,7 @@ from repro.configs.base import RunConfig, ShapeConfig
 from repro.core.armijo import armijo_search, next_alpha_max, tree_sqnorm
 from repro.core.dcsgd import dense_aggregate, worker_compress_aggregate
 from repro.core.gamma import gamma_init, gamma_update
+from repro.core.health import HealthState, advance_health, all_finite
 from repro.core.telemetry import CompressionTelemetry, SearchTelemetry
 from repro.fed.clients import (ClientState, cohort_compress_aggregate,
                                init_client_state, local_participation)
@@ -77,6 +79,9 @@ class DistOptState(NamedTuple):
                              # (leaves (W, ...): replicated server EF/gamma)
     velocity: Any = ()       # Nesterov buffers under kind="acgd"
                              # (per-worker leaves (W, *param_shape) f32)
+    health: Any = ()         # HealthState: (W,) step-skip / quarantine
+                             # counters (DESIGN.md §16) — always present
+                             # for new states; () only in legacy pytrees
 
 
 def _n_workers(mesh) -> int:
@@ -171,6 +176,7 @@ def init_opt_state(params: PyTree, run_cfg: RunConfig, n_workers: int,
                        jnp.zeros((n_workers,) + tuple(p.shape),
                                  jnp.float32)),
             params) if needs_vel else ()),
+        health=HealthState.init((n_workers,), abstract=abstract),
     )
 
 
@@ -220,6 +226,7 @@ def opt_state_shardings(opt_state: DistOptState, params: PyTree, mesh,
         velocity=(jax.tree.map(
             lambda ps: compat.named_sharding(mesh, P(dp_spec, *ps)), pspecs)
             if opt_state.velocity != () else ()),
+        health=jax.tree.map(lambda _: vec, opt_state.health),
     )
 
 
@@ -252,6 +259,20 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
 
     compressing = opt.kind in ("csgd_asss", "nonadaptive", "acgd")
     acgd_mode = opt.kind == "acgd"
+    # hostile-wire robustness (DESIGN.md §16).  faults×downlink,
+    # faults×shard_local_topk and faults×dense are rejected by
+    # OptimizerConfig.__post_init__ before we ever get here.
+    faults_on = opt.faults.enabled
+    breaker_on = opt.max_consecutive_skips > 0
+
+    def wrap_faults(t_name, t_ctx, step):
+        """Route the exchange through the 'faulty' wrapper transport when
+        a fault campaign is configured — the wrapper corrupts the gathered
+        payload rows, then runs the inner transport unchanged."""
+        if not faults_on:
+            return t_name, t_ctx
+        return "faulty", FaultCtx(cfg=opt.faults, step=step,
+                                  inner=t_name, inner_ctx=t_ctx)
     if acgd_mode and opt.local_steps > 1:
         raise ValueError(
             "kind='acgd' does not compose with local_steps > 1 — the "
@@ -405,12 +426,21 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             ctx = OverlapCtx(
                 cfg=opt.overlap,
                 state=jax.tree.map(lambda x: x[0], opt_state.overlap))
+            t_name, t_ctx = wrap_faults(opt.transport, ctx, opt_state.step)
             updates, new_mem, wire, eff_wire, tel, ov_state = \
                 worker_compress_aggregate(
                     delta, mem, jnp.float32(1.0), opt.compressor, dp,
                     stacked_mask=smask, gamma_t=gamma_t,
-                    transport=opt.transport, transport_ctx=ctx)
+                    transport=t_name, transport_ctx=t_ctx)
             new_overlap = jax.tree.map(lambda x: x[None], ov_state)
+        elif faults_on:
+            t_name, t_ctx = wrap_faults(opt.transport, None, opt_state.step)
+            updates, new_mem, wire, eff_wire, tel, _ = \
+                worker_compress_aggregate(
+                    delta, mem, jnp.float32(1.0), opt.compressor, dp,
+                    stacked_mask=smask, gamma_t=gamma_t,
+                    transport=t_name, transport_ctx=t_ctx)
+            new_overlap = opt_state.overlap
         else:
             updates, new_mem, wire, eff_wire, tel = \
                 worker_compress_aggregate(
@@ -438,6 +468,23 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             metrics["staleness"] = jax.lax.pmean(
                 jnp.float32(opt.overlap.delay)
                 * opt_state.overlap.seeded[0], dp)
+
+        # ---- step-level circuit breaker (DESIGN.md §16) -----------------
+        health = jax.tree.map(lambda x: x[0], opt_state.health)
+        step_ok = jnp.isfinite(metrics["loss"]) & all_finite(updates)
+        if breaker_on:
+            new_params = jax.tree.map(
+                lambda a, b: jnp.where(step_ok, a, b), new_params, params)
+        new_health = advance_health(health, step_ok, opt_state.step,
+                                    tel.rows_quarantined)
+        metrics["steps_skipped"] = \
+            new_health.steps_skipped.astype(jnp.float32)
+        metrics["consecutive_skips"] = \
+            new_health.consecutive_skips.astype(jnp.float32)
+        metrics["last_good_step"] = \
+            new_health.last_good_step.astype(jnp.float32)
+        metrics["rows_quarantined"] = new_health.rows_quarantined
+
         new_state = DistOptState(
             step=opt_state.step + 1,
             alpha_prev=(amax_f / opt.armijo.omega)[None],
@@ -447,7 +494,18 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             telemetry=jax.tree.map(lambda x: x[None], tel),
             cum_eff_bytes=cum_eff,
             overlap=new_overlap,
+            health=jax.tree.map(lambda x: x[None], new_health),
         )
+        if breaker_on:
+            frozen = new_state._replace(
+                alpha_prev=opt_state.alpha_prev,
+                memory=opt_state.memory,
+                n_evals_ema=opt_state.n_evals_ema,
+                gamma=opt_state.gamma,
+                telemetry=opt_state.telemetry,
+                overlap=opt_state.overlap)
+            new_state = jax.tree.map(
+                lambda a, b: jnp.where(step_ok, a, b), new_state, frozen)
         return new_params, new_state, metrics
 
     def _federated_worker(params, opt_state, batch):
@@ -513,12 +571,38 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
 
         # ---- the cohort exchange: ONE gather + ONE psum -----------------
         smask = model.stacked_mask(params)
-        updates, new_mem, wire, eff_wire = cohort_compress_aggregate(
-            grads_c, fedst.memory, eta_c, opt.compressor, dp, mask,
-            gamma_used, stacked_mask=smask, aggregation=fed.aggregation)
+        if faults_on:
+            with active_faults(opt.faults, opt_state.step):
+                updates, new_mem, wire, eff_wire, quar = \
+                    cohort_compress_aggregate(
+                        grads_c, fedst.memory, eta_c, opt.compressor, dp,
+                        mask, gamma_used, stacked_mask=smask,
+                        aggregation=fed.aggregation,
+                        return_quarantined=True)
+        else:
+            updates, new_mem, wire, eff_wire, quar = \
+                cohort_compress_aggregate(
+                    grads_c, fedst.memory, eta_c, opt.compressor, dp, mask,
+                    gamma_used, stacked_mask=smask,
+                    aggregation=fed.aggregation, return_quarantined=True)
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
+
+        # ---- step-level circuit breaker (DESIGN.md §16) -----------------
+        health = jax.tree.map(lambda x: x[0], opt_state.health)
+        step_ok = jnp.isfinite(metrics["loss"]) & all_finite(updates)
+        if breaker_on:
+            new_params = jax.tree.map(
+                lambda a, b: jnp.where(step_ok, a, b), new_params, params)
+        new_health = advance_health(health, step_ok, opt_state.step, quar)
+        metrics["steps_skipped"] = \
+            new_health.steps_skipped.astype(jnp.float32)
+        metrics["consecutive_skips"] = \
+            new_health.consecutive_skips.astype(jnp.float32)
+        metrics["last_good_step"] = \
+            new_health.last_good_step.astype(jnp.float32)
+        metrics["rows_quarantined"] = new_health.rows_quarantined
 
         # wire/eff are cohort-global already (mask-weighted + psum'd)
         cum_eff = opt_state.cum_eff_bytes + eff_wire
@@ -543,7 +627,12 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                 gamma=jnp.where(pl > 0, gamma_t_c, fedst.gamma),
                 rounds=fedst.rounds + (pl > 0).astype(jnp.int32),
                 alpha=jnp.where(pl > 0, alpha_c, fedst.alpha)),
+            health=jax.tree.map(lambda x: x[None], new_health),
         )
+        if breaker_on:
+            frozen = new_state._replace(fed=opt_state.fed)
+            new_state = jax.tree.map(
+                lambda a, b: jnp.where(step_ok, a, b), new_state, frozen)
         return new_params, new_state, metrics
 
     def worker_fn(params, opt_state, batch):
@@ -676,20 +765,24 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                     topology=topo, cfg=opt.gossip,
                     state=jax.tree.map(lambda x: x[0],
                                        opt_state.gossip.state))
+                t_name, t_ctx = wrap_faults(opt.transport, ctx,
+                                            opt_state.step)
                 updates, new_mem, wire, eff_wire, tel, gos_state = \
                     worker_compress_aggregate(
                         send, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
-                        transport=opt.transport, transport_ctx=ctx)
+                        transport=t_name, transport_ctx=t_ctx)
             elif overlap_mode:
                 ctx = OverlapCtx(
                     cfg=opt.overlap,
                     state=jax.tree.map(lambda x: x[0], opt_state.overlap))
+                t_name, t_ctx = wrap_faults(opt.transport, ctx,
+                                            opt_state.step)
                 updates, new_mem, wire, eff_wire, tel, ov_state = \
                     worker_compress_aggregate(
                         send, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
-                        transport=opt.transport, transport_ctx=ctx)
+                        transport=t_name, transport_ctx=t_ctx)
             elif downlink_mode:
                 # server round (DESIGN.md §15): advance the downlink gamma
                 # schedule, then re-compress the replicated aggregate
@@ -705,6 +798,17 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
                         send, mem, eta, opt.compressor, dp,
                         stacked_mask=smask, gamma_t=gamma_t,
                         transport=opt.transport, downlink_ctx=ctx)
+            elif faults_on:
+                # stateless inner (perleaf | bucketed) wrapped by the
+                # stateful 'faulty' transport: the SIXTH element is the
+                # wrapper's carried state, always () for a stateless inner
+                t_name, t_ctx = wrap_faults(opt.transport, None,
+                                            opt_state.step)
+                updates, new_mem, wire, eff_wire, tel, _ = \
+                    worker_compress_aggregate(
+                        send, mem, eta, opt.compressor, dp,
+                        stacked_mask=smask, gamma_t=gamma_t,
+                        transport=t_name, transport_ctx=t_ctx)
             else:
                 # covers shard_local_topk on 0.4.x too: there the training
                 # body is already manual over 'model' (compat.
@@ -749,6 +853,37 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) - u).astype(p.dtype),
             params, updates)
+
+        # ---- step-level circuit breaker (DESIGN.md §16) -----------------
+        health = jax.tree.map(lambda x: x[0], opt_state.health)
+        step_ok = jnp.isfinite(metrics["loss"])
+        if not gossip_mode:
+            # the decoded aggregate is replicated (every worker decodes
+            # the same gathered payload), so the update check adds no
+            # collective; under gossip updates are per-worker by design
+            # and the breaker couples through the pmean'd loss alone — a
+            # NaN anywhere poisons the mean within one round
+            step_ok &= all_finite(updates)
+        if breaker_on:
+            new_params = jax.tree.map(
+                lambda a, b: jnp.where(step_ok, a, b), new_params, params)
+        quar_round = tel.rows_quarantined if compressing \
+            else jnp.float32(0.0)
+        new_health = advance_health(health, step_ok, opt_state.step,
+                                    quar_round)
+        metrics["steps_skipped"] = \
+            new_health.steps_skipped.astype(jnp.float32)
+        metrics["consecutive_skips"] = \
+            new_health.consecutive_skips.astype(jnp.float32)
+        metrics["last_good_step"] = \
+            new_health.last_good_step.astype(jnp.float32)
+        quar_metric = new_health.rows_quarantined
+        if gossip_mode:
+            # per-worker under gossip (each worker verdicts its own
+            # neighbor gather) — pmean'd for the replicated metric slot
+            quar_metric = jax.lax.pmean(quar_metric, dp)
+        metrics["rows_quarantined"] = quar_metric
+
         if gossip_mode:
             # the per-worker model advances in DistOptState.gossip; the
             # replicated params output stays the frozen initialization
@@ -782,7 +917,25 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             overlap=new_overlap,
             downlink=new_downlink,
             velocity=new_velocity,
+            health=jax.tree.map(lambda x: x[None], new_health),
         )
+        if breaker_on:
+            # skip-step: step/cum_eff/health advance; every carried
+            # optimizer quantity freezes bit-exactly (jnp.where with a
+            # replicated scalar predicate — zero collectives, and the
+            # taken branch is bit-identical to the unconditional write)
+            frozen = new_state._replace(
+                alpha_prev=opt_state.alpha_prev,
+                memory=opt_state.memory,
+                n_evals_ema=opt_state.n_evals_ema,
+                gamma=opt_state.gamma,
+                telemetry=opt_state.telemetry,
+                gossip=opt_state.gossip,
+                overlap=opt_state.overlap,
+                downlink=opt_state.downlink,
+                velocity=opt_state.velocity)
+            new_state = jax.tree.map(
+                lambda a, b: jnp.where(step_ok, a, b), new_state, frozen)
         return new_params, new_state, metrics
 
     # ---- specs ------------------------------------------------------------
@@ -820,11 +973,15 @@ def build_train_step(model: Model, run_cfg: RunConfig, mesh):
             downlink=(DownlinkState(memory=lead, gamma=lead)
                       if downlink_mode and not fed_mode else ()),
             velocity=(jax.tree.map(lambda _: lead, params_like)
-                      if acgd_mode and not fed_mode else ()))
+                      if acgd_mode and not fed_mode else ()),
+            health=HealthState(steps_skipped=lead, consecutive_skips=lead,
+                               last_good_step=lead, rows_quarantined=lead))
         metric_keys = ("loss", "grad_sqnorm", "alpha", "n_evals",
                        "wire_bytes", "effective_wire_bytes",
                        "cum_effective_wire_bytes", "ef_backlog",
-                       "ef_cosine", "gamma") + \
+                       "ef_cosine", "gamma",
+                       "steps_skipped", "consecutive_skips",
+                       "last_good_step", "rows_quarantined") + \
             (("participants",) if fed_mode else ()) + \
             (("staleness",) if overlap_mode else ()) + \
             (("downlink_wire_bytes", "downlink_effective_wire_bytes")

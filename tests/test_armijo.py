@@ -114,6 +114,42 @@ def test_max_backtracks_cap():
     assert not bool(res.accepted)
 
 
+@pytest.mark.parametrize("bad", [jnp.nan, -jnp.inf])
+def test_nonfinite_candidate_loss_is_rejected(bad):
+    """DESIGN.md §16 regression: a candidate whose loss is NaN/-Inf is a
+    REJECTED trial.  Without the isfinite guard a -Inf f_try satisfies
+    the sufficient-decrease inequality and the search would 'accept' a
+    step onto a blown-up loss surface; the search must instead backtrack
+    into the finite region and accept there."""
+    w = jnp.ones((4,)) * 0.1
+    g = jax.grad(quad_loss)(w)
+    f0 = quad_loss(w)
+
+    def cliff(v):
+        # finite quadratic near w, non-finite once the candidate moves
+        # beyond ~70% of the start norm (i.e. any alpha outside
+        # (0.3, 1.7) for cand = (1-alpha) * w)
+        return jnp.where(jnp.sum(v ** 2) > 0.5 * jnp.sum(w ** 2),
+                         bad, quad_loss(v))
+
+    cfg = ArmijoConfig(sigma=0.1, rho=0.5, max_backtracks=40)
+    res = armijo_search(cliff, w, g, jnp.float32(64.0), cfg, f0=f0)
+    assert bool(res.accepted)
+    assert jnp.isfinite(res.alpha)
+    # accepted inside the finite region: 64 * 0.5^k first lands there at 1
+    assert float(res.alpha) <= 1.7
+    assert bool(jnp.isfinite(cliff(w - res.alpha * g)))
+
+
+def test_everywhere_nonfinite_loss_never_accepts():
+    cfg = ArmijoConfig(max_backtracks=5)
+    w = jnp.ones((4,))
+    g = jnp.ones((4,))
+    res = armijo_search(lambda v: jnp.sum(v) * jnp.nan, w, g,
+                        jnp.float32(1.0), cfg, f0=jnp.float32(1.0))
+    assert not bool(res.accepted)
+
+
 def test_theory_safe_clamps_scale_to_zeta():
     """The a_scale doc/theory contradiction (paper §IV-A: a = 3*sigma, but
     theory needs a <= zeta(gamma) = sigma*gamma/(2-gamma) < 2*sigma):

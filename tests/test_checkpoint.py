@@ -132,3 +132,105 @@ def test_restore_rejects_mismatched_skeleton(tmp_path, key):
     plain = init_opt_state(params, _run_cfg(), W, abstract=True)
     with pytest.raises(AssertionError):
         ckpt.restore(d, plain)
+
+
+# ---------------------------------------------------------------------------
+# crash-safety: torn writes, truncated files, fallback (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+import logging  # noqa: E402
+import os  # noqa: E402
+
+
+def _two_committed(tmp_path, key):
+    state = _fill_unique(init_opt_state(_params(key), _run_cfg(), W))
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, state, metadata={"tag": "one"})
+    ckpt.save(d, 2, state, metadata={"tag": "two"})
+    return d, state
+
+
+def _truncate(d, step, name="arrays.npz"):
+    p = os.path.join(d, f"step_{step:010d}", name)
+    with open(p, "rb") as f:
+        blob = f.read()
+    with open(p, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+
+
+def test_restore_falls_back_on_truncated_npz(tmp_path, key, caplog):
+    """A torn arrays.npz in the newest checkpoint must not strand the
+    run: restore(step=None) warns and answers with the older step."""
+    d, state = _two_committed(tmp_path, key)
+    _truncate(d, 2)
+    with caplog.at_level(logging.WARNING,
+                         logger="repro.checkpoint.checkpoint"):
+        restored, meta = ckpt.restore(d, state)
+    assert meta["tag"] == "one"
+    assert any("step_0000000002" in r.message and "corrupt" in r.message
+               for r in caplog.records)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_falls_back_on_garbage_manifest(tmp_path, key):
+    d, state = _two_committed(tmp_path, key)
+    with open(os.path.join(d, "step_0000000002", "manifest.json"),
+              "w") as f:
+        f.write("{not json")
+    _, meta = ckpt.restore(d, state)
+    assert meta["tag"] == "one"
+
+
+def test_restore_falls_back_on_missing_file(tmp_path, key):
+    d, state = _two_committed(tmp_path, key)
+    os.remove(os.path.join(d, "step_0000000002", "arrays.npz"))
+    _, meta = ckpt.restore(d, state)
+    assert meta["tag"] == "one"
+
+
+def test_restore_explicit_step_raises_on_corruption(tmp_path, key):
+    """An explicitly requested step must raise, never silently answer
+    with a different step's data."""
+    d, state = _two_committed(tmp_path, key)
+    _truncate(d, 2)
+    with pytest.raises(ckpt.CORRUPTION_ERRORS):
+        ckpt.restore(d, state, step=2)
+    _, meta = ckpt.restore(d, state, step=1)    # the good one still loads
+    assert meta["tag"] == "one"
+
+
+def test_restore_every_step_corrupt_raises(tmp_path, key):
+    d, state = _two_committed(tmp_path, key)
+    _truncate(d, 1)
+    _truncate(d, 2)
+    with pytest.raises(FileNotFoundError, match="corrupt"):
+        ckpt.restore(d, state)
+
+
+def test_discovery_ignores_uncommitted_and_tmp_dirs(tmp_path, key):
+    """A crash mid-save leaves a .tmp dir (even one with a COMMITTED
+    marker inside) or a dir without the marker — both invisible."""
+    d, state = _two_committed(tmp_path, key)
+    torn = os.path.join(d, "step_0000000005.tmp")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "COMMITTED"), "w") as f:
+        f.write("ok")
+    os.makedirs(os.path.join(d, "step_0000000006"))
+    assert ckpt.all_steps(d) == [1, 2]
+    assert ckpt.latest_step(d) == 2
+    _, meta = ckpt.restore(d, state)
+    assert meta["tag"] == "two"
+
+
+def test_resave_same_step_is_atomic(tmp_path, key):
+    """Overwriting an existing step keeps a committed copy discoverable
+    throughout and leaves no .old/.tmp debris."""
+    d, state = _two_committed(tmp_path, key)
+    ckpt.save(d, 2, state, metadata={"tag": "two-redux"})
+    assert ckpt.all_steps(d) == [1, 2]
+    _, meta = ckpt.restore(d, state)
+    assert meta["tag"] == "two-redux"
+    leftovers = [n for n in os.listdir(d)
+                 if n.endswith(".tmp") or n.endswith(".old")]
+    assert leftovers == []

@@ -708,6 +708,47 @@ def test_zero_participation_raises_property(seed, n):
     assert np.all(dropped <= full)   # stragglers are a subset
 
 
+# ---------------------------------------------------------------------------
+# hostile-wire fuzz (DESIGN.md §16) — bodies live in tests/wire_fuzz.py so
+# the fixed-seed tier in tests/test_faults.py drives the SAME invariants on
+# images without the hypothesis dev extra
+# ---------------------------------------------------------------------------
+
+from wire_fuzz import (check_garbage_bucket_decode_safe,      # noqa: E402
+                       check_garbage_rows_decode_safe,
+                       check_honest_rows_verdict_clean)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(64, 2048),
+       st.sampled_from([64, 256, 1024]), st.sampled_from([4, 8, 16, 32]),
+       st.booleans(), st.sampled_from(["block_topk", "topk"]))
+def test_garbage_rows_decode_safe_property(seed, d, block, value_bits,
+                                           adaptive, method):
+    """Arbitrary uint32 garbage rows: decode never indexes out of bounds,
+    nothing non-finite survives the verdict layer, the verdict is always
+    a well-defined bool."""
+    check_garbage_rows_decode_safe(seed, d, block, value_bits, adaptive,
+                                   method)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(64, 2048),
+       st.sampled_from([64, 256, 1024]), st.sampled_from([4, 8, 16, 32]),
+       st.booleans(), st.sampled_from(["block_topk", "topk"]))
+def test_honest_rows_verdict_clean_property(seed, d, block, value_bits,
+                                            adaptive, method):
+    """Honest encodes are verdict-True everywhere; quarantine is a
+    bit-exact pass-through on them (the faults-off guarantee)."""
+    check_honest_rows_verdict_clean(seed, d, block, value_bits, adaptive,
+                                    method)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([4, 8, 16, 32]),
+       st.booleans())
+def test_garbage_bucket_decode_safe_property(seed, value_bits, adaptive):
+    """Same contract through the batched bucket decode with verdicts."""
+    check_garbage_bucket_decode_safe(seed, value_bits, adaptive)
+
+
 @given(st.integers(0, 2**31 - 1),
        st.sampled_from(["ring", "torus", "exp"]),
        st.sampled_from([4, 8, 16]))

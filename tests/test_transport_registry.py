@@ -13,12 +13,14 @@ from repro.comm.transport import (get_transport, register_transport,
 
 
 def test_registry_names_complete():
-    assert transport_names() == ("bucketed", "gossip", "overlap", "perleaf")
+    assert transport_names() == ("bucketed", "faulty", "gossip", "overlap",
+                                 "perleaf")
 
 
 def test_registry_flags():
     assert not get_transport("bucketed").stateful
     assert not get_transport("perleaf").stateful
+    assert get_transport("faulty").stateful
     assert get_transport("gossip").stateful
     assert get_transport("overlap").stateful
     for name in transport_names():
@@ -30,7 +32,8 @@ def test_registry_flags():
 def test_unknown_transport_message_lists_registered():
     msg = unknown_transport_message("nope")
     assert msg == ("unknown transport 'nope' "
-                   "(want 'bucketed' | 'gossip' | 'overlap' | 'perleaf')")
+                   "(want 'bucketed' | 'faulty' | 'gossip' | 'overlap' "
+                   "| 'perleaf')")
     with pytest.raises(ValueError, match="'bucketed' | 'gossip'"):
         get_transport("nope")
     with pytest.raises(ValueError, match="unknown transport"):

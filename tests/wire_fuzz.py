@@ -1,0 +1,130 @@
+"""Hostile-wire fuzz bodies (DESIGN.md §16).
+
+Shared by two tiers: the hypothesis property tests in
+``tests/test_property.py`` draw arbitrary geometry/seed combinations, and
+the fixed-seed deterministic sweep in ``tests/test_faults.py`` drives the
+same bodies without hypothesis (the container image may not ship the dev
+extra).  The invariants under arbitrary uint32 garbage rows:
+
+* decode never raises and never indexes out of bounds (a live value past
+  the verdict layer always sits at an index in ``[0, d)``),
+* nothing non-finite survives the verdict+quarantine layer,
+* the verdict is always a well-defined (R,) bool,
+* honest encodes are verdict-True everywhere and quarantine is a
+  bit-exact no-op on them (the faults-off guarantee).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import wire as wire_fmt
+from repro.core import Compressor
+from repro.core.compression import block_extract_sparse
+
+_R = 4                                  # garbage rows per example
+
+
+def _spec(d: int, block: int, value_bits: int, adaptive: bool,
+          method: str):
+    comp = Compressor(gamma=0.05, max_gamma=0.05 if adaptive else 0.0,
+                      method=method, block=block, min_compress_size=1,
+                      value_bits=value_bits)
+    return comp, wire_fmt.WireSpec.for_row(comp, d)
+
+
+def _assert_decode_safe(payload, spec):
+    """The §16 contract for ONE decoded payload, whatever its bits."""
+    vals, idx = wire_fmt.decode_rows(payload, spec)
+    verdict = wire_fmt.row_verdict(payload, spec, vals, idx)
+    assert verdict.shape == (payload.shape[0],)
+    assert verdict.dtype == jnp.bool_
+    qv, qi = wire_fmt.quarantine_rows(vals, idx, verdict)
+    v_np, i_np = np.asarray(qv), np.asarray(qi)
+    # nothing non-finite past the verdict layer
+    assert np.all(np.isfinite(v_np))
+    # every LIVE value addresses a real coordinate (dead padding may keep
+    # harmless clamped/zero indices; the scatter drops or zero-adds them)
+    live = v_np != 0.0
+    assert np.all((i_np[live] >= 0) & (i_np[live] < spec.d))
+    # quarantined rows aggregate to exactly nothing
+    bad = ~np.asarray(verdict)
+    assert np.all(v_np[bad] == 0.0) and np.all(i_np[bad] == 0)
+    # and the scatter-add the aggregators run stays finite end to end
+    dense = jnp.zeros((spec.d,), jnp.float32).at[qi.reshape(-1)].add(
+        qv.reshape(-1), mode="drop")
+    assert np.all(np.isfinite(np.asarray(dense)))
+    return vals, idx, verdict
+
+
+def check_garbage_rows_decode_safe(seed: int, d: int, block: int,
+                                   value_bits: int, adaptive: bool,
+                                   method: str = "block_topk"):
+    """Arbitrary uint32 rows — headers, counts, scales, fields all
+    garbage — through decode + verdict + quarantine."""
+    comp, spec = _spec(d, block, value_bits, adaptive, method)
+    if spec is None:
+        return                            # row ships dense: no payload
+    rng = np.random.default_rng(seed)
+    payload = jnp.asarray(rng.integers(0, 1 << 32, (_R, spec.row_words),
+                                       dtype=np.uint32))
+    _assert_decode_safe(payload, spec)
+
+
+def check_honest_rows_verdict_clean(seed: int, d: int, block: int,
+                                    value_bits: int, adaptive: bool,
+                                    method: str = "block_topk"):
+    """An honest encode is verdict-True on every row and quarantine
+    passes it through bit-untouched (faults-off bit-exactness)."""
+    comp, spec = _spec(d, block, value_bits, adaptive, method)
+    if spec is None:
+        return
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((_R, d)).astype(np.float32))
+    if method == "block_topk":
+        vals, idx = block_extract_sparse(x, comp)
+    else:
+        from repro.core.dcsgd import _per_layer_topk
+        vals, idx = _per_layer_topk(x, comp.k_for(d))
+    counts = None
+    if spec.ragged:
+        counts = jnp.asarray(rng.integers(1, spec.full_count + 1, _R),
+                             jnp.int32)
+    payload = wire_fmt.encode_rows(vals, idx, spec, counts=counts)
+    dvals, didx, verdict = _assert_decode_safe(payload, spec)
+    assert np.all(np.asarray(verdict))
+    qv, qi = wire_fmt.quarantine_rows(dvals, didx, verdict)
+    np.testing.assert_array_equal(np.asarray(qv), np.asarray(dvals))
+    np.testing.assert_array_equal(np.asarray(qi), np.asarray(didx))
+
+
+def check_garbage_bucket_decode_safe(seed: int, value_bits: int,
+                                     adaptive: bool):
+    """Arbitrary garbage through the batched bucket decode: per-lane
+    verdicts are well-formed and invalid rows come back quarantined."""
+    from repro.comm.bucket import build_bucket_plan, decode_buckets
+
+    rng = np.random.default_rng(seed)
+    comp = Compressor(gamma=0.05, max_gamma=0.05 if adaptive else 0.0,
+                      method="block_topk", block=256, min_compress_size=64,
+                      value_bits=value_bits)
+    shapes = [(2, int(rng.integers(64, 2048))), (int(rng.integers(64, 2048)),)]
+    plan = build_bucket_plan(shapes, [True, False], comp)
+    if not plan.total_words:
+        return
+    W = 2
+    gathered = jnp.asarray(rng.integers(0, 1 << 32, (W, plan.total_words),
+                                        dtype=np.uint32))
+    decoded, verdicts = decode_buckets(plan, gathered, with_verdicts=True)
+    for ln in plan.leaves:
+        if ln.dense:
+            assert decoded[ln.index] is None
+            continue
+        vals, idx = decoded[ln.index]
+        v = verdicts[ln.index]
+        assert v.shape == (W, ln.L) and v.dtype == jnp.bool_
+        v_np, i_np = np.asarray(vals), np.asarray(idx)
+        assert np.all(np.isfinite(v_np))
+        live = v_np != 0.0
+        d = ln.spec.d
+        assert np.all((i_np[live] >= 0) & (i_np[live] < d))
+        bad = ~np.asarray(v)
+        assert np.all(v_np[bad] == 0.0) and np.all(i_np[bad] == 0)
